@@ -1,0 +1,129 @@
+"""Paper Figs. 11/12: cluster-scale GPU counts vs arrival rate.
+
+Default-batching mode (Fig. 11) compares, at each arrival rate, the minimum
+GPU count for the SLO-attainment target under:
+  aladdin           — best-fit + constraints + re-balancing, optimal worker
+  jsq_opt           — JSQ placement on optimal workers (ablation)
+  po2_opt           — power-of-two on optimal workers
+  vanilla_vllm      — JSQ with the DEFAULT worker config (all 4 accelerators
+                      of a host in one worker), the paper's main baseline
+
+Split-phase mode (Fig. 12) simulates the decode pool only (prefill arrival =
+pre-computed contexts), aladdin vs jsq vs po2.
+
+GPU cost = workers x accelerators-per-worker. Latency models per worker
+config come from Eqs. 5-6 (core.worker_config)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.perf_model import PerfModel, PrefillModel
+from repro.core.slo import PAPER_SLOS
+from repro.core.worker_config import A100_80G, optimal_worker_config, \
+    _decode_model_for
+from repro.serving.length_predictor import LengthPredictor
+from repro.serving.simulator import SimConfig, min_workers_for_slo
+from repro.serving.workload import WorkloadConfig, generate_trace, \
+    sample_lengths
+
+MODEL = "llama2-70b"
+ATTAIN = 0.98
+
+
+def _perf_for(arch, n_g: int) -> PerfModel:
+    dm = _decode_model_for(arch, A100_80G, n_g)
+    # prefill: compute-bound at ~0.5 efficiency over the TP group
+    k1 = 2.0 * arch.param_count() / (n_g * A100_80G.peak_flops * 0.5)
+    return PerfModel(prefill=PrefillModel(k1=k1, c1=0.01), decode=dm)
+
+
+def _kv_cap_tokens(arch, n_g: int) -> float:
+    M = n_g * A100_80G.mem_bytes - 2.0 * arch.param_count()
+    return M / arch.kv_bytes_per_token()
+
+
+def _predictor(seed=7) -> LengthPredictor:
+    cfg = WorkloadConfig(seed=seed, in_mu=5.0, in_sigma=1.1, out_mu=5.3,
+                         out_sigma=0.9)
+    li, lo = sample_lengths(cfg, 4000)
+    p = LengthPredictor()
+    p.fit(li, lo)
+    return p
+
+
+def _trace_fn(rate, seed=3, duration=30.0):
+    cfg = WorkloadConfig(mean_rate=rate, duration=duration, seed=seed,
+                         in_mu=5.0, in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+    return lambda: generate_trace(cfg)
+
+
+def run(verbose: bool = True, rates=(2.0, 5.0, 10.0),
+        duration: float = 25.0) -> List[Dict]:
+    arch = get_arch(MODEL)
+    slo = PAPER_SLOS[MODEL]
+    opt = optimal_worker_config(arch, A100_80G, slo, mean_context=450.0)
+    n_opt = opt.n_accelerators
+    rows: List[Dict] = []
+
+    perf_opt = _perf_for(arch, n_opt)
+    perf_van = _perf_for(arch, 4)
+    kv_opt = _kv_cap_tokens(arch, n_opt)
+    kv_van = _kv_cap_tokens(arch, 4)
+
+    for rate in rates:
+        gpus: Dict[str, float] = {}
+        for label, policy, perf, kv, gpw in (
+                ("aladdin", "aladdin", perf_opt, kv_opt, n_opt),
+                ("jsq_opt", "jsq", perf_opt, kv_opt, n_opt),
+                ("po2_opt", "po2", perf_opt, kv_opt, n_opt),
+                ("vanilla_vllm", "jsq", perf_van, kv_van, 4)):
+            try:
+                n = min_workers_for_slo(
+                    _trace_fn(rate, duration=duration), perf, slo, kv,
+                    SimConfig(policy=policy), ATTAIN, hi=64,
+                    predictor=_predictor())
+            except RuntimeError:
+                n = -1
+            gpus[label] = n * gpw if n > 0 else float("nan")
+        sav_van = 1 - gpus["aladdin"] / gpus["vanilla_vllm"] \
+            if gpus["vanilla_vllm"] else 0.0
+        sav_jsq = 1 - gpus["aladdin"] / gpus["jsq_opt"] \
+            if gpus["jsq_opt"] else 0.0
+        rows.append({
+            "name": f"fig11_rate{rate:g}",
+            "us_per_call": 0.0,
+            "derived": (f"gpus_aladdin={gpus['aladdin']:g};"
+                        f"jsq={gpus['jsq_opt']:g};po2={gpus['po2_opt']:g};"
+                        f"vllm={gpus['vanilla_vllm']:g};"
+                        f"save_vs_vllm={sav_van:.2f};"
+                        f"save_vs_jsq={sav_jsq:.2f}")})
+
+    # Fig 12: split-phase decode pool
+    for rate in rates[:2]:
+        gpus = {}
+        for label, policy in (("aladdin", "aladdin"), ("jsq", "jsq"),
+                              ("po2", "po2")):
+            try:
+                n = min_workers_for_slo(
+                    _trace_fn(rate, duration=duration), perf_opt, slo,
+                    kv_opt, SimConfig(policy=policy, split_phase=True),
+                    ATTAIN, hi=64, predictor=_predictor())
+            except RuntimeError:
+                n = -1
+            gpus[label] = n * n_opt if n > 0 else float("nan")
+        rows.append({
+            "name": f"fig12_split_rate{rate:g}",
+            "us_per_call": 0.0,
+            "derived": (f"gpus_aladdin={gpus['aladdin']:g};"
+                        f"jsq={gpus['jsq']:g};po2={gpus['po2']:g}")})
+    if verbose:
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

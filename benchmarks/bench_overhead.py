@@ -1,0 +1,81 @@
+"""Paper Fig. 13 + Appendix A: scheduling overhead.
+
+Measures best-fit placement wall time per heartbeat batch vs arrival rate,
+fits the O(n log n) model, and shows the grouped (distributed) scheduler
+cutting per-group latency at equal total throughput."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.distributed_scheduler import (GroupedScheduler,
+                                              SchedLatencyModel,
+                                              choose_group_count)
+from repro.core.perf_model import (DecodeModel, KVModel, PerfModel,
+                                   PrefillModel)
+from repro.core.placement import PlacementConfig, WorkerState, best_fit_place
+from repro.core.request import Request
+from repro.core.slo import SLO
+from repro.serving.workload import WorkloadConfig, sample_lengths
+
+
+def _mk_workers(n, kv=1e9):
+    perf = PerfModel(kv=KVModel(1.0, 0.0), prefill=PrefillModel(1e-4, 1e-3),
+                     decode=DecodeModel(1e-6, 1e-4, 5e-3))
+    cfg = PlacementConfig(kv_capacity=kv, max_batch=64)
+    return [WorkerState(i, cfg, perf, SLO(10.0, 1.0)) for i in range(n)]
+
+
+def _sched_time(n_reqs: int, n_workers: int, seed=0) -> float:
+    rng = np.random.default_rng(seed)
+    li, lo = sample_lengths(WorkloadConfig(seed=seed), n_reqs, rng)
+    reqs = [Request(l_in=int(a), l_pred=int(b)) for a, b in zip(li, lo)]
+    workers = _mk_workers(n_workers)
+    t0 = time.perf_counter()
+    for r in reqs:
+        best_fit_place(workers, r, allow_new=False)
+    return time.perf_counter() - t0
+
+
+def run(verbose: bool = True) -> List[Dict]:
+    rows = []
+    ns, ts = [], []
+    for n in (8, 16, 32, 64, 128, 256):
+        dt = min(_sched_time(n, max(n // 8, 2), s) for s in range(3))
+        ns.append(n)
+        ts.append(dt)
+        rows.append({"name": f"fig13_centralized_n{n}",
+                     "us_per_call": dt * 1e6 / n,
+                     "derived": f"batch_total_ms={dt*1e3:.2f}"})
+    lat = SchedLatencyModel.fit(ns, ts)
+    rows.append({"name": "fig13_nlogn_fit", "us_per_call": 0.0,
+                 "derived": f"a={lat.a:.2e};b={lat.b:.2e}"})
+
+    # Appendix A: grouped scheduling at rate ~ n/heartbeat
+    n = 256
+    for e in (0.1, 0.2):
+        g = choose_group_count(rate=n / 0.25, n_workers=64, error_budget=e,
+                               t_s=0.05, heartbeat=0.25, lat=lat)
+        # measure per-group latency
+        rng = np.random.default_rng(0)
+        li, lo = sample_lengths(WorkloadConfig(seed=0), n, rng)
+        reqs = [Request(l_in=int(a), l_pred=int(b)) for a, b in zip(li, lo)]
+        sched = GroupedScheduler(_mk_workers(64), g)
+        t0 = time.perf_counter()
+        for r in reqs:
+            sched.place(r)
+        dt = time.perf_counter() - t0
+        rows.append({"name": f"appA_grouped_e{e:g}",
+                     "us_per_call": dt * 1e6 / n,
+                     "derived": f"groups={g};per_group_ms="
+                                f"{dt*1e3/max(g,1):.3f}"})
+    if verbose:
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV. Roofline terms come from the
+dry-run artifacts (benchmarks/roofline.py; see EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_cluster_sim, bench_e2e, bench_overhead,
+                            bench_perf_model, bench_worker_config)
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (bench_perf_model, bench_worker_config, bench_overhead,
+                bench_e2e, bench_cluster_sim):
+        try:
+            mod.run(verbose=True)
+        except Exception:          # noqa: BLE001
+            failures += 1
+            print(f"{mod.__name__},0,FAILED", file=sys.stderr)
+            traceback.print_exc()
+    # roofline summary (if dry-run artifacts exist)
+    try:
+        from benchmarks import roofline
+        rows = roofline.load_all()
+        if rows:
+            roofline.write_reports(rows)
+            worst = min(rows, key=lambda r: r["roofline_fraction"])
+            print(f"roofline_cells,{0.0},n={len(rows)};worst="
+                  f"{worst['arch']}/{worst['shape']}@"
+                  f"{worst['roofline_fraction']:.3f}")
+    except Exception:               # noqa: BLE001
+        traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Cluster-scale simulation (paper §6.4): minimum GPU count vs arrival rate
+for Aladdin vs JSQ vs power-of-two vs vanilla-vLLM worker config, plus the
+Eq. 7 autoscaler tracking a diurnal demand curve.
+
+  PYTHONPATH=src:. python examples/cluster_sim.py
+"""
+import numpy as np
+
+from benchmarks.bench_cluster_sim import (_kv_cap_tokens, _perf_for,
+                                          _predictor, _trace_fn, MODEL)
+from repro.configs import get_arch
+from repro.core.scaling import Autoscaler
+from repro.core.slo import PAPER_SLOS
+from repro.core.worker_config import A100_80G, optimal_worker_config
+from repro.serving.simulator import SimConfig, min_workers_for_slo, simulate
+
+
+def main() -> None:
+    arch = get_arch(MODEL)
+    slo = PAPER_SLOS[MODEL]
+    opt = optimal_worker_config(arch, A100_80G, slo, mean_context=450.0)
+    print(f"optimal worker config ({MODEL}): {opt.n_accelerators} GPUs "
+          f"({opt.bound}-bound, {opt.per_gpu_throughput:.0f} tok/s/GPU)")
+
+    perf = _perf_for(arch, opt.n_accelerators)
+    kv = _kv_cap_tokens(arch, opt.n_accelerators)
+    print("\nGPUs needed for 98% SLO attainment:")
+    print("rate  aladdin  jsq  po2")
+    for rate in (2.0, 5.0):
+        row = [rate]
+        for pol in ("aladdin", "jsq", "po2"):
+            try:
+                n = min_workers_for_slo(_trace_fn(rate, duration=20.0), perf,
+                                        slo, kv, SimConfig(policy=pol), 0.98,
+                                        hi=32, predictor=_predictor())
+                row.append(n * opt.n_accelerators)
+            except RuntimeError as e:
+                row.append(f"plateau({e})")
+        print("  ".join(str(x) for x in row))
+
+    # Eq. 7 autoscaler tracking a diurnal curve
+    print("\nEq. 7 autoscaler on a diurnal demand curve:")
+    sc = Autoscaler()
+    for hour in range(24):
+        rate = 6.0 + 4.0 * np.sin(hour / 24 * 2 * np.pi)
+        res = simulate(_trace_fn(rate, duration=10.0)(), perf, slo, kv,
+                       SimConfig(policy="aladdin"), n_workers=None,
+                       predictor=_predictor())
+        sc.observe(rate, res.n_workers_peak)
+        pred = sc.predict_workers(rate, res.n_workers_peak)
+        if hour % 4 == 0:
+            print(f"  h{hour:02d} rate={rate:4.1f} needed="
+                  f"{res.n_workers_peak:2d} Eq7->{pred:2d} "
+                  f"change_point={sc.change_point()}")
+    print(f"fitted Eq.7: N_w = ceil({sc.k5:.2f} * r + {sc.c5:.2f})")
+
+
+if __name__ == "__main__":
+    main()

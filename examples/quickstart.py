@@ -1,0 +1,56 @@
+"""Quickstart: Aladdin serving a reduced Llama-2-family model on CPU.
+
+Shows the whole control loop on live engines: length prediction -> best-fit
+placement (Alg. 1) -> continuous batching -> perf-model refit from traces ->
+re-balancing. Runs in ~1 minute on a laptop.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core.request import Request
+from repro.core.slo import SLO
+from repro.models.model import LM
+from repro.serving.cluster import ClusterConfig, ServingCluster
+from repro.serving.engine import EngineConfig
+
+
+def main() -> None:
+    arch = reduced(get_arch("llama2-7b"), n_layers=2, d_model=64, vocab=256)
+    model = LM(arch)
+    params = model.init(jax.random.key(0))
+    cluster = ServingCluster(
+        arch, params, SLO(ttft=5.0, atgt=1.0),
+        engine_cfg=EngineConfig(max_batch=4, page_size=8, n_pages=128,
+                                max_pages_per_seq=16),
+        cfg=ClusterConfig(policy="aladdin"), n_workers=2)
+
+    rng = np.random.default_rng(0)
+    print("submitting 8 requests...")
+    reqs = []
+    for i in range(8):
+        r = Request(l_in=int(rng.integers(8, 40)), l_pred=0,
+                    l_real=int(rng.integers(4, 12)),
+                    arrival=time.perf_counter())
+        r.tokens = [int(x) for x in rng.integers(2, arch.vocab, r.l_in)]
+        cluster.submit(r)
+        reqs.append(r)
+
+    cluster.run_until_drained()
+    print(f"finished {len(cluster.finished)}/8, "
+          f"SLO attainment {cluster.attainment():.2f}")
+    for r in cluster.finished[:3]:
+        print(f"  req {r.id}: l_in={r.l_in} generated={r.l_out} "
+              f"ttft={r.ttft():.3f}s atgt={r.atgt() or 0:.3f}s/tok "
+              f"worker={r.worker}")
+    d = cluster.perf.decode
+    print(f"fitted decode model: k2={d.k2:.2e} c2={d.c2:.2e} c3={d.c3:.2e}")
+    print(f"fit max rel err: {cluster.perf.max_rel_err}")
+
+
+if __name__ == "__main__":
+    main()

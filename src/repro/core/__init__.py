@@ -1,0 +1,28 @@
+"""Aladdin's core: SLO-aware co-adaptive placement and scaling.
+
+  perf_model     — Eqs. 1-4 (KV / prefill / decode latency models + fitting)
+  worker_config  — Eqs. 5-6 (optimal TP degree per worker)
+  placement      — §4.2 MIP constraints + Algorithm 1 best-fit (+ JSQ/Po2
+                   baselines)
+  rebalance      — §4.3 Algorithm 2 (prediction-error re-balancing)
+  scaling        — §5.2 Eq. 7 autoscaler + change-point detection
+  distributed_scheduler — Appendix A grouped scheduling
+  mip            — exact reference solver (tests)
+"""
+from repro.core.perf_model import (DecodeModel, KVModel, PerfModel,           # noqa: F401
+                                   PrefillModel, TraceBuffer,
+                                   analytic_perf_model)
+from repro.core.placement import (PlacementConfig, WorkerState,               # noqa: F401
+                                  best_fit_place, jsq_place,
+                                  power_of_two_place)
+from repro.core.rebalance import ErrorTracker, rebalance                      # noqa: F401
+from repro.core.request import ReqState, Request                              # noqa: F401
+from repro.core.scaling import Autoscaler, AutoscalerConfig                   # noqa: F401
+from repro.core.slo import PAPER_SLOS, SLO                                    # noqa: F401
+from repro.core.worker_config import (A100_80G, TPU_V5E, V100_32G,            # noqa: F401
+                                      HardwareSpec, WorkerConfig,
+                                      optimal_worker_config)
+from repro.core.distributed_scheduler import (GroupedScheduler,               # noqa: F401
+                                              SchedLatencyModel,
+                                              choose_group_count)
+from repro.core.mip import exact_min_workers                                  # noqa: F401

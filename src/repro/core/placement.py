@@ -1,0 +1,212 @@
+"""SLO-aware request placement (paper §4.2).
+
+The MIP's constraints, evaluated per worker:
+
+  (b) decode-latency budget:  Σ_j (l_in_j + γ·l_pred_j)  ≤  θ · C_max(b)
+      with C_max from Eq. 4 and b the post-placement batch size;
+  (c) TTFT budget:            t_pre(Σ new l_in)          ≤  T_pre;
+  (d) preemption budget:      t_pre(Σ new l_in)          ≤  θ · min_j slack_j,
+      slack_j = T_dec·l_out_j − t_dec_j (decode time the ongoing requests
+      have "banked" against the ATGT SLO);
+  (e) per-iteration KV:       peak over future iterations of Σ kv_j(·) ≤ M.
+
+Algorithm 1 (best-fit): rank workers by capacity_norm (L2 norm of batch size
+and weighted context) descending, place on the first feasible one, else open
+a new worker. ``exact_min_workers`` (core/mip.py) is the brute-force
+reference used in tests to certify near-optimality.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+from repro.core.perf_model import PerfModel
+from repro.core.request import Request
+from repro.core.slo import SLO
+
+
+@dataclasses.dataclass
+class PlacementConfig:
+    gamma: float = 0.5      # strictness knob γ in (b): weight on l_pred
+    theta: float = 0.9      # prediction-error head-room θ in (b)/(d)
+    kv_capacity: float = 0.0          # M, bytes per worker
+    max_batch: int = 512              # engine hard cap on batch slots
+    split_phase: bool = False         # decode-pool worker: no prefill runs
+                                      # here, so (c)/(d) do not apply
+
+
+class WorkerState:
+    """Scheduler-side view of one serving worker."""
+
+    def __init__(self, wid: int, cfg: PlacementConfig, perf: PerfModel,
+                 slo: SLO):
+        self.id = wid
+        self.cfg = cfg
+        self.perf = perf
+        self.slo = slo
+        self.ongoing: List[Request] = []    # decoding (or placed) requests
+        self.new_batch: List[Request] = []  # placed this heartbeat, not begun
+        self.alive = True
+        self.draining = False               # straggler mitigation
+
+    # ---- aggregate views ----------------------------------------------------
+    @property
+    def batch_size(self) -> int:
+        return len(self.ongoing) + len(self.new_batch)
+
+    def weighted_context(self, gamma: Optional[float] = None) -> float:
+        g = self.cfg.gamma if gamma is None else gamma
+        return sum(r.l_in + g * r.l_pred for r in self.ongoing + self.new_batch)
+
+    def capacity_norm(self) -> float:
+        """L2 norm of (batch size, weighted context) — the worker 'load' used
+        to rank bins in Algorithm 1 (normalized so both terms are O(1))."""
+        b = self.batch_size / max(self.cfg.max_batch, 1)
+        cmax = self.perf.decode.max_total_context(1, self.slo.atgt) or 1.0
+        c = self.weighted_context() / max(cmax, 1.0)
+        return math.hypot(b, c)
+
+    # ---- constraints ---------------------------------------------------------
+    def _constraint_b(self, reqs: Sequence[Request]) -> bool:
+        b = self.batch_size + len(reqs)
+        if b > self.cfg.max_batch:
+            return False
+        budget = self.perf.decode.max_total_context(b, self.slo.atgt)
+        w = self.weighted_context() + sum(
+            r.l_in + self.cfg.gamma * r.l_pred for r in reqs)
+        return w <= self.cfg.theta * budget
+
+    def _constraint_c(self, reqs: Sequence[Request]) -> bool:
+        total_new = sum(r.l_in for r in self.new_batch) + \
+            sum(r.l_in for r in reqs)
+        return self.perf.prefill(total_new) <= self.slo.ttft
+
+    def _constraint_d(self, reqs: Sequence[Request]) -> bool:
+        if not self.ongoing:
+            return True
+        slack = min(self.slo.atgt * max(r.l_out, 1) - r.t_decode_spent
+                    for r in self.ongoing)
+        total_new = sum(r.l_in for r in self.new_batch) + \
+            sum(r.l_in for r in reqs)
+        return self.perf.prefill(total_new) <= self.cfg.theta * max(slack, 0.0)
+
+    def kv_peak(self, extra: Sequence[Request] = ()) -> float:
+        """Constraint (e): peak KV demand over future iterations.
+
+        Each request j contributes kv(context_j + k) at future iteration k and
+        drops to zero after remaining_pred_j steps; the total is piecewise
+        monotone between finish events, so the peak is attained just before
+        some request finishes (or at k=0 when over-capacity already)."""
+        reqs = [r for r in self.ongoing + self.new_batch] + list(extra)
+        if not reqs:
+            return 0.0
+        kv = self.perf.kv
+        rems = sorted(set(max(r.remaining_pred, 1) for r in reqs))
+        peak = sum(float(kv(r.context)) for r in reqs)
+        for k in rems:
+            tot = sum(float(kv(r.context + min(k, r.remaining_pred) - 0))
+                      for r in reqs if r.remaining_pred >= k)
+            peak = max(peak, tot)
+        return peak
+
+    def _constraint_e(self, reqs: Sequence[Request]) -> bool:
+        # theta pads the *predicted* KV trajectory against underestimates
+        # (the w vectors in (e) are built from l_pred, so they carry the
+        # same prediction error theta exists to absorb).
+        return self.kv_peak(reqs) <= self.cfg.theta * self.cfg.kv_capacity
+
+    def kv_now(self, extra: Sequence[Request] = ()) -> float:
+        """Current KV usage (what a vLLM-style admission check sees)."""
+        kv = self.perf.kv
+        return sum(float(kv(r.context))
+                   for r in self.ongoing + self.new_batch) + \
+            sum(float(kv(r.l_in)) for r in extra)
+
+    def _admit_naive(self, reqs: Sequence[Request]) -> bool:
+        """Baseline admission: current KV + the new prompts fit, batch slot
+        free. No future-peak, no latency awareness."""
+        return (self.kv_now(reqs) <= self.cfg.kv_capacity
+                and self.batch_size + len(reqs) <= self.cfg.max_batch)
+
+    def feasible(self, reqs: Sequence[Request]) -> bool:
+        if not self.alive or self.draining:
+            return False
+        if self.cfg.split_phase:
+            return self._constraint_b(reqs) and self._constraint_e(reqs)
+        return (self._constraint_b(reqs) and self._constraint_c(reqs)
+                and self._constraint_d(reqs) and self._constraint_e(reqs))
+
+    # ---- mutation ------------------------------------------------------------
+    def place(self, r: Request) -> None:
+        r.worker = self.id
+        self.new_batch.append(r)
+
+    def unplace(self, r: Request) -> None:
+        self.new_batch.remove(r)
+        r.worker = None
+
+
+def best_fit_place(workers: List[WorkerState], req: Request,
+                   allow_new: bool = True,
+                   new_worker_factory=None) -> Optional[WorkerState]:
+    """Algorithm 1. Returns the worker the request was placed on (possibly a
+    newly opened one), or None if allow_new=False and nothing fits."""
+    ranked = sorted((w for w in workers if w.alive and not w.draining),
+                    key=lambda w: w.capacity_norm(), reverse=True)
+    for w in ranked:
+        if w.feasible([req]):
+            w.place(req)
+            return w
+    if allow_new and new_worker_factory is not None:
+        w = new_worker_factory()
+        workers.append(w)
+        w.place(req)
+        return w
+    return None
+
+
+def jsq_place(workers: List[WorkerState], req: Request, allow_new=True,
+              new_worker_factory=None) -> Optional[WorkerState]:
+    """Baseline: join-the-shortest-queue (by batch size), respecting only the
+    KV-capacity constraint (what vLLM-style admission does)."""
+    live = [w for w in workers if w.alive and not w.draining]
+    for w in sorted(live, key=lambda w: w.batch_size):
+        if w._admit_naive([req]):
+            w.place(req)
+            return w
+    if allow_new and new_worker_factory is not None:
+        w = new_worker_factory()
+        workers.append(w)
+        w.place(req)
+        return w
+    return None
+
+
+def power_of_two_place(workers: List[WorkerState], req: Request, rng,
+                       allow_new=True, new_worker_factory=None
+                       ) -> Optional[WorkerState]:
+    """Baseline: power-of-two-choices by predicted load [paper ref 10]."""
+    live = [w for w in workers if w.alive and not w.draining]
+    if len(live) >= 2:
+        i, j = rng.choice(len(live), size=2, replace=False)
+        cands = sorted((live[i], live[j]), key=lambda w: w.weighted_context())
+    else:
+        cands = live
+    for w in cands:
+        if w._admit_naive([req]):
+            w.place(req)
+            return w
+    # fall back to any feasible live worker before opening a new one
+    for w in sorted(live, key=lambda w: w.weighted_context()):
+        if w in cands:
+            continue
+        if w._admit_naive([req]):
+            w.place(req)
+            return w
+    if allow_new and new_worker_factory is not None:
+        w = new_worker_factory()
+        workers.append(w)
+        w.place(req)
+        return w
+    return None

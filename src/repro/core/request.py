@@ -1,0 +1,67 @@
+"""Request lifecycle shared by the scheduler, engine and simulator."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Optional
+
+_ids = itertools.count()
+
+
+class ReqState(str, enum.Enum):
+    QUEUED = "queued"          # arrived, not yet placed
+    PLACED = "placed"          # assigned to a worker, waiting for prefill
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+    FAILED = "failed"          # worker died; will be re-queued
+
+
+@dataclasses.dataclass
+class Request:
+    l_in: int                              # prompt length (known on arrival)
+    l_pred: int                            # predicted output length
+    l_real: int = 0                        # ground-truth output (sim/engine)
+    arrival: float = 0.0
+    id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    state: ReqState = ReqState.QUEUED
+    worker: Optional[int] = None
+    # progress
+    l_out: int = 0                         # tokens generated so far
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+    t_decode_spent: float = 0.0            # decode wall time so far
+    t_prefill_start: Optional[float] = None
+    repredicted: bool = False              # Alg. 2: re-predicted after overrun
+    tokens: Optional[object] = None        # actual token ids (engine only)
+
+    # ---- derived ------------------------------------------------------------
+    @property
+    def context(self) -> int:
+        """Current context length (prompt + generated)."""
+        return self.l_in + self.l_out
+
+    @property
+    def remaining_pred(self) -> int:
+        return max(self.l_pred - self.l_out, 0)
+
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival
+
+    def atgt(self) -> Optional[float]:
+        """Average token-generation time over the decode phase (§2.2)."""
+        if self.t_finish is None or self.l_real <= 1:
+            return None
+        return self.t_decode_spent / max(self.l_real - 1, 1)
+
+    def slo_ok(self, slo) -> bool:
+        t1, t2 = self.ttft(), self.atgt()
+        ok = True
+        if t1 is not None:
+            ok &= t1 <= slo.ttft
+        if t2 is not None:
+            ok &= t2 <= slo.atgt
+        return ok

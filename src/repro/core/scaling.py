@@ -1,0 +1,78 @@
+"""Worker-count autoscaling (paper §5.2) + change-point detection.
+
+Above an arrival-rate floor R the required worker count is linear in the
+arrival rate:  N_w = ceil(k5 * r_a + c5)  (Eq. 7), with (k5, c5) learned from
+(rate, workers-needed) history. Below R the length-distribution sample is too
+small (SEM = sigma/sqrt(n)) to trust the linear fit, so the scaler falls back
+to the most recent empirical requirement plus head-room.
+
+Demand change points are detected on the arrival-rate stream with a simple
+two-window mean-shift test; each cluster heartbeat with a change point (or a
+drifted prediction) triggers reconfiguration."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class AutoscalerConfig:
+    heartbeat: float = 10.0            # seconds between scaling decisions
+    min_workers: int = 1
+    max_workers: int = 4096
+    sem_target: float = 0.1            # SEM/sigma floor defining R
+    headroom: float = 1.10             # spare capacity when below R
+    change_window: int = 8             # heartbeats per mean-shift window
+    change_z: float = 3.0              # z-score to declare a change point
+
+
+class Autoscaler:
+    def __init__(self, cfg: AutoscalerConfig = AutoscalerConfig()):
+        self.cfg = cfg
+        self.history: List[Tuple[float, int]] = []   # (rate, workers needed)
+        self.rates: List[float] = []
+        self.k5: Optional[float] = None
+        self.c5: Optional[float] = None
+
+    # ---- Eq. 7 fit -----------------------------------------------------------
+    def observe(self, rate: float, workers_needed: int) -> None:
+        self.history.append((rate, workers_needed))
+        self.rates.append(rate)
+        if len(self.history) > 4096:
+            del self.history[:2048]
+        if len(self.history) >= 4:
+            a = np.asarray(self.history, np.float64)
+            A = np.stack([a[:, 0], np.ones(len(a))], axis=1)
+            (k5, c5), *_ = np.linalg.lstsq(A, a[:, 1], rcond=None)
+            self.k5, self.c5 = float(k5), float(c5)
+
+    def rate_floor(self, sigma_tokens: float, mean_interval: float) -> float:
+        """R: smallest rate whose per-heartbeat sample keeps SEM below
+        sem_target * sigma (n = r * heartbeat)."""
+        n_min = 1.0 / (self.cfg.sem_target ** 2)
+        return n_min / max(self.cfg.heartbeat, 1e-9)
+
+    def predict_workers(self, rate: float,
+                        last_needed: Optional[int] = None) -> int:
+        cfg = self.cfg
+        if self.k5 is not None and rate > self.rate_floor(0.0, 0.0):
+            n = math.ceil(self.k5 * rate + self.c5)
+        elif last_needed is not None:
+            n = math.ceil(last_needed * cfg.headroom)
+        else:
+            n = cfg.min_workers
+        return int(min(max(n, cfg.min_workers), cfg.max_workers))
+
+    # ---- change-point detection -----------------------------------------------
+    def change_point(self) -> bool:
+        w = self.cfg.change_window
+        if len(self.rates) < 2 * w:
+            return False
+        a = np.asarray(self.rates[-2 * w:-w], np.float64)
+        b = np.asarray(self.rates[-w:], np.float64)
+        pooled = math.sqrt((a.var() + b.var()) / 2 + 1e-12)
+        z = abs(b.mean() - a.mean()) / (pooled / math.sqrt(w) + 1e-12)
+        return z > self.cfg.change_z

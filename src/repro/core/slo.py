@@ -1,0 +1,28 @@
+"""Service-level objectives (paper §2.2).
+
+TTFT  — time-to-first-token deadline for the prefill stage (constant per
+        deployment; the paper sets it near the full-context prefill latency).
+ATGT  — average token-generation time: decode_time / (l_out - 1) must stay
+        below the target (the paper's alternative to over-strict TBT).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    ttft: float           # seconds
+    atgt: float           # seconds per generated token
+    attain_target: float = 1.0   # fraction of requests that must meet both
+
+    def scaled(self, f: float) -> "SLO":
+        return SLO(self.ttft * f, self.atgt * f, self.attain_target)
+
+
+# The paper's Table 2 (A100 testbed), in seconds.
+PAPER_SLOS = {
+    "llama2-70b": SLO(ttft=1.6, atgt=0.075),
+    "llama2-13b": SLO(ttft=0.6, atgt=0.030),
+    "llama2-7b": SLO(ttft=0.4, atgt=0.015),
+}

@@ -1,0 +1,263 @@
+"""HLO text analysis: collective-byte accounting with while-loop trip-count
+correction (cost_analysis does not expose collective traffic; scan bodies
+appear once in the HLO but execute trip-count times).
+
+Parses ``compiled.as_text()``:
+  1. split the module into named computations;
+  2. find every collective op (all-reduce / all-gather / reduce-scatter /
+     all-to-all / collective-permute, sync or async-start) and the byte size
+     of its result shape(s);
+  3. build the call graph; computations reached through a ``while`` op have
+     their collective bytes multiplied by the loop trip count (from the
+     canonical scan condition `compare(iter, C), direction=LT`).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(.*?)\s*(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DOT_RE = re.compile(
+    r"=\s*\w+\[([\d,]*)\][^=]*?\bdot\(.*?lhs_contracting_dims={([\d,]*)}")
+_DOT_LHS_RE = re.compile(r"dot\(\s*%?[\w\.\-]+\s*,")
+_CONV_RE = re.compile(r"=\s*\w+\[([\d,]*)\][^=]*?\bconvolution\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes over every shape in the string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", s)
+            if m:
+                return m.group(1)
+    return None
+
+
+def _trip_count(while_line: str, comps: Dict[str, List[str]]) -> int:
+    m = re.search(r'"known_trip_count":\s*{"n":\s*"?(\d+)"?}', while_line)
+    if m:
+        return int(m.group(1))
+    m = re.search(r"trip_count=(\d+)", while_line)
+    if m:
+        return int(m.group(1))
+    m = re.search(r"condition=%?([\w\.\-]+)", while_line)
+    if m and m.group(1) in comps:
+        consts = []
+        for line in comps[m.group(1)]:
+            for mc in re.finditer(r"constant\((\d+)\)", line):
+                consts.append(int(mc.group(1)))
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _dot_flops(line: str) -> float:
+    """2 * prod(result dims) * prod(contracted dims) for a dot; the
+    contracted sizes are read from the lhs operand shape named in the line
+    (operand shapes are embedded in scheduled HLO as %name = shape earlier,
+    so fall back to result*contract heuristics via the lhs shape literal if
+    present on the line)."""
+    m = re.search(r"=\s*\w+\[([\d,]*)\]\S*\s+dot\(", line)
+    if not m:
+        return 0.0
+    res_dims = [int(d) for d in m.group(1).split(",") if d]
+    out = 1.0
+    for d in res_dims:
+        out *= d
+    # contracted size: find lhs shape within the line (operands usually carry
+    # inline shapes in verbose HLO; in scheduled HLO they don't, so use the
+    # contracting dim sizes from metadata if present)
+    mc = re.search(r"lhs_contracting_dims={([\d,]*)}", line)
+    lhs_shape = re.search(r"dot\(\s*%?[\w\.\-]+\s*=?\s*\w*\[([\d,]*)\]", line)
+    contract = 0.0
+    if mc and lhs_shape:
+        dims = [int(d) for d in lhs_shape.group(1).split(",") if d]
+        idx = [int(i) for i in mc.group(1).split(",") if i]
+        contract = 1.0
+        for i in idx:
+            if i < len(dims):
+                contract *= dims[i]
+    return 2.0 * out * max(contract, 1.0)
+
+
+def analyze_hlo(hlo: str, operand_shapes: Optional[Dict[str, str]] = None
+                ) -> Dict:
+    comps = _split_computations(hlo)
+    # operand shape table: %name = type[...] anywhere in the module
+    shape_of: Dict[str, str] = {}
+    for mm in re.finditer(r"%([\w\.\-]+)\s*=\s*(\([^=]*?\)|\w+\[[\d,]*\])",
+                          hlo):
+        shape_of[mm.group(1)] = mm.group(2)
+    coll_by_comp: Dict[str, Dict[str, float]] = {}
+    count_by_comp: Dict[str, int] = {}
+    flops_by_comp: Dict[str, float] = {}
+    bytes_by_comp: Dict[str, float] = {}
+    _free_ops = ("parameter", "constant", "get-tuple-element", "tuple",
+                 "bitcast", "after-all", "partition-id", "replica-id",
+                 "iota")
+    # ops whose operands are indexed, not streamed: count result side only
+    _result_only = ("dynamic-slice", "gather", "dynamic-update-slice",
+                    "scatter", "while", "conditional", "call")
+    for name, lines in comps.items():
+        d: Dict[str, float] = {}
+        c = 0
+        fl = 0.0
+        byt = 0.0
+        for line in lines:
+            # post-fusion HBM traffic: result + operand bytes per instruction
+            im = re.match(r"(?:ROOT\s+)?%[\w\.\-]+\s*=\s*"
+                          r"(\([^=]*?\)|\w+\[[\d,]*\]\S*)\s+([\w\-]+)\(",
+                          line)
+            if im and im.group(2) not in _free_ops:
+                op_bytes = shape_bytes(im.group(1))
+                if im.group(2) not in _result_only:
+                    args = line.split("(", 1)[1].split(")", 1)[0]
+                    for om in re.finditer(r"%([\w\.\-]+)", args):
+                        op_bytes += shape_bytes(shape_of.get(om.group(1), ""))
+                elif im.group(2) == "dynamic-update-slice":
+                    # in-place: traffic ~= 2x the update operand
+                    ops_ = re.findall(r"%([\w\.\-]+)",
+                                      line.split("(", 1)[1])
+                    if len(ops_) >= 2:
+                        op_bytes = 2 * shape_bytes(shape_of.get(ops_[1], ""))
+                byt += op_bytes
+            m = COLLECTIVE_RE.search(line)
+            if m:
+                op = m.group(2)
+                b = shape_bytes(m.group(1))
+                if op == "all-reduce":
+                    b *= 2.0            # ring: reduce-scatter + all-gather
+                elif op == "reduce-scatter":
+                    # traffic ~= input size; result is the 1/n shard
+                    om = re.search(r"reduce-scatter\(\s*%([\w\.\-]+)", line)
+                    if om:
+                        b = shape_bytes(shape_of.get(om.group(1), "")) or b
+                d[op] = d.get(op, 0.0) + b
+                c += 1
+            dm = re.search(r"=\s*\w+\[([\d,]*)\]\S*\s+dot\(\s*%([\w\.\-]+)",
+                           line)
+            if dm:
+                res_dims = [int(x) for x in dm.group(1).split(",") if x]
+                out = 1.0
+                for x in res_dims:
+                    out *= x
+                mc = re.search(r"lhs_contracting_dims={([\d,]*)}", line)
+                contract = 1.0
+                lhs = shape_of.get(dm.group(2), "")
+                ls = _SHAPE_RE.search(lhs)
+                if mc and ls:
+                    dims = [int(x) for x in ls.group(2).split(",") if x]
+                    for i in [int(i) for i in mc.group(1).split(",") if i]:
+                        if i < len(dims):
+                            contract *= dims[i]
+                fl += 2.0 * out * contract
+            cm = _CONV_RE.search(line)
+            if cm:
+                res_dims = [int(x) for x in cm.group(1).split(",") if x]
+                out = 1.0
+                for x in res_dims:
+                    out *= x
+                km = re.search(r"window={size=([\dx]+)", line)
+                ksz = 1.0
+                if km:
+                    for x in km.group(1).split("x"):
+                        ksz *= int(x)
+                fl += 2.0 * out * ksz
+        coll_by_comp[name] = d
+        count_by_comp[name] = c
+        flops_by_comp[name] = fl
+        bytes_by_comp[name] = byt
+
+    entry = _entry_name(hlo)
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+
+    def visit(name: str, m: float, depth: int = 0) -> None:
+        if name not in comps or depth > 16:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for line in comps[name]:
+            if re.search(r"=\s*\S.*\s+while\(", line):
+                tc = _trip_count(line, comps)
+                for role in ("body", "condition"):
+                    rm = re.search(role + r"=%?([\w\.\-]+)", line)
+                    if rm:
+                        visit(rm.group(1), m * (tc if role == "body" else 1),
+                              depth + 1)
+                continue
+            for cm in re.finditer(
+                    r"(?:to_apply|calls)=%?([\w\.\-]+)", line):
+                visit(cm.group(1), m, depth + 1)
+            bm = re.search(r"branch_computations={([^}]*)}", line)
+            if bm:
+                for callee in bm.group(1).split(","):
+                    visit(callee.strip().lstrip("%"), m, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+    total: Dict[str, float] = {}
+    n_ops = 0.0
+    dot_flops = 0.0
+    hbm_bytes = 0.0
+    # fused computations are bodies of fusion ops; their internals are VMEM,
+    # not HBM traffic — exclude them from the byte accounting (the fusion op
+    # itself, in its caller, carries the operand/result traffic).
+    for name, d in coll_by_comp.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0 and (d or flops_by_comp[name]):
+            m = 1.0          # conservatively count unreached computations once
+        n_ops += count_by_comp[name] * m
+        dot_flops += flops_by_comp[name] * m
+        if not name.startswith(("fused_computation", "wrapped_", "region_")):
+            hbm_bytes += bytes_by_comp[name] * m
+        for k, v in d.items():
+            total[k] = total.get(k, 0.0) + v * m
+    return {"collectives": {k: float(v) for k, v in total.items()},
+            "total_collective_bytes": float(sum(total.values())),
+            "collective_op_executions": float(n_ops),
+            "dot_flops": float(dot_flops),
+            "hbm_bytes": float(hbm_bytes),
+            "computations": len(comps)}

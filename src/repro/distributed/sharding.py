@@ -1,0 +1,208 @@
+"""Logical-axis sharding policy.
+
+Models annotate activations/params with *logical* axis names
+("batch", "seq_q", "heads", "d_ff", ...). A ``Policy`` maps logical names to
+mesh axes; changing the mapping (one dict) re-shards the whole model — this is
+the lever the §Perf hillclimbing turns.
+
+Default mappings per (arch, shape) are chosen by ``make_policy``:
+
+  * train/prefill attention:  "heads" -> model  if n_heads % model_size == 0
+                              else sequence-parallel ("seq_q" -> model)
+  * decode:                   KV cache sequence-sharded ("kv_seq" -> model,
+                              + "data" too when batch == 1), which gives
+                              flash-decoding combines via GSPMD partial
+                              softmax reductions — no head-divisibility
+                              constraint, and the 500k cache fits.
+  * params:                   "tp": TP dims over model, replicated over data
+                              "fsdp": + largest non-TP dim over data
+  * MoE:                      "experts" -> model (expert parallelism)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisMap = dict[str, Tuple[str, ...]]
+
+
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+@dataclasses.dataclass
+class Policy:
+    mesh: Optional[Mesh] = None
+    rules: AxisMap = dataclasses.field(default_factory=dict)
+    params_mode: str = "tp"          # "tp" | "fsdp"
+    # informational knobs read by model code
+    attn_mode: str = "heads"         # "heads" | "seq"
+    moe_impl: str = "auto"
+
+    # -- resolution ----------------------------------------------------------
+    def spec(self, logical: Sequence[Optional[str]]) -> P:
+        if self.mesh is None:
+            return P()
+        used: set = set()
+        out = []
+        for name in logical:
+            axes = self.rules.get(name, ()) if name else ()
+            axes = tuple(a for a in axes if a not in used
+                         and a in self.mesh.axis_names)
+            used.update(axes)
+            if len(axes) == 0:
+                out.append(None)
+            elif len(axes) == 1:
+                out.append(axes[0])
+            else:
+                out.append(tuple(axes))
+        return P(*out)
+
+    def spec_for_shape(self, logical: Sequence[Optional[str]],
+                       shape: Sequence[int]) -> P:
+        """Like spec(), but drops axes that do not divide the dim size —
+        required for jit in_shardings (which, unlike constraints, rejects
+        uneven sharding)."""
+        if self.mesh is None:
+            return P()
+        used: set = set()
+        out = []
+        for name, dim in zip(logical, shape):
+            axes = self.rules.get(name, ()) if name else ()
+            axes = tuple(a for a in axes if a not in used
+                         and a in self.mesh.axis_names)
+            # longest prefix of the axis tuple that divides the dim (e.g.
+            # batch 256 over (pod, data, model)=512 falls back to
+            # (pod, data)=32)
+            while axes:
+                size = int(np.prod([self.mesh.shape[a] for a in axes]))
+                if size > 0 and dim % size == 0:
+                    break
+                axes = axes[:-1]
+            if axes:
+                used.update(axes)
+                out.append(axes[0] if len(axes) == 1 else tuple(axes))
+            else:
+                out.append(None)
+        return P(*out)
+
+    def constrain(self, x, logical: Sequence[Optional[str]]):
+        """with_sharding_constraint if a mesh is active, else no-op."""
+        if self.mesh is None or x is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(logical)))
+
+    def sharding(self, logical: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical))
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a]
+                            for a in self.rules.get(name, ())
+                            if a in self.mesh.axis_names] or [1]))
+
+    @property
+    def model_size(self) -> int:
+        return self.axis_size("heads") or 1
+
+
+NO_POLICY = Policy()
+
+
+def make_policy(arch, shape, mesh: Optional[Mesh], *,
+                params_mode: Optional[str] = None,
+                attn_mode: Optional[str] = None,
+                decode_kv: Optional[str] = None,
+                mlp_mode: str = "tp",
+                train_mode: Optional[str] = None) -> Policy:
+    """Default sharding policy for an (arch x shape) cell on ``mesh``.
+
+    mesh axes: ("data", "model") or ("pod", "data", "model").
+    """
+    if mesh is None:
+        return Policy()
+    axis_names = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in axis_names)
+    if shape is not None and shape.global_batch == 1:
+        batch_axes = ()            # batch==1: leave batch unsharded, give the
+                                   # data/pod axes to the KV sequence instead
+    model_ax = ("model",) if "model" in axis_names else ()
+    msize = mesh.shape["model"] if "model" in axis_names else 1
+    kind = shape.kind if shape is not None else "train"
+
+    # attention sharding: TP over query heads by default (GSPMD pads uneven
+    # head counts, e.g. 40 over 16; the padding waste shows up honestly in
+    # the roofline useful-ratio). KV heads are sharded only when they divide
+    # the axis — otherwise replicated, which keeps the flash chunk scan local
+    # (slicing a sharded KV re-gathers it per chunk) and keeps KV-grad
+    # all-reduces small for GQA. "seq" remains as an experimental override.
+    if attn_mode is None:
+        attn_mode = "heads" if arch.n_heads else "seq"
+    # params: training always wants FSDP (optimizer state!); decode of very
+    # large models too (weights gathered layer-by-layer inside scan).
+    if params_mode is None:
+        big = arch.param_count() * 2 > 12e9 * (mesh.shape.get("data", 1))
+        params_mode = "fsdp" if (kind == "train" or big) else "tp"
+    if decode_kv is None:
+        # batch==1 long-context: spread KV over every axis we have
+        decode_kv = "all" if (shape is not None and shape.global_batch == 1) \
+            else "model"
+
+    rules: AxisMap = {
+        "batch": batch_axes,
+        "d_ff": model_ax,
+        "d_inner": model_ax,           # mamba heads/channels
+        "ssm_heads": model_ax,
+        "experts": model_ax,
+        "vocab": model_ax,
+        "embed": (),                   # activations' d_model stays unsharded
+        "kv_heads": model_ax if (attn_mode == "heads"
+                                 and _divides(arch.n_kv_heads, msize)) else (),
+        "heads": model_ax if attn_mode == "heads" else (),
+        "seq_q": model_ax if attn_mode == "seq" else (),
+        "kv_seq": (batch_axes + model_ax) if decode_kv == "all" else model_ax,
+        "frontend_seq": model_ax,
+        # param-only logical dims
+        "p_tp": model_ax,              # tensor-parallel weight dim
+        "p_embed_in": (),              # contracting dims of weights
+        "p_fsdp": batch_axes if params_mode == "fsdp" else (),
+        "p_layers": (),
+    }
+    if mlp_mode == "sp":
+        rules["d_ff"] = ()
+    # Training of non-MoE archs: pure ZeRO-3/FSDP — batch over EVERY mesh
+    # axis (1 seq/chip on 16x16), weights fully sharded and gathered
+    # layer-by-layer inside the scan, NO tensor parallelism. Kills the
+    # per-layer activation all-reduces that dominated the TP-train baseline
+    # (90B: 4.8 TB -> weight-gather-only traffic). MoE training keeps the
+    # model axis for expert parallelism.  [§Perf iteration 3]
+    if train_mode is None:
+        train_mode = "fsdp_pure" if (kind == "train"
+                                     and arch.moe is None) else "tp"
+    if train_mode == "fsdp_pure" and kind == "train":
+        # batch axes ordered so the divisibility prefix-fallback lands on
+        # 256-way sharding (1 seq/chip) on BOTH meshes: on 2x16x16 the pod
+        # axis falls off the batch (grads still reduce over it via the
+        # pod-sharded weights) — this avoids grad-accumulation microbatching,
+        # which would re-gather all ZeRO-3 weights once per microbatch.
+        # [§Perf iterations 3/6]
+        data_first = tuple(a for a in ("data",) if a in axis_names)
+        pod = tuple(a for a in ("pod",) if a in axis_names)
+        rules.update({
+            "batch": data_first + model_ax + pod,
+            "p_fsdp": pod + data_first + model_ax,
+            "p_tp": (),
+            "d_ff": (), "d_inner": (), "ssm_heads": (),
+            "heads": (), "kv_heads": (), "seq_q": (), "vocab": (),
+        })
+        attn_mode = "data"
+    return Policy(mesh=mesh, rules=rules, params_mode=params_mode,
+                  attn_mode=attn_mode)

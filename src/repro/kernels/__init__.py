@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the serving hot-spots, each with a pure-jnp oracle:
+
+  flash_attention/   prefill & train attention (GQA, causal, VMEM-tiled)
+  decode_attention/  paged decode attention (block-table indirection) +
+                     flash-decoding partial/merge primitives
+  ssd_scan/          Mamba-2 SSD chunked scan (state carried in VMEM)
+
+On CPU (this container) kernels run under interpret=True in tests; the model
+zoo uses the jnp references, which are themselves memory-bounded production
+paths for the GSPMD dry-run.
+"""

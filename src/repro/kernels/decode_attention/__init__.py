@@ -1,0 +1,3 @@
+from repro.kernels.decode_attention.ops import (                     # noqa: F401
+    attend_partial, decode_attention_ref, merge_partials,
+    paged_decode_attention, paged_decode_attention_pallas, paged_decode_ref)

@@ -1,0 +1,3 @@
+from repro.kernels.flash_attention.ops import (                      # noqa: F401
+    attention_dense_ref, flash_attention, flash_attention_pallas,
+    flash_attention_ref)

@@ -1,0 +1,20 @@
+"""Oracle for the fused RMSNorm (+ optional residual-add) kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray,
+                residual: Optional[jnp.ndarray] = None,
+                eps: float = 1e-5) -> jnp.ndarray:
+    """y = rmsnorm(x + residual) * w, computed in fp32, cast back."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * w.astype(jnp.float32)).astype(dt)

@@ -1,0 +1,2 @@
+from repro.kernels.ssd_scan.ops import (                             # noqa: F401
+    ssd_chunked_ref, ssd_decode_step, ssd_ref, ssd_scan, ssd_scan_pallas)

@@ -1,0 +1,125 @@
+"""Mamba-2 SSD oracles.
+
+``ssd_ref``          — sequential recurrence over time (ground truth).
+``ssd_chunked_ref``  — the SSD block-decomposition (state-space duality,
+                       arXiv:2405.21060 §6) in pure jnp: quadratic *within*
+                       chunks (MXU-friendly), linear recurrence *across*
+                       chunks. This is the production dry-run path.
+``ssd_step``         — single-token recurrent update (decode path).
+
+Shapes (multi-head SSD, ngroups shared B/C like GQA):
+  x:  (B, S, H, P)      dt: (B, S, H)      A: (H,) (negative)
+  Bm: (B, S, G, N)      Cm: (B, S, G, N)   D: (H,)
+  state: (B, H, P, N)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(m: jnp.ndarray, h: int) -> jnp.ndarray:
+    """(B, S, G, N) -> (B, S, H, N)."""
+    b, s, g, n = m.shape
+    rep = h // g
+    return jnp.broadcast_to(m[:, :, :, None, :], (b, s, g, rep, n)) \
+        .reshape(b, s, h, n)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, D,
+            init_state: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential oracle: y_t = C_t . h_t + D*x_t with
+    h_t = exp(dt_t A) h_{t-1} + dt_t * B_t (x) x_t."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    Bh = _expand_groups(Bm, h)
+    Ch = _expand_groups(Cm, h)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                         # (B,H,P), (B,H), (B,H,N)
+        dA = jnp.exp(dtt * A)                         # (B,H)
+        dBx = (dtt[..., None, None] * xt[..., None]) * bt[:, :, None, :]
+        state = state * dA[..., None, None] + dBx     # (B,H,P,N)
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bh.swapaxes(0, 1), Ch.swapaxes(0, 1))
+    final, ys = jax.lax.scan(step, init_state, xs)
+    y = ys.swapaxes(0, 1) + x * D[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def _segsum(t: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} t[..., k]
+    (NEG_INF-free lower-triangular log-decay matrix)."""
+    s = t.shape[-1]
+    cum = jnp.cumsum(t, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]      # sum_{k=j+1..i}
+    mask = jnp.tril(jnp.ones((s, s), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, D,
+                    init_state: Optional[jnp.ndarray] = None,
+                    chunk: int = 64) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD block decomposition. S % chunk == 0."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    Bh = _expand_groups(Bm, h).astype(jnp.float32)
+    Ch = _expand_groups(Cm, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    # chunked views: (B, C, Q, H, ...)
+    xc = xf.reshape(b, c, chunk, h, p)
+    dtc = dt.reshape(b, c, chunk, h).astype(jnp.float32)
+    Bc = Bh.reshape(b, c, chunk, h, n)
+    Cc = Ch.reshape(b, c, chunk, h, n)
+
+    dA = dtc * A                                      # (B,C,Q,H) log-decay
+    dA_cum = jnp.cumsum(dA, axis=2)                   # within-chunk cumsum
+    dA_tot = dA_cum[:, :, -1]                         # (B,C,H)
+
+    # 1) intra-chunk (quadratic, "attention-like"):
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))    # (B,C,H,Q,Q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc) * L
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp",
+                         scores, dtc[..., None] * xc)
+
+    # 2) chunk states: decay-to-end weighted outer products
+    decay_end = jnp.exp(dA_tot[:, :, None, :] - dA_cum)      # (B,C,Q,H)
+    states = jnp.einsum("bcqhn,bcqhp->bchpn",
+                        Bc * (decay_end * dtc)[..., None], xc)
+
+    # 3) inter-chunk recurrence over C
+    def step(prev, inp):
+        st, tot = inp                                 # (B,H,P,N), (B,H)
+        new = prev * jnp.exp(tot)[..., None, None] + st
+        return new, prev                              # emit state *entering* chunk
+
+    (final, entry_states) = jax.lax.scan(
+        step, init_state, (states.swapaxes(0, 1), dA_tot.swapaxes(0, 1)))
+    entry_states = entry_states.swapaxes(0, 1)        # (B,C,H,P,N)
+
+    # 4) inter-chunk output: contribution of the entering state
+    decay_in = jnp.exp(dA_cum)                        # (B,C,Q,H)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp",
+                         Cc * decay_in[..., None], entry_states)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p) + xf * D[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def ssd_step(state, conv_state, xzbcdt, params) -> None:
+    """Placeholder: the full per-token mamba block step lives in
+    repro.models.mamba2 (needs conv + gating context)."""
+    raise NotImplementedError

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # CPU backend has no bf16 GEMM, so it inserts bf16->f32 weight converts;
+    # LICM then hoists them out of the layer scan, materializing fp32 copies
+    # of ALL layers' weights at once. That is a CPU-compile artifact (TPU
+    # does bf16 natively) and would poison the memory analysis — keep the
+    # converts inside the loop:
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion")
+
+# ^ MUST precede every other import (jax locks the device count on first
+# init). Everything below may import jax.
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES_BY_NAME, get_arch,  # noqa: E402
+                           shape_applicable)
+from repro.distributed.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.distributed.sharding import make_policy      # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.models.model import LM, ExecConfig           # noqa: E402
+from repro.training.optimizer import AdamWConfig        # noqa: E402
+from repro.training.train_step import TrainConfig, make_train_step  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell against the
+production mesh using ShapeDtypeStruct stand-ins (no real allocation), then
+record memory_analysis / cost_analysis / HLO collective bytes for the
+roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
+      --shape train_4k [--multi-pod] [--out reports/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+# per-cell execution overrides: microbatching etc. chosen so the cell fits
+# 16 GiB/chip (tuning log in EXPERIMENTS.md §Perf)
+CELL_OVERRIDES: Dict[str, Dict[str, Any]] = {
+    # 90B weights TP-16 alone are 11.25 GiB/chip; serve cells need layer-wise
+    # FSDP gathering to fit beside the 32k KV cache (16 GiB HBM).
+    "llama-3.2-vision-90b/decode_32k": {"policy": {"params_mode": "fsdp"}},
+    "llama-3.2-vision-90b/prefill_32k": {"policy": {"params_mode": "fsdp"}},
+    # Dense-family training runs pure ZeRO-3 (1 seq/chip + remat): no
+    # microbatching needed — and microbatches below the chip count would
+    # break batch sharding (each microbatch must still divide 256/512).
+    # [§Perf iterations 3-4]
+}
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def input_specs(arch, shape, *, dtype=jnp.int32):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    logical: Dict[str, Any] = {}
+    if shape.kind == "train":
+        if arch.family.value == "audio":
+            specs["embeds"] = jax.ShapeDtypeStruct((b, s, arch.d_model),
+                                                   jnp.bfloat16)
+            logical["embeds"] = ("batch", None, None)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            logical["tokens"] = ("batch", None)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        logical["labels"] = ("batch", None)
+    elif shape.kind == "prefill":
+        if arch.family.value == "audio":
+            specs["embeds"] = jax.ShapeDtypeStruct((b, s, arch.d_model),
+                                                   jnp.bfloat16)
+            logical["embeds"] = ("batch", None, None)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            logical["tokens"] = ("batch", None)
+    else:  # decode
+        specs["tokens"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+        logical["tokens"] = ("batch",)
+    if arch.family.value == "vlm":
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (b, arch.n_frontend_tokens, arch.d_model), jnp.bfloat16)
+        logical["frontend"] = ("batch", None, None)
+    return specs, logical
+
+
+def _exec_cfg(arch, shape, overrides) -> ExecConfig:
+    return ExecConfig(
+        use_pallas=False,              # jnp reference paths lower on any
+        kv_chunk=overrides.get("kv_chunk", 512),   # backend; pallas is the
+        scan_layers=True,                          # TPU-runtime fast path
+        remat=(shape.kind == "train"),
+        loss_chunk=overrides.get("loss_chunk", 512),
+        recent_window=overrides.get("recent_window", 256),
+    )
+
+
+def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
+               policy_overrides: Optional[dict] = None,
+               exec_overrides: Optional[dict] = None):
+    """Returns (lowered, model, policy, meta) for one cell."""
+    arch = get_arch(arch_name)
+    shape = SHAPES_BY_NAME[shape_name]
+    overrides = dict(CELL_OVERRIDES.get(f"{arch_name}/{shape_name}", {}))
+    pod_key = f"{arch_name}/{shape_name}@{'pod2' if multi_pod else 'pod1'}"
+    overrides.update(CELL_OVERRIDES.get(pod_key, {}))
+    overrides.update(exec_overrides or {})
+    pol_kw = dict(overrides.pop("policy", {}))
+    pol_kw.update(policy_overrides or {})
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = make_policy(arch, shape, mesh, **pol_kw)
+    model = LM(arch, policy, _exec_cfg(arch, shape, overrides))
+    specs, logical = input_specs(arch, shape)
+    in_sh = {k: NamedSharding(mesh, policy.spec_for_shape(v, specs[k].shape))
+             for k, v in logical.items()}
+    pspecs = _shardings(mesh, model.param_specs())
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+    if shape.kind == "train":
+        micro = overrides.get("microbatches", 1)
+        tcfg = TrainConfig(adamw=AdamWConfig(), microbatches=micro)
+        step = make_train_step(model, tcfg)
+        from repro.training.optimizer import init_opt_state
+        opt_shape = jax.eval_shape(
+            lambda p: init_opt_state(p, compression=False), params_shape)
+        f32 = lambda t: t  # opt state shards like params
+        opt_sh = type(opt_shape)(
+            step=NamedSharding(mesh, P()),
+            mu=pspecs, nu=pspecs, master=pspecs, ef=None)
+        jitted = jax.jit(step, in_shardings=(pspecs, opt_sh, in_sh),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_shape, opt_shape, specs)
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, tokens=batch.get("tokens"),
+                                 embeds=batch.get("embeds"),
+                                 frontend=batch.get("frontend"),
+                                 s_max=shape.seq_len)
+        jitted = jax.jit(prefill_step, in_shardings=(pspecs, in_sh))
+        lowered = jitted.lower(params_shape, specs)
+    else:
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        cache_sh = _shardings(mesh, model.cache_specs(shape.global_batch,
+                                                      shape.seq_len))
+
+        def serve_step(params, cache, batch):
+            return model.decode_step(params, cache, batch["tokens"])
+        jitted = jax.jit(serve_step,
+                         in_shardings=(pspecs, cache_sh, in_sh),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params_shape, cache_shape, specs)
+    meta = {"arch": arch_name, "shape": shape_name, "multi_pod": multi_pod,
+            "n_devices": mesh.devices.size, "params": arch.param_count(),
+            "active_params": arch.param_count(active_only=True),
+            "attn_mode": policy.attn_mode, "params_mode": policy.params_mode,
+            "overrides": overrides}
+    return lowered, model, policy, meta
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: str = "reports/dryrun", verbose: bool = True,
+             policy_overrides: Optional[dict] = None,
+             exec_overrides: Optional[dict] = None,
+             tag: str = "") -> Dict[str, Any]:
+    t0 = time.time()
+    res: Dict[str, Any] = {"arch": arch_name, "shape": shape_name,
+                           "multi_pod": multi_pod, "ok": False, "tag": tag}
+    try:
+        lowered, model, policy, meta = lower_cell(
+            arch_name, shape_name, multi_pod=multi_pod,
+            policy_overrides=policy_overrides, exec_overrides=exec_overrides)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        hlo = analyze_hlo(hlo_text)
+        if out_dir:
+            import gzip
+            hdir = os.path.join(out_dir, "hlo")
+            os.makedirs(hdir, exist_ok=True)
+            pod_ = "pod2" if multi_pod else "pod1"
+            sfx = f"_{tag}" if tag else ""
+            with gzip.open(os.path.join(
+                    hdir, f"{arch_name}_{shape_name}_{pod_}{sfx}.txt.gz"),
+                    "wt") as zf:
+                zf.write(hlo_text)
+        res.update(meta)
+        res.update({
+            "ok": True,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops": cost.get("flops", 0.0) if cost else 0.0,
+            "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else 0.0,
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_size_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            "peak_bytes_per_device": getattr(mem, "peak_memory_in_bytes", 0),
+            "resident_bytes_per_device":
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0),
+            "collectives": hlo["collectives"],
+            "collective_bytes": hlo["total_collective_bytes"],
+            "hlo_dot_flops": hlo["dot_flops"],
+            "hlo_bytes": hlo["hbm_bytes"],
+        })
+        if verbose:
+            print(f"[dryrun] {arch_name}/{shape_name} "
+                  f"{'pod2' if multi_pod else 'pod1'} OK "
+                  f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
+                  f"mem/dev={res['peak_bytes_per_device']/2**30:.2f}GiB "
+                  f"coll={res['collective_bytes']/2**30:.2f}GiB")
+    except Exception as e:   # noqa: BLE001 — a failing cell is a data point
+        res["error"] = f"{type(e).__name__}: {e}"
+        res["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch_name}/{shape_name} FAILED: {res['error']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        pod = "pod2" if multi_pod else "pod1"
+        suffix = f"_{tag}" if tag else ""
+        fn = os.path.join(out_dir,
+                          f"{arch_name}_{shape_name}_{pod}{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump({k: v for k, v in res.items() if k != "traceback"},
+                      f, indent=1)
+    return res
+
+
+def iter_cells(multi_pod: bool):
+    for a in ASSIGNED_ARCHS:
+        arch = get_arch(a)
+        for sname, shape in SHAPES_BY_NAME.items():
+            if shape_applicable(arch, shape):
+                yield a, sname
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    if args.all:
+        for mp in meshes:
+            for a, s in iter_cells(mp):
+                r = run_cell(a, s, multi_pod=mp, out_dir=args.out)
+                failures += 0 if r["ok"] else 1
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for mp in meshes:
+            r = run_cell(args.arch, args.shape, multi_pod=mp,
+                         out_dir=args.out)
+            failures += 0 if r["ok"] else 1
+    print(f"[dryrun] done, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

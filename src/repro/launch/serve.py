@@ -1,0 +1,84 @@
+"""Serving launcher.
+
+On a real TPU deployment each Aladdin worker is one TP slice (the submesh
+size from Eq. 5-6's optimal config); this launcher assembles the cluster,
+runs the Aladdin control loop, and serves a synthetic Poisson workload (or
+stdin-submitted requests with --interactive).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b \
+      --rate 2 --duration 30 [--policy aladdin|jsq] [--workers 2]
+
+On this CPU container the model is automatically reduced (--full to disable).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core.request import Request
+from repro.core.slo import SLO
+from repro.core.worker_config import TPU_V5E, optimal_worker_config
+from repro.models.model import LM
+from repro.serving.cluster import ClusterConfig, ServingCluster
+from repro.serving.engine import EngineConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--policy", default="aladdin")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--duration", type=float, default=20.0)
+    ap.add_argument("--ttft", type=float, default=10.0)
+    ap.add_argument("--atgt", type=float, default=2.0)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full-size config (needs a real pod)")
+    ap.add_argument("--autoscale", action="store_true")
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    try:
+        cfg = optimal_worker_config(arch, TPU_V5E, SLO(args.ttft, args.atgt))
+        print(f"[serve] Eq.5-6 optimal worker: {cfg.n_accelerators} chips "
+              f"({cfg.bound}-bound)")
+    except ValueError as e:
+        print(f"[serve] worker config: {e}")
+    if not args.full:
+        arch = reduced(arch, n_layers=2, d_model=64, vocab=256)
+    model = LM(arch)
+    params = model.init(jax.random.key(0))
+    cluster = ServingCluster(
+        arch, params, SLO(args.ttft, args.atgt),
+        engine_cfg=EngineConfig(max_batch=4, page_size=8, n_pages=256,
+                                max_pages_per_seq=32),
+        cfg=ClusterConfig(policy=args.policy, autoscale=args.autoscale,
+                          max_workers=max(args.workers * 2, 4)),
+        n_workers=args.workers)
+
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    n = 0
+    next_arrival = t0 + rng.exponential(1.0 / args.rate)
+    while time.perf_counter() - t0 < args.duration:
+        now = time.perf_counter()
+        while now >= next_arrival:
+            r = Request(l_in=int(rng.integers(8, 48)), l_pred=0,
+                        l_real=int(rng.integers(4, 16)), arrival=now)
+            r.tokens = [int(x) for x in rng.integers(2, arch.vocab, r.l_in)]
+            cluster.submit(r)
+            n += 1
+            next_arrival += rng.exponential(1.0 / args.rate)
+        cluster.heartbeat()
+    cluster.run_until_drained()
+    print(f"[serve] {len(cluster.finished)}/{n} finished | attainment "
+          f"{cluster.attainment():.2f} | workers={len(cluster.workers)} | "
+          f"decode fit err={cluster.perf.max_rel_err.get('decode', -1):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Training launcher: runs the sharded train step for an assigned arch.
+
+On a pod this launches the real mesh; on this CPU container use --smoke for a
+reduced config (full configs are exercised via launch.dryrun, which lowers
+and compiles them against the production mesh without allocating).
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b --smoke \
+      --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import TRAIN_4K, get_arch, reduced
+from repro.distributed.sharding import make_policy
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import LM, ExecConfig
+from repro.training import (AdamWConfig, DataConfig, TrainConfig,
+                            batch_at_step, init_train_state, latest_step,
+                            load, make_train_step, save)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", action="store_true")
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    if args.smoke:
+        arch = reduced(arch)
+        policy = None
+        batch, seq = 8, 64
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        policy = make_policy(arch, TRAIN_4K, mesh)
+        batch, seq = TRAIN_4K.global_batch, TRAIN_4K.seq_len
+
+    from repro.distributed.sharding import NO_POLICY
+    model = LM(arch, policy or NO_POLICY,
+               ExecConfig(loss_chunk=min(512, seq)))
+    tcfg = TrainConfig(adamw=AdamWConfig(total_steps=args.steps),
+                       microbatches=args.microbatches,
+                       grad_compression=args.compression)
+    dcfg = DataConfig(vocab=arch.vocab, seq_len=seq, global_batch=batch,
+                      family=arch.family.value, d_model=arch.d_model,
+                      n_frontend_tokens=arch.n_frontend_tokens)
+    step_fn = jax.jit(make_train_step(model, tcfg))
+
+    start = latest_step(args.ckpt) if args.ckpt else None
+    params, opt = init_train_state(model, jax.random.key(0), tcfg)
+    if start:
+        restored, _ = load(args.ckpt, start, {"params": params, "opt": opt})
+        params, opt = restored["params"], restored["opt"]
+        print(f"[train] resumed at step {start}")
+    start = start or 0
+    t0 = time.perf_counter()
+    for i in range(start, args.steps):
+        params, opt, m = step_fn(params, opt, batch_at_step(dcfg, i))
+        if (i + 1) % 10 == 0:
+            print(f"[train] step {i+1} loss={float(m['loss']):.4f} "
+                  f"({(time.perf_counter()-t0)/(i+1-start):.2f}s/step)")
+        if args.ckpt and (i + 1) % 50 == 0:
+            save(args.ckpt, i + 1, {"params": params, "opt": opt})
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Mamba-2 block (SSD) — full-sequence (train/prefill) and recurrent decode.
+
+Tensor-parallel layout: x/z/dt projections and the SSD heads are sharded over
+the ``model`` axis ("d_inner"/"ssm_heads" logical axes); the B/C projections
+(ngroups=1, shared across heads) are replicated — they are tiny, and keeping
+them separate from the x path means the depthwise convs stay local under
+sharding (no halo exchange across a mixed-sharded concat). The gated RMSNorm
+reduces over the sharded d_inner dim; GSPMD turns that into a small
+all-reduce of per-token scalars. out_proj is row-parallel.
+
+Cache = (ssm_state (B,H,P,N) fp32, conv_x (B,d_conv-1,di), conv_bc (...,2GN)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import NO_POLICY, Policy
+from repro.kernels.ssd_scan import ssd_decode_step, ssd_scan
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MambaCache:
+    ssm_state: jnp.ndarray     # (B, H, P, N) fp32
+    conv_x: jnp.ndarray        # (B, d_conv-1, di)
+    conv_bc: jnp.ndarray       # (B, d_conv-1, 2*G*N)
+
+
+def make_mamba_cache(batch: int, arch) -> MambaCache:
+    s = arch.ssm
+    return MambaCache(
+        ssm_state=jnp.zeros((batch, arch.n_ssm_heads, s.head_dim, s.d_state),
+                            jnp.float32),
+        conv_x=jnp.zeros((batch, s.d_conv - 1, arch.d_inner), jnp.bfloat16),
+        conv_bc=jnp.zeros((batch, s.d_conv - 1, 2 * s.ngroups * s.d_state),
+                          jnp.bfloat16),
+    )
+
+
+def _gated_rmsnorm(y, z, w, eps):
+    dt = y.dtype
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(dt)
+
+
+def _causal_depthwise_conv(seq, w, b, state):
+    """seq: (B, S, C); w: (d_conv, C); state: (B, d_conv-1, C) or None."""
+    pad = w.shape[0] - 1
+    if state is not None:
+        inp = jnp.concatenate([state.astype(seq.dtype), seq], axis=1)
+    else:
+        inp = jnp.pad(seq, ((0, 0), (pad, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        inp, w[:, None, :].astype(seq.dtype), window_strides=(1,),
+        padding="VALID", dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1])
+    return out + b
+
+
+def mamba_block_full(x, p, arch, policy: Policy = NO_POLICY, *,
+                     use_pallas: bool = False,
+                     init_cache: Optional[MambaCache] = None,
+                     return_cache: bool = False):
+    """x: (B, S, D) -> (B, S, D) [, MambaCache]."""
+    s_cfg = arch.ssm
+    b, s, d = x.shape
+    di = arch.d_inner
+    nh = arch.n_ssm_heads
+    pad = s_cfg.d_conv - 1
+
+    z = x @ p["w_z"]                                   # (B, S, di)
+    xr = x @ p["w_x"]                                  # (B, S, di)
+    bc = x @ p["w_bc"]                                 # (B, S, 2GN)
+    dt_raw = x @ p["w_dt"] + p["dt_bias"]              # (B, S, nh)
+    z = policy.constrain(z, ("batch", None, "d_inner"))
+    xr = policy.constrain(xr, ("batch", None, "d_inner"))
+
+    xc = jax.nn.silu(_causal_depthwise_conv(
+        xr, p["conv_wx"], p["conv_bx"],
+        None if init_cache is None else init_cache.conv_x))
+    bcc = jax.nn.silu(_causal_depthwise_conv(
+        bc, p["conv_wbc"], p["conv_bbc"],
+        None if init_cache is None else init_cache.conv_bc))
+    xc = policy.constrain(xc, ("batch", None, "d_inner"))
+
+    gn = s_cfg.ngroups * s_cfg.d_state
+    Bm, Cm = bcc[..., :gn], bcc[..., gn:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, final_state = ssd_scan(
+        xc.reshape(b, s, nh, s_cfg.head_dim), dt, A,
+        Bm.reshape(b, s, s_cfg.ngroups, s_cfg.d_state),
+        Cm.reshape(b, s, s_cfg.ngroups, s_cfg.d_state),
+        p["D"].astype(jnp.float32),
+        init_state=None if init_cache is None else init_cache.ssm_state,
+        chunk=s_cfg.chunk, use_pallas=use_pallas)
+    y = y.reshape(b, s, di)
+    y = _gated_rmsnorm(y, z, p["norm_w"], arch.norm_eps)
+    out = y @ p["w_out"]
+    if return_cache:
+        take = lambda t: jnp.pad(t, ((0, 0), (max(pad - s, 0), 0), (0, 0))
+                                 )[:, -pad:, :].astype(jnp.bfloat16)
+        cache = MambaCache(ssm_state=final_state, conv_x=take(xr),
+                           conv_bc=take(bc))
+        return out, cache
+    return out
+
+
+def mamba_block_decode(x, cache: MambaCache, p, arch,
+                       policy: Policy = NO_POLICY
+                       ) -> Tuple[jnp.ndarray, MambaCache]:
+    """One-token step. x: (B, D) -> (B, D)."""
+    s_cfg = arch.ssm
+    b, d = x.shape
+    di = arch.d_inner
+    nh = arch.n_ssm_heads
+
+    z = x @ p["w_z"]                                   # (B, di)
+    xr = x @ p["w_x"]
+    bc = x @ p["w_bc"]
+    dt_raw = x @ p["w_dt"] + p["dt_bias"]              # (B, nh)
+
+    win_x = jnp.concatenate([cache.conv_x.astype(xr.dtype), xr[:, None]], 1)
+    win_bc = jnp.concatenate([cache.conv_bc.astype(bc.dtype), bc[:, None]], 1)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_x,
+                                p["conv_wx"].astype(xr.dtype)) + p["conv_bx"])
+    bcc = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_bc,
+                                 p["conv_wbc"].astype(bc.dtype)) + p["conv_bbc"])
+
+    gn = s_cfg.ngroups * s_cfg.d_state
+    Bm, Cm = bcc[..., :gn], bcc[..., gn:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_state = ssd_decode_step(
+        cache.ssm_state, xc.reshape(b, nh, s_cfg.head_dim), dt, A,
+        Bm.reshape(b, s_cfg.ngroups, s_cfg.d_state),
+        Cm.reshape(b, s_cfg.ngroups, s_cfg.d_state),
+        p["D"].astype(jnp.float32))
+    y = _gated_rmsnorm(y.reshape(b, di), z, p["norm_w"], arch.norm_eps)
+    out = y @ p["w_out"]
+    new_cache = MambaCache(ssm_state=new_state,
+                           conv_x=win_x[:, 1:].astype(jnp.bfloat16),
+                           conv_bc=win_bc[:, 1:].astype(jnp.bfloat16))
+    return out, new_cache

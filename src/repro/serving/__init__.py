@@ -1,0 +1,9 @@
+"""Serving substrate: paged continuous-batching engine, cluster control
+plane, discrete-event simulator, workload + length prediction."""
+from repro.serving.cluster import ClusterConfig, ServingCluster      # noqa: F401
+from repro.serving.engine import EngineConfig, PagedEngine           # noqa: F401
+from repro.serving.length_predictor import LengthPredictor           # noqa: F401
+from repro.serving.simulator import (SimConfig, SimResult,           # noqa: F401
+                                     min_workers_for_slo, simulate)
+from repro.serving.workload import (WorkloadConfig, generate_trace,  # noqa: F401
+                                    sample_lengths)

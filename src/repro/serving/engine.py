@@ -1,0 +1,339 @@
+"""Per-worker continuous-batching engine with a paged KV cache (vLLM-style).
+
+Slot-based execution over a page pool: each running request owns a slot and a
+list of pages (block table). Iteration-level scheduling (Orca-style): new
+requests run a prefill iteration (preempting decode, as vLLM does — the
+paper's constraint (d) budgets exactly this), otherwise all running slots
+advance one decode step via paged attention. On TPU the paged Pallas kernel
+is the attention path; on CPU the jnp oracle.
+
+Supports dense/GQA transformer archs (the paper's Llama-2 family). Execution
+is real JAX compute — iteration wall-times feed the TraceBuffer that fits the
+paper's performance models (Eqs. 1-3)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, Family, PosEmb
+from repro.core.perf_model import TraceBuffer
+from repro.core.request import ReqState, Request
+from repro.kernels.decode_attention import paged_decode_attention
+from repro.models.common import gated_mlp, rms_norm, rope, sinusoidal_pos
+from repro.models.model import LM, ExecConfig
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    page_size: int = 16
+    n_pages: int = 512
+    max_pages_per_seq: int = 64
+    max_new_tokens: int = 2048
+    use_pallas: bool = False        # pallas paged kernel (interpret on CPU)
+    prefill_chunk: int = 0          # >0: Sarathi-style chunked prefill — at
+                                    # most this many prompt tokens per
+                                    # iteration, bounding decode preemption
+                                    # stalls (shrinks constraint (d) pressure)
+
+
+class PagedEngine:
+    """One worker's execution engine."""
+
+    def __init__(self, arch: ArchConfig, params, cfg: EngineConfig,
+                 time_fn: Callable[[], float] = time.perf_counter):
+        assert arch.family in (Family.DENSE, Family.AUDIO), \
+            "engine path supports dense GQA archs (the paper's models)"
+        self.arch = arch
+        self.params = params
+        self.cfg = cfg
+        self.time_fn = time_fn
+        self.traces = TraceBuffer()
+        L = arch.n_layers
+        hd = arch.resolved_head_dim
+        self.kv_k = jnp.zeros((L, cfg.n_pages, cfg.page_size,
+                               arch.n_kv_heads, hd), jnp.float32)
+        self.kv_v = jnp.zeros_like(self.kv_k)
+        self.block_tables = np.zeros((cfg.max_batch, cfg.max_pages_per_seq),
+                                     np.int32)
+        self.lengths = np.zeros((cfg.max_batch,), np.int32)
+        self.free_pages = list(range(cfg.n_pages - 1, 0, -1))  # page 0 = null
+        self.slots: List[Optional[Request]] = [None] * cfg.max_batch
+        self.waiting: List[Request] = []
+        self._prefill_jit = jax.jit(self._prefill_fn)
+        self._decode_jit = jax.jit(self._decode_fn)
+        self._chunk_jit = jax.jit(self._chunk_fn)
+        self.kv_bytes_per_token = 2 * L * arch.n_kv_heads * hd * 4
+
+    # ---- admission / state --------------------------------------------------
+    def can_admit(self, n_tokens_total: int) -> bool:
+        pages_needed = n_tokens_total // self.cfg.page_size + 2
+        return (any(s is None for s in self.slots)
+                and len(self.free_pages) >= pages_needed)
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    @property
+    def running(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def kv_used_bytes(self) -> float:
+        return float(self.lengths.sum()) * self.kv_bytes_per_token / 2
+
+    # ---- jitted model math --------------------------------------------------
+    def _prefill_fn(self, params, tokens, logit_pos):
+        """tokens: (1, S_bucket) -> (logits (V,), ks, vs (L, S, Hkv, hd)).
+        S is a power-of-two bucket; real length = logit_pos + 1 (causal
+        attention makes the tail padding inert)."""
+        model = LM(self.arch, exec_cfg=ExecConfig(scan_layers=True))
+        logits, cache = model.prefill(params, tokens=tokens,
+                                      s_max=tokens.shape[1],
+                                      logit_pos=logit_pos)
+        c0 = cache[0]
+        return (logits[0], c0["k_big"][:, 0].astype(jnp.float32),
+                c0["v_big"][:, 0].astype(jnp.float32))
+
+    def _decode_fn(self, params, kv_k, kv_v, block_tables, lengths, tokens,
+                   active):
+        """One decode iteration for every slot (inactive ones masked).
+        Returns (logits, new kv_k, new kv_v)."""
+        a = self.arch
+        hd = a.resolved_head_dim
+        x = params["embed"][tokens].astype(jnp.float32)
+        if a.tie_embeddings:
+            x = x * math.sqrt(a.d_model)
+        if a.pos_emb == PosEmb.SINUSOIDAL:
+            x = x + sinusoidal_pos(lengths, a.d_model).astype(x.dtype)
+        page_ids = jnp.take_along_axis(
+            block_tables, (lengths // self.cfg.page_size)[:, None],
+            axis=1)[:, 0]
+        offs = lengths % self.cfg.page_size
+        msk = active[:, None, None]
+        for i in range(a.n_layers):
+            p = jax.tree.map(lambda t: t[i], params["seg0"])
+            h = rms_norm(x, p["ln1"], a.norm_eps)
+            q = (h @ p["wq"]).reshape(-1, a.n_heads, hd)
+            k = (h @ p["wk"]).reshape(-1, a.n_kv_heads, hd)
+            v = (h @ p["wv"]).reshape(-1, a.n_kv_heads, hd)
+            if a.qkv_bias:
+                q = q + p["bq"].reshape(a.n_heads, hd)
+                k = k + p["bk"].reshape(a.n_kv_heads, hd)
+                v = v + p["bv"].reshape(a.n_kv_heads, hd)
+            if a.pos_emb == PosEmb.ROPE:
+                q = rope(q[:, None], lengths[:, None], a.rope_theta)[:, 0]
+                k = rope(k[:, None], lengths[:, None], a.rope_theta)[:, 0]
+            kv_k = kv_k.at[i, page_ids, offs].set(
+                jnp.where(msk, k, kv_k[i, page_ids, offs]))
+            kv_v = kv_v.at[i, page_ids, offs].set(
+                jnp.where(msk, v, kv_v[i, page_ids, offs]))
+            att = paged_decode_attention(
+                q, kv_k[i], kv_v[i], block_tables, lengths + 1,
+                use_pallas=self.cfg.use_pallas, interpret=self.cfg.use_pallas)
+            x = x + att.reshape(x.shape[0], -1) @ p["wo"]
+            h = rms_norm(x, p["ln2"], a.norm_eps)
+            x = x + gated_mlp(h, p["wg"], p["wu"], p["wd"], a.act)
+        x = rms_norm(x, params["final_ln"], a.norm_eps)
+        head = params["embed"].T if a.tie_embeddings else params["head"]
+        return x @ head.astype(x.dtype), kv_k, kv_v
+
+    # ---- page management ----------------------------------------------------
+    def _alloc_slot(self, req: Request, n_tokens: int) -> int:
+        slot = self.slots.index(None)
+        pages = (n_tokens + self.cfg.page_size - 1) // self.cfg.page_size
+        assert len(self.free_pages) >= pages
+        tbl = np.zeros((self.cfg.max_pages_per_seq,), np.int32)
+        for j in range(pages):
+            tbl[j] = self.free_pages.pop()
+        self.block_tables[slot] = tbl
+        self.lengths[slot] = 0
+        self.slots[slot] = req
+        return slot
+
+    def _ensure_page(self, slot: int) -> bool:
+        pos = int(self.lengths[slot])
+        pi = pos // self.cfg.page_size
+        if pi >= self.cfg.max_pages_per_seq:
+            return False
+        if self.block_tables[slot, pi] == 0:
+            if not self.free_pages:
+                return False
+            self.block_tables[slot, pi] = self.free_pages.pop()
+        return True
+
+    def _free_slot(self, slot: int) -> None:
+        for pid in self.block_tables[slot]:
+            if pid > 0:
+                self.free_pages.append(int(pid))
+        self.block_tables[slot] = 0
+        self.lengths[slot] = 0
+        self.slots[slot] = None
+
+    # ---- iteration-level scheduling -----------------------------------------
+    def step(self, now: Optional[float] = None) -> List[Request]:
+        """Run ONE iteration (a prefill batch or a decode batch). Returns the
+        requests that finished."""
+        finished: List[Request] = []
+        t0 = self.time_fn()
+        if self.waiting and self.can_admit(self.waiting[0].l_in + 8):
+            total_in, batch = 0, []
+            while self.waiting and self.can_admit(self.waiting[0].l_in + 8):
+                r = self.waiting.pop(0)
+                batch.append(r)
+                total_in += r.l_in
+                self._run_prefill(r)
+            t1 = self.time_fn()
+            self.traces.record_prefill(total_in, t1 - t0)
+            for r in batch:
+                r.t_first_token = now if now is not None else t1
+                r.state = ReqState.DECODING
+            return finished
+        active_slots = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active_slots:
+            return finished
+        for i in list(active_slots):
+            if not self._ensure_page(i):
+                r = self.slots[i]          # out of pages: preempt youngest
+                self._free_slot(i)
+                r.l_out = 0
+                r.state = ReqState.QUEUED
+                self.waiting.insert(0, r)
+                active_slots.remove(i)
+        if not active_slots:
+            return finished
+        tokens = np.zeros((self.cfg.max_batch,), np.int64)
+        for i in active_slots:
+            tokens[i] = self.slots[i].tokens[-1]
+        active = np.zeros((self.cfg.max_batch,), bool)
+        active[active_slots] = True
+        logits, self.kv_k, self.kv_v = self._decode_jit(
+            self.params, self.kv_k, self.kv_v,
+            jnp.asarray(self.block_tables), jnp.asarray(self.lengths),
+            jnp.asarray(tokens), jnp.asarray(active))
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        t1 = self.time_fn()
+        total_ctx = int(self.lengths[active_slots].sum()) + len(active_slots)
+        self.traces.record_decode(len(active_slots), total_ctx, t1 - t0)
+        for i in active_slots:
+            r = self.slots[i]
+            self.lengths[i] += 1
+            r.l_out += 1
+            r.t_decode_spent += (t1 - t0)
+            r.tokens.append(int(nxt[i]))
+            self.traces.record_kv(
+                r.context, r.context * self.kv_bytes_per_token / 2)
+            if r.l_out >= min(r.l_real or self.cfg.max_new_tokens,
+                              self.cfg.max_new_tokens):
+                r.state = ReqState.FINISHED
+                r.t_finish = now if now is not None else t1
+                finished.append(r)
+                self._free_slot(i)
+        return finished
+
+    def _chunk_fn(self, params, chunk_toks, k_ctx, v_ctx, ctx_len,
+                  logit_pos):
+        """One chunked-prefill step: chunk tokens attend to the gathered
+        context KV (q_offset = ctx) + causally within the chunk.
+        Returns (logits at logit_pos, chunk ks, vs: (L, C, Hkv, hd))."""
+        import math as _m
+        from repro.kernels.flash_attention import flash_attention_ref
+        from repro.models.common import gated_mlp, rms_norm, rope
+        a = self.arch
+        hd = a.resolved_head_dim
+        x = params["embed"][chunk_toks].astype(jnp.float32)[None]  # (1,C,D)
+        if a.tie_embeddings:
+            x = x * _m.sqrt(a.d_model)
+        c = x.shape[1]
+        positions = ctx_len + jnp.arange(c)
+        ks_out, vs_out = [], []
+        for i in range(a.n_layers):
+            p = jax.tree.map(lambda t: t[i], params["seg0"])
+            h = rms_norm(x, p["ln1"], a.norm_eps)
+            q = (h @ p["wq"]).reshape(1, c, a.n_heads, hd)
+            k = (h @ p["wk"]).reshape(1, c, a.n_kv_heads, hd)
+            v = (h @ p["wv"]).reshape(1, c, a.n_kv_heads, hd)
+            if a.qkv_bias:
+                q = q + p["bq"].reshape(a.n_heads, hd)
+                k = k + p["bk"].reshape(a.n_kv_heads, hd)
+                v = v + p["bv"].reshape(a.n_kv_heads, hd)
+            if a.pos_emb == PosEmb.ROPE:
+                q = rope(q, positions, a.rope_theta)
+                k = rope(k, positions, a.rope_theta)
+            ks_out.append(k[0])
+            vs_out.append(v[0])
+            k_all = jnp.concatenate([k_ctx[i][None], k], axis=1)
+            v_all = jnp.concatenate([v_ctx[i][None], v], axis=1)
+            kv_len = (ctx_len + c) * jnp.ones((1,), jnp.int32)
+            att = flash_attention_ref(q, k_all, v_all, causal=True,
+                                      q_offset=ctx_len, kv_len=kv_len)
+            x = x + att.reshape(1, c, -1) @ p["wo"]
+            h = rms_norm(x, p["ln2"], a.norm_eps)
+            x = x + gated_mlp(h, p["wg"], p["wu"], p["wd"], a.act)
+        x = rms_norm(x, params["final_ln"], a.norm_eps)
+        head = params["embed"].T if a.tie_embeddings else params["head"]
+        logits = x[0, logit_pos] @ head.astype(x.dtype)
+        return logits, jnp.stack(ks_out), jnp.stack(vs_out)
+
+    def _gather_ctx_kv(self, slot: int, ctx: int):
+        """Contiguous (L, ctx_pad, Hkv, hd) views of this slot's pages."""
+        n_pages = (ctx + self.cfg.page_size - 1) // self.cfg.page_size
+        n_pages = max(n_pages, 1)
+        pages = self.block_tables[slot][:n_pages]
+        k = self.kv_k[:, pages].reshape(self.arch.n_layers,
+                                        n_pages * self.cfg.page_size,
+                                        self.arch.n_kv_heads, -1)
+        v = self.kv_v[:, pages].reshape(self.arch.n_layers,
+                                        n_pages * self.cfg.page_size,
+                                        self.arch.n_kv_heads, -1)
+        return k, v
+
+    def _write_kv(self, slot: int, start: int, ks, vs) -> None:
+        n = ks.shape[1]
+        pos = np.arange(start, start + n)
+        pages = self.block_tables[slot][pos // self.cfg.page_size]
+        offs = pos % self.cfg.page_size
+        self.kv_k = self.kv_k.at[:, pages, offs].set(
+            ks.astype(self.kv_k.dtype))
+        self.kv_v = self.kv_v.at[:, pages, offs].set(
+            vs.astype(self.kv_v.dtype))
+
+    def _run_prefill(self, req: Request) -> None:
+        s = req.l_in
+        slot = self._alloc_slot(req, s + 8)
+        toks = list(req.tokens[:s]) if req.tokens else \
+            list(np.random.default_rng(req.id).integers(
+                2, self.arch.vocab, s))
+        req.tokens = [int(t) for t in toks]
+        cchunk = self.cfg.prefill_chunk
+        if cchunk and s > cchunk:
+            # Sarathi-style: process the prompt in fixed-size chunks, each
+            # attending to the already-written context pages
+            logits = None
+            done = 0
+            while done < s:
+                n = min(cchunk, s - done)
+                bucket = max(8, 1 << (n - 1).bit_length())
+                chunk = toks[done:done + n] + [0] * (bucket - n)
+                k_ctx, v_ctx = self._gather_ctx_kv(slot, max(done, 1))
+                # slice to exactly the valid context so chunk positions in
+                # the concatenated KV line up with their logical positions
+                logits, ks, vs = self._chunk_jit(
+                    self.params, jnp.asarray(chunk), k_ctx[:, :done],
+                    v_ctx[:, :done], done, n - 1)
+                self._write_kv(slot, done, ks[:, :n], vs[:, :n])
+                done += n
+        else:
+            bucket = max(8, 1 << (s - 1).bit_length())  # pow-2 length buckets
+            padded = toks + [0] * (bucket - s)
+            logits, ks, vs = self._prefill_jit(
+                self.params, jnp.asarray([padded]), s - 1)
+            self._write_kv(slot, 0, ks[:, :s], vs[:, :s])
+        self.lengths[slot] = s
+        req.tokens.append(int(np.asarray(jnp.argmax(logits, -1))))
+        req.l_out = 1      # the prefill emits the first token (TTFT)

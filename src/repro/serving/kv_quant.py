@@ -1,0 +1,36 @@
+"""int8 KV-cache quantization (KIVI/KVQuant-style, per-token-per-head scales).
+
+Serving-side lever on the paper's Eq. 5-6: halving KV bytes doubles each
+worker's capacity M, which moves the KV-bound branch of T_max and therefore
+the optimal worker configuration — ``optimal_worker_config`` accepts
+``kv_dtype_bytes`` to reflect it. The engine stores quantized pages and
+dequantizes inside the attention read.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_kv(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., D) -> (int8 values, fp32 scales (..., 1)); symmetric
+    per-vector (token x head) scaling — the D axis shares one scale."""
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = m / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray,
+                  dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def kv_quant_error(x: jnp.ndarray) -> float:
+    """Max relative reconstruction error (diagnostics)."""
+    q, s = quantize_kv(x)
+    back = dequantize_kv(q, s)
+    denom = jnp.maximum(jnp.max(jnp.abs(x)), 1e-9)
+    return float(jnp.max(jnp.abs(back - x.astype(jnp.float32))) / denom)

@@ -1,0 +1,284 @@
+"""Discrete-event cluster simulator (paper §6.4's methodology).
+
+Workers advance through prefill/decode iterations whose durations come from
+the fitted performance models (Eqs. 2-3); the scheduler (Aladdin best-fit /
+JSQ / power-of-two) places requests at heartbeat boundaries, re-balances
+against prediction error (Algorithm 2), and the autoscaler (Eq. 7) tracks
+demand. Used to measure the minimum worker count that attains the SLOs at a
+given arrival rate — the paper's cost metric."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.perf_model import PerfModel
+from repro.core.placement import (PlacementConfig, WorkerState,
+                                  best_fit_place, jsq_place,
+                                  power_of_two_place)
+from repro.core.rebalance import ErrorTracker, rebalance
+from repro.core.request import ReqState, Request
+from repro.core.scaling import Autoscaler
+from repro.core.slo import SLO
+from repro.serving.length_predictor import LengthPredictor
+
+
+@dataclasses.dataclass
+class SimConfig:
+    heartbeat: float = 0.25
+    policy: str = "aladdin"          # aladdin | jsq | po2
+    split_phase: bool = False        # decode-pool-only simulation (Fig. 12)
+    rebalance: bool = True
+    gamma: float = 0.5
+    theta: float = 0.9
+    max_batch: int = 128
+    seed: int = 0
+
+
+class SimWorker:
+    """Execution model of one worker: runs iterations in virtual time."""
+
+    def __init__(self, state: WorkerState, perf: PerfModel, now: float,
+                 split_phase: bool):
+        self.state = state
+        self.perf = perf
+        self.t = now                    # local clock
+        self.split_phase = split_phase
+        self.iters = 0
+        self.preempted: List[Request] = []   # KV-overflow victims (vLLM
+        self.preemptions = 0                 # recompute-preemption semantics)
+
+    def _kv_now(self) -> float:
+        kv = self.perf.kv
+        return sum(float(kv(r.context)) for r in self.state.ongoing)
+
+    def advance_to(self, t_end: float, finished: List[Request],
+                   t_start: Optional[float] = None) -> None:
+        w = self.state
+        M = w.cfg.kv_capacity
+        if t_start is not None and (w.new_batch or self.preempted):
+            # work placed at the heartbeat boundary cannot start earlier
+            self.t = max(self.t, t_start)
+        while self.t < t_end:
+            # resume preempted requests when KV frees up (recompute: the
+            # prompt AND the already-generated tokens are re-prefilled)
+            resume = []
+            while self.preempted and self._kv_now() + float(
+                    self.perf.kv(self.preempted[0].context)) <= 0.9 * M:
+                resume.append(self.preempted.pop(0))
+            # start any newly placed requests (prefill)
+            if (w.new_batch or resume) and not self.split_phase:
+                total_in = sum(r.l_in for r in w.new_batch) \
+                    + sum(r.context for r in resume)
+                dur = float(self.perf.prefill(total_in))
+                self.t += dur
+                # the prefill preempts decode: ongoing requests stall and
+                # their ATGT clocks keep running (this is what constraint (d)
+                # budgets and what naive placement ignores)
+                for r in w.ongoing + self.preempted:
+                    r.t_decode_spent += dur
+                for r in w.new_batch:
+                    r.t_first_token = self.t
+                    r.l_out = 1
+                    r.state = ReqState.DECODING
+                    w.ongoing.append(r)
+                for r in resume:
+                    r.state = ReqState.DECODING
+                    w.ongoing.append(r)
+                w.new_batch.clear()
+                self.iters += 1
+                continue
+            if w.new_batch and self.split_phase:
+                # decode pool: requests arrive pre-filled
+                for r in w.new_batch:
+                    r.t_first_token = self.t
+                    r.l_out = max(r.l_out, 1)
+                    r.state = ReqState.DECODING
+                    w.ongoing.append(r)
+                w.new_batch.clear()
+            if self.split_phase and resume:
+                for r in resume:
+                    r.state = ReqState.DECODING
+                    w.ongoing.append(r)
+            if not w.ongoing:
+                self.t = t_end
+                break
+            # KV overflow -> preempt the youngest requests (recompute mode):
+            # their decode clock keeps running against the ATGT SLO.
+            while self._kv_now() > M and len(w.ongoing) > 1:
+                victim = max(w.ongoing, key=lambda r: r.arrival)
+                w.ongoing.remove(victim)
+                victim.state = ReqState.QUEUED
+                self.preempted.append(victim)
+                self.preemptions += 1
+            b = len(w.ongoing)
+            total_ctx = sum(r.context for r in w.ongoing)
+            dur = float(self.perf.decode(b, total_ctx))
+            self.t += dur
+            self.iters += 1
+            for r in list(w.ongoing):
+                r.l_out += 1
+                r.t_decode_spent += dur
+                if r.l_out >= r.l_real:
+                    r.state = ReqState.FINISHED
+                    r.t_finish = self.t
+                    w.ongoing.remove(r)
+                    finished.append(r)
+            # preempted requests' ATGT clocks also advance (they are stalled)
+            for r in self.preempted:
+                r.t_decode_spent += dur
+
+
+@dataclasses.dataclass
+class SimResult:
+    n_workers_peak: int
+    attainment: float
+    p99_atgt: float
+    p99_ttft: float
+    mean_atgt: float
+    finished: int
+    total: int
+    moves: int = 0
+
+    def row(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def simulate(trace: Sequence[Request], perf: PerfModel, slo: SLO,
+             kv_capacity: float, cfg: SimConfig,
+             n_workers: Optional[int] = None,
+             predictor: Optional[LengthPredictor] = None) -> SimResult:
+    """Run the serving simulation. n_workers fixed (None = elastic: open a
+    worker whenever placement fails, i.e. the min-cost oracle mode)."""
+    rng = np.random.default_rng(cfg.seed)
+    pcfg = PlacementConfig(gamma=cfg.gamma, theta=cfg.theta,
+                           kv_capacity=kv_capacity, max_batch=cfg.max_batch,
+                           split_phase=cfg.split_phase)
+    tracker = ErrorTracker()
+    wid_counter = [0]
+
+    def factory() -> WorkerState:
+        wid_counter[0] += 1
+        return WorkerState(wid_counter[0], pcfg, perf, slo)
+
+    workers: List[WorkerState] = []
+    sims: Dict[int, SimWorker] = {}
+    if n_workers:
+        for _ in range(n_workers):
+            w = factory()
+            workers.append(w)
+            sims[w.id] = SimWorker(w, perf, 0.0, cfg.split_phase)
+
+    trace = sorted(trace, key=lambda r: r.arrival)
+    horizon = max(r.arrival for r in trace) + 240.0
+    finished: List[Request] = []
+    queued: List[Request] = []
+    idx = 0
+    moves = 0
+    t = 0.0
+    peak_workers = len(workers)
+    while t < horizon:
+        t_next = t + cfg.heartbeat
+        # arrivals in this heartbeat
+        while idx < len(trace) and trace[idx].arrival < t_next:
+            r = trace[idx]
+            r.l_pred = predictor.predict(r.l_in) if predictor else r.l_real
+            queued.append(r)
+            idx += 1
+        # re-prediction for underruns (Algorithm 2 inputs)
+        for w in workers:
+            for r in w.ongoing:
+                if r.l_out > r.l_pred and not r.repredicted and predictor:
+                    tracker.on_underrun(r, predictor.repredict(r.l_in,
+                                                               r.l_out))
+        # placement
+        still: List[Request] = []
+        for r in queued:
+            fac = None if n_workers else factory
+            if cfg.policy == "aladdin":
+                w = best_fit_place(workers, r, allow_new=fac is not None,
+                                   new_worker_factory=fac)
+            elif cfg.policy == "jsq":
+                w = jsq_place(workers, r, allow_new=fac is not None,
+                              new_worker_factory=fac)
+            else:
+                w = power_of_two_place(workers, r, rng,
+                                       allow_new=fac is not None,
+                                       new_worker_factory=fac)
+            if w is None:
+                still.append(r)
+            else:
+                r.state = ReqState.PLACED
+                if w.id not in sims:
+                    sims[w.id] = SimWorker(w, perf, t, cfg.split_phase)
+        queued = still
+        if cfg.rebalance and cfg.policy == "aladdin":
+            moves += rebalance(workers, tracker)
+            tracker.decay()
+        peak_workers = max(peak_workers, len(workers))
+        # advance workers
+        before = len(finished)
+        for w in workers:
+            sims[w.id].advance_to(t_next, finished, t_start=t)
+        for r in finished[before:]:
+            tracker.on_finish(r)
+            if predictor:
+                predictor.observe(r.l_in, r.l_real)
+        t = t_next
+        if idx >= len(trace) and not queued \
+                and all(not w.ongoing and not w.new_batch for w in workers) \
+                and all(not s.preempted for s in sims.values()):
+            break
+
+    atgts = [r.atgt() for r in finished if r.atgt() is not None]
+    ttfts = [r.ttft() for r in finished if r.ttft() is not None]
+    ok = [r for r in finished if r.slo_ok(slo)]
+    total = len(trace)
+    return SimResult(
+        n_workers_peak=peak_workers,
+        attainment=len(ok) / max(len(finished), 1) *
+        (len(finished) / max(total, 1)),
+        p99_atgt=float(np.percentile(atgts, 99)) if atgts else float("nan"),
+        p99_ttft=float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
+        mean_atgt=float(np.mean(atgts)) if atgts else float("nan"),
+        finished=len(finished), total=total, moves=moves)
+
+
+def min_workers_for_slo(trace_fn, perf: PerfModel, slo: SLO,
+                        kv_capacity: float, cfg: SimConfig,
+                        attain_target: float = 0.99, lo: int = 1,
+                        hi: int = 512,
+                        predictor: Optional[LengthPredictor] = None) -> int:
+    """Binary search the minimum fixed worker count attaining the SLO target
+    (the paper's cost metric in Figs. 11/12)."""
+    attain_hist = []
+
+    def ok(n: int) -> bool:
+        res = simulate(trace_fn(), perf, slo, kv_capacity, cfg, n_workers=n,
+                       predictor=predictor)
+        attain_hist.append((n, res.attainment))
+        return res.attainment >= attain_target and res.finished == res.total
+
+    escalations = 0
+    while not ok(hi):
+        # plateau detection: if doubling workers stops improving attainment,
+        # the residual violations are scale-invariant (e.g. prediction-error
+        # preemption tails) — the target is infeasible, not under-provisioned
+        if len(attain_hist) >= 2 and \
+                attain_hist[-1][1] <= attain_hist[-2][1] + 1e-3:
+            raise RuntimeError(
+                f"attainment plateaus at {attain_hist[-1][1]:.3f} < "
+                f"{attain_target} (scale-invariant violations)")
+        hi *= 2
+        escalations += 1
+        if hi > 8192 or escalations > 6:
+            raise RuntimeError("workload cannot meet SLO at any scale")
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if ok(mid):
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo

@@ -1,0 +1,8 @@
+"""Training substrate: AdamW + accumulation, sharded checkpointing with
+elastic re-sharding, deterministic data pipeline, int8 grad compression."""
+from repro.training.checkpoint import latest_step, load, save        # noqa: F401
+from repro.training.data import DataConfig, batch_at_step, data_iterator  # noqa: F401
+from repro.training.optimizer import (AdamWConfig, OptState,          # noqa: F401
+                                      apply_adamw, init_opt_state)
+from repro.training.train_step import (TrainConfig, init_train_state,  # noqa: F401
+                                       loss_and_grads, make_train_step)

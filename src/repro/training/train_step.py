@@ -1,0 +1,83 @@
+"""Training step: loss + grad with microbatch accumulation (lax.scan), remat,
+bf16 params / fp32 AdamW master state, optional int8 gradient compression
+bracketing the cross-pod all-reduce."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from repro.training.optimizer import (AdamWConfig, OptState, apply_adamw,
+                                      compressed_grads_with_ef,
+                                      init_opt_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    microbatches: int = 1           # grad-accumulation steps per train step
+    grad_compression: bool = False  # int8 + error feedback
+
+
+def _split_microbatches(batch: Dict[str, Any], n: int) -> Dict[str, Any]:
+    """(B, ...) -> (n, B/n, ...)."""
+    def sp(t):
+        b = t.shape[0]
+        assert b % n == 0, (b, n)
+        return t.reshape((n, b // n) + t.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def loss_and_grads(model: LM, params, batch, microbatches: int = 1):
+    """Mean loss + grads, accumulated over microbatches via lax.scan."""
+    def lfn(p, mb):
+        loss, metrics = model.train_loss(p, mb)
+        return loss, metrics
+
+    if microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(lfn, has_aux=True)(
+            params, batch)
+        return loss, grads, metrics
+
+    mbs = _split_microbatches(batch, microbatches)
+
+    def body(carry, mb):
+        acc, loss_acc = carry
+        (loss, metrics), g = jax.value_and_grad(lfn, has_aux=True)(params, mb)
+        acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), acc, g)
+        return (acc, loss_acc + loss), metrics
+
+    zeros = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32), params)
+    (gsum, loss_sum), metrics = jax.lax.scan(body, (zeros, 0.0), mbs)
+    grads = jax.tree.map(lambda t: t / microbatches, gsum)
+    last_metrics = jax.tree.map(lambda t: t[-1], metrics)
+    return loss_sum / microbatches, grads, last_metrics
+
+
+def make_train_step(model: LM, cfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+    Pure; jit it with in_shardings from the model's param specs."""
+
+    def train_step(params, opt_state: OptState, batch):
+        loss, grads, metrics = loss_and_grads(model, params, batch,
+                                              cfg.microbatches)
+        if cfg.grad_compression and opt_state.ef is not None:
+            grads, new_ef = compressed_grads_with_ef(grads, opt_state.ef)
+            opt_state = opt_state._replace(ef=new_ef)
+        new_params, new_opt, od = apply_adamw(cfg.adamw, grads, opt_state,
+                                              params)
+        metrics = dict(metrics)
+        metrics.update(od)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(model: LM, key, cfg: TrainConfig):
+    params = model.init(key)
+    opt = init_opt_state(params, compression=cfg.grad_compression)
+    return params, opt

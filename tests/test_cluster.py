@@ -1,0 +1,93 @@
+"""Cluster control plane: simulation end-to-end, fault tolerance, straggler
+drain, checkpoint/restart, autoscaling fit."""
+import numpy as np
+import pytest
+
+from repro.core import (Autoscaler, DecodeModel, KVModel, PerfModel,
+                        PrefillModel, Request, SLO)
+from repro.serving import (SimConfig, WorkloadConfig, generate_trace,
+                           min_workers_for_slo, simulate)
+from repro.serving.length_predictor import LengthPredictor
+from repro.serving.workload import sample_lengths
+
+
+def paper_like_perf():
+    # roughly Llama2-13b on A100-ish: 30ms ATGT budget, ~1.5us/ctx-token
+    return PerfModel(kv=KVModel(h=1.0, j=0.0),
+                     prefill=PrefillModel(k1=2.4e-4, c1=8e-3),
+                     decode=DecodeModel(k2=1.2e-6, c2=2.8e-4, c3=8e-3))
+
+
+def make_trace(rate=4.0, seed=0, duration=40.0):
+    cfg = WorkloadConfig(mean_rate=rate, duration=duration, seed=seed)
+    return generate_trace(cfg)
+
+
+def fitted_predictor(seed=99):
+    cfg = WorkloadConfig(seed=seed)
+    li, lo = sample_lengths(cfg, 5000)
+    p = LengthPredictor()
+    p.fit(li, lo)
+    return p
+
+
+def test_simulator_completes_and_attains():
+    perf = paper_like_perf()
+    slo = SLO(ttft=1.0, atgt=0.05)
+    res = simulate(make_trace(rate=2.0), perf, slo, kv_capacity=2e5,
+                   cfg=SimConfig(policy="aladdin"), n_workers=4,
+                   predictor=fitted_predictor())
+    assert res.finished == res.total
+    assert res.attainment > 0.9
+
+
+def test_aladdin_needs_fewer_workers_than_jsq():
+    perf = paper_like_perf()
+    slo = SLO(ttft=1.5, atgt=0.05)
+    pred = fitted_predictor()
+
+    def tf(seed=3):
+        return lambda: make_trace(rate=6.0, seed=seed, duration=30.0)
+
+    n_al = min_workers_for_slo(tf(), perf, slo, 2e5,
+                               SimConfig(policy="aladdin"), 0.98,
+                               predictor=fitted_predictor())
+    n_jsq = min_workers_for_slo(tf(), perf, slo, 2e5,
+                                SimConfig(policy="jsq"), 0.98,
+                                predictor=fitted_predictor())
+    assert n_al <= n_jsq
+
+
+def test_split_phase_mode():
+    perf = paper_like_perf()
+    slo = SLO(ttft=10.0, atgt=0.05)
+    res = simulate(make_trace(rate=3.0), perf, slo, 2e5,
+                   SimConfig(policy="aladdin", split_phase=True),
+                   n_workers=4, predictor=fitted_predictor())
+    assert res.finished == res.total
+
+
+def test_autoscaler_eq7_linear_fit():
+    sc = Autoscaler()
+    rng = np.random.default_rng(0)
+    for rate in np.linspace(5, 50, 24):
+        sc.observe(rate, int(np.ceil(0.8 * rate + 2 + rng.normal(0, 0.3))))
+    n = sc.predict_workers(30.0)
+    assert abs(n - (0.8 * 30 + 2)) <= 2
+    # change-point detection on a demand jump
+    for _ in range(8):
+        sc.rates.append(10.0)
+    for _ in range(8):
+        sc.rates.append(30.0)
+    assert sc.change_point()
+
+
+def test_predictor_unbiased():
+    pred = fitted_predictor()
+    cfg = WorkloadConfig(seed=123)
+    li, lo = sample_lengths(cfg, 4000)
+    errs = [pred.predict(int(a)) - int(b) for a, b in zip(li, lo)]
+    # unbiased: mean error much smaller than the error std (paper §2.3)
+    assert abs(np.mean(errs)) < 0.1 * np.std(errs)
+    # re-prediction conditional mean exceeds the current length
+    assert pred.repredict(100, 500) >= 1

@@ -1,0 +1,58 @@
+"""Dry-run machinery: sharding policy resolution + a real (subprocess)
+lower+compile of one full-size cell against the 256-chip mesh."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import DECODE_32K, TRAIN_4K, LONG_500K, get_arch, \
+    shape_applicable
+from repro.distributed.sharding import Policy, make_policy
+from jax.sharding import PartitionSpec as P
+
+
+def test_policy_no_mesh_is_noop():
+    p = Policy()
+    assert p.spec(("batch", None)) == P()
+    assert p.constrain(1.5, ("batch",)) == 1.5
+
+
+def test_spec_for_shape_drops_nondivisible():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    pol = Policy(mesh=FakeMesh(), rules={"batch": ("data",),
+                                         "vocab": ("model",)})
+    assert pol.spec_for_shape(("batch", "vocab"), (256, 4096)) == \
+        P("data", "model")
+    # 49155 % 16 != 0 -> vocab dropped
+    assert pol.spec_for_shape(("batch", "vocab"), (256, 49155)) == \
+        P("data", None)
+
+
+def test_long500k_applicability():
+    assert shape_applicable(get_arch("mamba2-1.3b"), LONG_500K)
+    assert shape_applicable(get_arch("zamba2-7b"), LONG_500K)
+    assert not shape_applicable(get_arch("qwen2.5-32b"), LONG_500K)
+    assert not shape_applicable(get_arch("llama-3.2-vision-90b"), LONG_500K)
+
+
+@pytest.mark.slow
+def test_dryrun_cell_compiles(tmp_path):
+    """Full-size granite decode cell lowers + compiles on the 16x16 mesh
+    (subprocess: the 512-device XLA flag must be set before jax init)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "granite-3-8b", "--shape", "decode_32k", "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))), timeout=540)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    rec = json.load(open(tmp_path / "granite-3-8b_decode_32k_pod1.json"))
+    assert rec["ok"]
+    assert rec["n_devices"] == 256
+    assert rec["peak_bytes_per_device"] < 16 * 2 ** 30, "must fit v5e HBM"
+    assert rec["hlo_dot_flops"] > 0

@@ -1,0 +1,140 @@
+"""Aladdin core: placement constraints, Algorithm 1, Fig. 3, MIP reference."""
+import numpy as np
+import pytest
+
+from repro.core import (DecodeModel, KVModel, PerfModel, PlacementConfig,
+                        PrefillModel, Request, SLO, WorkerState,
+                        best_fit_place, exact_min_workers, jsq_place)
+
+
+def make_perf(kv_h=1.0, kv_j=0.0, k1=1e-4, c1=5e-3, k2=1e-6, c2=1e-3,
+              c3=5e-3):
+    return PerfModel(kv=KVModel(kv_h, kv_j), prefill=PrefillModel(k1, c1),
+                     decode=DecodeModel(k2, c2, c3))
+
+
+def make_worker(wid=0, kv_capacity=1e9, atgt=0.05, ttft=2.0, gamma=0.5,
+                theta=1.0, perf=None, max_batch=512):
+    cfg = PlacementConfig(gamma=gamma, theta=theta, kv_capacity=kv_capacity,
+                          max_batch=max_batch)
+    return WorkerState(wid, cfg, perf or make_perf(), SLO(ttft, atgt))
+
+
+def test_fig3_example():
+    """The principle of the paper's Fig. 3: two long-prompt requests
+    (5 in / 2 out) and two long-output requests (2 in / 5 out). Pairing same
+    types peaks at 14 KV tokens; mixing prompt+output peaks at 11 (the long
+    prompt frees its KV before the long output peaks). With capacity 11,
+    Aladdin's (e)-aware best-fit finds the 2-worker mixed placement."""
+    perf = make_perf(kv_h=1.0, kv_j=0.0, k2=1e-9, c2=1e-9, c3=0.0)
+
+    def worker_factory(n=[0]):
+        n[0] += 1
+        return make_worker(wid=n[0], kv_capacity=11.0, atgt=1e9, ttft=1e9,
+                           gamma=1.0, perf=perf)
+
+    reqs = [Request(l_in=5, l_pred=2), Request(l_in=5, l_pred=2),
+            Request(l_in=2, l_pred=5), Request(l_in=2, l_pred=5)]
+
+    workers = []
+    for r in reqs:
+        w = best_fit_place(workers, r, new_worker_factory=worker_factory)
+        assert w is not None
+    assert len(workers) == 2
+    for w in workers:
+        kinds = sorted(r.l_in for r in w.new_batch)
+        assert kinds == [2, 5], "optimal placement mixes prompt/output types"
+        assert w.kv_peak() <= 11.0
+
+
+def test_kv_peak_profile():
+    """Peak KV demand accounts for growth-until-finish, not just current."""
+    w = make_worker(kv_capacity=100.0)
+    r1 = Request(l_in=10, l_pred=5)     # grows to 15
+    r2 = Request(l_in=2, l_pred=20)     # grows to 22
+    w.place(r1)
+    w.place(r2)
+    # peak: just before r2 finishes, r1 already gone: kv = 22 ... but while
+    # both alive at k=5: (10+5) + (2+5) = 22; max profile = max over events
+    peak = w.kv_peak()
+    assert peak == pytest.approx(max(15 + 7, 22), abs=1e-6)
+
+
+def test_constraint_b_blocks_overload():
+    perf = make_perf(k2=1e-5, c2=1e-4, c3=1e-3)
+    w = make_worker(atgt=0.02, perf=perf, kv_capacity=1e12)
+    budget = perf.decode.max_total_context(1, 0.02)
+    r = Request(l_in=int(budget * 2), l_pred=10)
+    assert not w.feasible([r])
+    r2 = Request(l_in=int(budget * 0.2), l_pred=10)
+    assert w.feasible([r2])
+
+
+def test_constraint_c_ttft():
+    perf = make_perf(k1=1e-3, c1=0.0)
+    w = make_worker(ttft=1.0, perf=perf)
+    assert w.feasible([Request(l_in=900, l_pred=1)])
+    assert not w.feasible([Request(l_in=1100, l_pred=1)])
+
+
+def test_constraint_d_preemption_budget():
+    """Ongoing requests with little banked slack block big new prefills."""
+    perf = make_perf(k1=1e-3, c1=0.0)
+    w = make_worker(ttft=10.0, atgt=0.05, theta=1.0, perf=perf,
+                    kv_capacity=1e12)
+    ongoing = Request(l_in=100, l_pred=50)
+    ongoing.l_out = 10
+    ongoing.t_decode_spent = 0.4         # slack = 0.05*10 - 0.4 = 0.1s
+    w.ongoing.append(ongoing)
+    assert w.feasible([Request(l_in=90, l_pred=10)])      # 0.09s prefill
+    assert not w.feasible([Request(l_in=200, l_pred=10)])  # 0.2s prefill
+
+
+def test_best_fit_uses_fewer_workers_than_jsq():
+    rng = np.random.default_rng(0)
+    perf = make_perf(kv_h=1.0, k2=1e-9, c2=1e-9)
+
+    def factory_gen():
+        n = [0]
+
+        def f():
+            n[0] += 1
+            return make_worker(wid=n[0], kv_capacity=4096.0, atgt=1e9,
+                               ttft=1e9, gamma=1.0, perf=perf, max_batch=8)
+        return f
+
+    reqs = [Request(l_in=int(rng.integers(50, 500)),
+                    l_pred=int(rng.integers(50, 500))) for _ in range(64)]
+    w_bf, w_jsq = [], []
+    fb, fj = factory_gen(), factory_gen()
+    for r in reqs:
+        best_fit_place(w_bf, r, new_worker_factory=fb)
+    for r in [Request(l_in=r.l_in, l_pred=r.l_pred) for r in reqs]:
+        jsq_place(w_jsq, r, new_worker_factory=fj)
+    assert len(w_bf) <= len(w_jsq)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_heuristic_near_optimal_vs_mip(seed):
+    """Best-fit must stay within +1 worker of the exact MIP optimum."""
+    rng = np.random.default_rng(seed)
+    perf = make_perf(kv_h=1.0, k2=1e-9, c2=1e-9)
+
+    def mk(i):
+        return make_worker(wid=i, kv_capacity=2000.0, atgt=1e9, ttft=1e9,
+                           gamma=1.0, perf=perf, max_batch=6)
+
+    reqs = [Request(l_in=int(rng.integers(100, 900)),
+                    l_pred=int(rng.integers(50, 400))) for _ in range(9)]
+    opt = exact_min_workers([Request(l_in=r.l_in, l_pred=r.l_pred)
+                             for r in reqs], mk, max_workers=9)
+    assert opt is not None
+    workers = []
+    n = [100]
+
+    def factory():
+        n[0] += 1
+        return mk(n[0])
+    for r in reqs:
+        assert best_fit_place(workers, r, new_worker_factory=factory)
+    assert len(workers) <= opt + 1

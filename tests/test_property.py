@@ -1,0 +1,121 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DecodeModel, KVModel, PerfModel, PlacementConfig,
+                        PrefillModel, Request, SLO, WorkerState,
+                        best_fit_place)
+from repro.core.rebalance import ErrorTracker, rebalance
+from repro.distributed.hlo_analysis import shape_bytes
+from repro.serving.length_predictor import LengthPredictor
+
+perf_st = st.builds(
+    PerfModel,
+    kv=st.builds(KVModel, h=st.floats(0.1, 10.0), j=st.floats(0.0, 100.0)),
+    prefill=st.builds(PrefillModel, k1=st.floats(1e-6, 1e-3),
+                      c1=st.floats(0.0, 0.1)),
+    decode=st.builds(DecodeModel, k2=st.floats(1e-8, 1e-5),
+                     c2=st.floats(1e-6, 1e-3), c3=st.floats(1e-4, 2e-2)))
+
+req_st = st.builds(Request, l_in=st.integers(1, 2048),
+                   l_pred=st.integers(1, 2048))
+
+
+@given(perf_st, st.integers(1, 256), st.floats(0.02, 0.5))
+@settings(max_examples=50, deadline=None)
+def test_eq4_budget_inverts_eq3(perf, b, t_dec):
+    """Eq. 4 is the exact inversion of Eq. 3: at the returned context budget
+    the decode iteration time equals the SLO (when feasible)."""
+    c = perf.decode.max_total_context(b, t_dec)
+    if c > 0 and np.isfinite(c):
+        t = perf.decode(b, c)
+        assert t <= t_dec + 1e-6
+        assert perf.decode(b, c + 2 / perf.decode.k2 * 1e-3) >= t
+
+
+@given(st.lists(req_st, min_size=1, max_size=12), perf_st)
+@settings(max_examples=30, deadline=None)
+def test_placement_respects_all_constraints(reqs, perf):
+    """Whatever best-fit does, no worker ends up violating (b)/(e)."""
+    cfg = PlacementConfig(gamma=0.5, theta=0.9,
+                          kv_capacity=5e5, max_batch=8)
+    slo = SLO(ttft=5.0, atgt=0.2)
+    n = [0]
+
+    def factory():
+        n[0] += 1
+        return WorkerState(n[0], cfg, perf, slo)
+
+    workers = []
+    for r in reqs:
+        best_fit_place(workers, r, new_worker_factory=factory)
+    for w in workers:
+        assert w.kv_peak() <= cfg.theta * cfg.kv_capacity + 1e-6
+        assert w.batch_size <= cfg.max_batch
+        budget = perf.decode.max_total_context(w.batch_size, slo.atgt)
+        assert w.weighted_context() <= cfg.theta * budget + 1e-6
+
+
+@given(st.lists(st.tuples(st.integers(1, 2048), st.integers(1, 2048)),
+                min_size=20, max_size=200))
+@settings(max_examples=20, deadline=None)
+def test_predictor_bucket_mean_is_unbiased(pairs):
+    p = LengthPredictor()
+    for a, b in pairs:
+        p.observe(a, b)
+    # per bucket, the mean prediction error is ~0 by construction
+    errs = []
+    for a, b in pairs:
+        errs.append(p.predict(a) - b)
+    assert abs(np.mean(errs)) <= np.std(errs) + 1.0
+
+
+@given(st.lists(st.floats(0.0, 1e6), min_size=1, max_size=6),
+       st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_rebalance_never_increases_total_error(l_errs, moves):
+    perf = PerfModel(decode=DecodeModel(k2=1e-6, c2=1e-4, c3=1e-3))
+    cfg = PlacementConfig(kv_capacity=1e9, max_batch=64)
+    slo = SLO(5.0, 0.5)
+    workers = []
+    tracker = ErrorTracker()
+    for i, le in enumerate(l_errs):
+        w = WorkerState(i, cfg, perf, slo)
+        for j in range(2):
+            w.place(Request(l_in=100, l_pred=100))
+        workers.append(w)
+        tracker.l_e[i] = le
+        tracker.b_e[i] = 1.0 if le > 0 else 0.0
+    k2, c2 = perf.decode.k2, perf.decode.c2
+    before = sum(abs(tracker.err(w.id, k2, c2)) for w in workers)
+    rebalance(workers, tracker, max_moves=moves)
+    # errors tracked in the tracker are unchanged; the *projected* error
+    # (after moves) must not exceed the original
+    after_proj = 0.0
+    for w in workers:
+        e = tracker.err(w.id, k2, c2)
+        after_proj += abs(e)
+    assert after_proj <= before + 1e-9
+
+
+@given(st.sampled_from(["f32", "bf16", "s32", "u8"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=4))
+@settings(max_examples=50, deadline=None)
+def test_shape_bytes_parser(dtype, dims):
+    s = f"{dtype}[{','.join(map(str, dims))}]"
+    n = 1
+    for d in dims:
+        n *= d
+    per = {"f32": 4, "bf16": 2, "s32": 4, "u8": 1}[dtype]
+    assert shape_bytes(s) == n * per
+    # tuples sum
+    assert shape_bytes(f"({s}, {s})") == 2 * n * per
+
+
+@given(st.integers(1, 10 ** 6), st.integers(0, 10 ** 6))
+@settings(max_examples=50, deadline=None)
+def test_kv_model_linear(tok, j):
+    m = KVModel(h=2.0, j=float(j))
+    assert m(tok) == 2.0 * tok + j

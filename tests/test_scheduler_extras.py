@@ -1,0 +1,125 @@
+"""Distributed grouped scheduler (App. A), rebalance (Alg. 2), fault
+tolerance + straggler mitigation on the live cluster."""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch, reduced
+from repro.core import (DecodeModel, KVModel, PerfModel, PlacementConfig,
+                        PrefillModel, Request, SLO, WorkerState)
+from repro.core.distributed_scheduler import (GroupedScheduler,
+                                              SchedLatencyModel,
+                                              choose_group_count)
+from repro.core.rebalance import ErrorTracker, rebalance
+from repro.models.model import LM
+from repro.serving.cluster import ClusterConfig, ServingCluster
+from repro.serving.engine import EngineConfig
+
+
+def mk_perf():
+    return PerfModel(kv=KVModel(1.0, 0.0), prefill=PrefillModel(1e-4, 1e-3),
+                     decode=DecodeModel(1e-6, 1e-4, 5e-3))
+
+
+def mk_worker(i, perf):
+    return WorkerState(i, PlacementConfig(kv_capacity=1e7, max_batch=64),
+                       perf, SLO(5.0, 0.5))
+
+
+def test_grouped_scheduler_round_robin_and_placement():
+    perf = mk_perf()
+    workers = [mk_worker(i, perf) for i in range(8)]
+    sched = GroupedScheduler(workers, n_groups=4)
+    assert all(len(g) == 2 for g in sched.groups)
+    placed = []
+    for i in range(16):
+        w = sched.place(Request(l_in=64, l_pred=64))
+        placed.append(w)
+    assert all(w is not None for w in placed)
+    # round-robin: each group received 4 requests
+    per_group = [sum(len(w.new_batch) + len(w.ongoing) for w in g)
+                 for g in sched.groups]
+    assert per_group == [4, 4, 4, 4]
+
+
+def test_choose_group_count_bounds():
+    lat = SchedLatencyModel(a=2e-6, b=1e-4)
+    g = choose_group_count(rate=1000.0, n_workers=64, error_budget=0.1,
+                           t_s=0.01, heartbeat=0.25, lat=lat)
+    assert 1 <= g <= 64
+    # tighter latency target -> at least as many groups
+    g2 = choose_group_count(rate=1000.0, n_workers=64, error_budget=0.1,
+                            t_s=0.002, heartbeat=0.25, lat=lat)
+    assert g2 >= g
+
+
+def test_rebalance_moves_from_over_to_under():
+    perf = mk_perf()
+    w0, w1 = mk_worker(0, perf), mk_worker(1, perf)
+    for _ in range(3):
+        w0.place(Request(l_in=200, l_pred=200))
+    tracker = ErrorTracker()
+    tracker.l_e[0] = 5000.0      # w0 badly underestimated
+    tracker.b_e[0] = 3.0
+    tracker.l_e[1] = -2000.0     # w1 overestimated (has slack)
+    tracker.b_e[1] = -2.0
+    moves = rebalance([w0, w1], tracker)
+    assert moves >= 1
+    assert len(w1.new_batch) >= 1
+
+
+def _mini_cluster(policy="aladdin", n_workers=3):
+    arch = reduced(get_arch("llama2-7b"), n_layers=2, d_model=32, vocab=64)
+    model = LM(arch)
+    params = model.init(jax.random.key(0))
+    return ServingCluster(
+        arch, params, SLO(ttft=30.0, atgt=5.0),
+        engine_cfg=EngineConfig(max_batch=4, page_size=8, n_pages=64,
+                                max_pages_per_seq=8),
+        cfg=ClusterConfig(policy=policy, min_workers=1,
+                          max_workers=4), n_workers=n_workers)
+
+
+def test_cluster_failure_requeues_and_finishes():
+    cluster = _mini_cluster()
+    rng = np.random.default_rng(0)
+    reqs = []
+    for _ in range(6):
+        r = Request(l_in=int(rng.integers(6, 20)), l_pred=0,
+                    l_real=4, arrival=time.perf_counter())
+        r.tokens = [int(x) for x in rng.integers(2, 64, r.l_in)]
+        reqs.append(r)
+        cluster.submit(r)
+    cluster.heartbeat()
+    # kill the busiest worker mid-flight
+    busiest = max(cluster.workers.values(),
+                  key=lambda w: len(w.state.ongoing))
+    requeued = cluster.inject_failure(busiest.id)
+    assert requeued >= 0
+    cluster.run_until_drained(max_beats=200)
+    assert len(cluster.finished) == len(reqs), \
+        (len(cluster.finished), [r.state for r in reqs])
+    assert cluster.failed_events
+
+
+def test_cluster_snapshot_restore():
+    cluster = _mini_cluster()
+    r = Request(l_in=8, l_pred=4, l_real=4)
+    cluster.submit(r)
+    snap = cluster.snapshot()
+    c2 = _mini_cluster()
+    c2.restore(snap)
+    assert len(c2.queued) == len(cluster.queued)
+    assert c2.perf.decode.k2 == cluster.perf.decode.k2
+
+
+def test_straggler_detection_drains():
+    cluster = _mini_cluster(n_workers=4)
+    ids = list(cluster.workers)
+    for wid in ids[:3]:
+        cluster.workers[wid].iter_ema = 0.01
+    cluster.workers[ids[3]].iter_ema = 10.0     # pathological straggler
+    out = cluster._detect_stragglers()
+    assert ids[3] in out
+    assert cluster.workers[ids[3]].state.draining
