@@ -1,4 +1,4 @@
-"""Paper Figs. 11/12: cluster-scale GPU counts vs arrival rate.
+"""Paper Figs. 11/12 + heterogeneous / disaggregated cost scenarios.
 
 Default-batching mode (Fig. 11) compares, at each arrival rate, the minimum
 GPU count for the SLO-attainment target under:
@@ -11,38 +11,47 @@ GPU count for the SLO-attainment target under:
 Split-phase mode (Fig. 12) simulates the decode pool only (prefill arrival =
 pre-computed contexts), aladdin vs jsq vs po2.
 
+`run_hetero` sizes a mixed A100/V100 fleet (per-worker WorkerSpec latency and
+KV budgets); `run_disagg` prices an end-to-end prefill/decode disaggregated
+cluster — joint (n_prefill, n_decode) frontier with modeled KV transfer —
+against the colocated minimum on the same trace; `run_hot_loop` measures
+raw heartbeat-loop throughput (the CI perf canary).
+
 GPU cost = workers x accelerators-per-worker. Latency models per worker
 config come from Eqs. 5-6 (core.worker_config)."""
 from __future__ import annotations
 
+import time
 from typing import Dict, List
 
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.perf_model import PerfModel, PrefillModel
+from repro.core.perf_model import PerfModel
 from repro.core.slo import PAPER_SLOS
-from repro.core.worker_config import A100_80G, optimal_worker_config, \
-    _decode_model_for
+from repro.core.worker_config import (A100_80G, V100_32G, make_worker_spec,
+                                      optimal_worker_config)
+from repro.serving.disagg import DisaggConfig, min_cost_disagg
 from repro.serving.length_predictor import LengthPredictor
-from repro.serving.simulator import SimConfig, min_workers_for_slo
-from repro.serving.workload import WorkloadConfig, generate_trace, \
-    sample_lengths
+from repro.serving.simulator import (SimConfig, min_workers_for_slo,
+                                     simulate)
+from repro.serving.workload import (WorkloadConfig, burst_trace,
+                                    generate_trace, sample_lengths)
 
 MODEL = "llama2-70b"
 ATTAIN = 0.98
 
 
 def _perf_for(arch, n_g: int) -> PerfModel:
-    dm = _decode_model_for(arch, A100_80G, n_g)
-    # prefill: compute-bound at ~0.5 efficiency over the TP group
-    k1 = 2.0 * arch.param_count() / (n_g * A100_80G.peak_flops * 0.5)
-    return PerfModel(prefill=PrefillModel(k1=k1, c1=0.01), decode=dm)
+    # same Eq. 2/5 math as make_worker_spec; the homogeneous figures keep
+    # the seed's inert KV model (h=0: capacity never binds in Figs. 11/12)
+    spec = make_worker_spec(arch, A100_80G, PAPER_SLOS[MODEL], n_g=n_g)
+    return PerfModel(prefill=spec.perf.prefill, decode=spec.perf.decode)
 
 
 def _kv_cap_tokens(arch, n_g: int) -> float:
-    M = n_g * A100_80G.mem_bytes - 2.0 * arch.param_count()
-    return M / arch.kv_bytes_per_token()
+    return make_worker_spec(arch, A100_80G, PAPER_SLOS[MODEL],
+                            n_g=n_g).kv_capacity
 
 
 def _predictor(seed=7) -> LengthPredictor:
@@ -125,5 +134,160 @@ def run(verbose: bool = True, rates=(2.0, 5.0, 10.0),
     return rows
 
 
+def run_hetero(verbose: bool = True, rates=(2.0, 5.0),
+               duration: float = 25.0) -> List[Dict]:
+    """Minimum GPU cost with a 50/50 A100-TP-opt / V100-TP-8 fleet vs the
+    pure-A100 fleet at the same rates (per-worker WorkerSpec budgets)."""
+    arch = get_arch(MODEL)
+    slo = PAPER_SLOS[MODEL]
+    a100 = make_worker_spec(arch, A100_80G, slo, mean_context=450.0)
+    v100 = make_worker_spec(arch, V100_32G, slo, n_g=8, mean_context=450.0)
+
+    def mixed(n: int):
+        return [(a100 if i % 2 == 0 else v100) for i in range(n)]
+
+    def pure(n: int):
+        return [a100] * n
+
+    rows: List[Dict] = []
+    for rate in rates:
+        costs: Dict[str, float] = {}
+        for label, fn in (("mixed", mixed), ("a100", pure)):
+            try:
+                n = min_workers_for_slo(
+                    _trace_fn(rate, duration=duration), a100.perf, slo,
+                    a100.kv_capacity, SimConfig(), ATTAIN, hi=64,
+                    predictor=_predictor(), fleet_fn=fn)
+                costs[label] = sum(s.n_accelerators for s in fn(n))
+            except RuntimeError:
+                costs[label] = float("nan")
+        rows.append({
+            "name": f"hetero_rate{rate:g}", "us_per_call": 0.0,
+            "derived": (f"gpus_mixed={costs['mixed']:g};"
+                        f"gpus_a100={costs['a100']:g}")})
+    if verbose:
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    return rows
+
+
+def run_disagg(verbose: bool = True, rates=(2.0, 5.0),
+               duration: float = 25.0) -> List[Dict]:
+    """End-to-end disaggregated (n_prefill, n_decode) cost vs the colocated
+    minimum on the same trace."""
+    arch = get_arch(MODEL)
+    slo = PAPER_SLOS[MODEL]
+    spec = make_worker_spec(arch, A100_80G, slo, mean_context=450.0)
+    dcfg = DisaggConfig()
+    rows: List[Dict] = []
+    for rate in rates:
+        try:
+            n_co = min_workers_for_slo(
+                _trace_fn(rate, duration=duration), spec.perf, slo,
+                spec.kv_capacity, SimConfig(), ATTAIN, hi=64,
+                predictor=_predictor(),
+                fleet_fn=lambda n: [spec] * n)
+            cost_co = n_co * spec.n_accelerators
+        except RuntimeError:
+            cost_co = float("nan")
+        best = min_cost_disagg(_trace_fn(rate, duration=duration), slo, dcfg,
+                               spec, spec, ATTAIN, max_prefill=6,
+                               hi_decode=64, predictor=_predictor())
+        if best is None:
+            derived = f"colocated={cost_co:g};disagg=nan"
+        else:
+            derived = (f"colocated={cost_co:g};disagg={best.gpu_cost:g};"
+                       f"n_prefill={best.n_prefill};n_decode={best.n_decode};"
+                       f"transfer_ms={best.mean_transfer*1e3:.2f}")
+        rows.append({"name": f"disagg_rate{rate:g}", "us_per_call": 0.0,
+                     "derived": derived})
+    if verbose:
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    return rows
+
+
+def run_hot_loop(verbose: bool = True, rate: float = 8.0,
+                 duration: float = 60.0, n_workers: int = 8,
+                 repeats: int = 3) -> List[Dict]:
+    """Heartbeat-loop throughput canary: wall time of one fixed-fleet
+    simulate() on the default trace (no SLO search). Catches simulator
+    perf regressions in CI."""
+    arch = get_arch(MODEL)
+    slo = PAPER_SLOS[MODEL]
+    perf = _perf_for(arch, 4)
+    kv = _kv_cap_tokens(arch, 4)
+    wcfg = WorkloadConfig(mean_rate=rate, duration=duration, seed=5,
+                          in_mu=5.0, in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+    best = float("inf")
+    res = None
+    for _ in range(repeats):
+        trace = generate_trace(wcfg)
+        t0 = time.perf_counter()
+        res = simulate(trace, perf, slo, kv, SimConfig(), n_workers=n_workers)
+        best = min(best, time.perf_counter() - t0)
+    beats = duration / SimConfig().heartbeat
+    row = {"name": "hot_loop", "us_per_call": best * 1e6,
+           "derived": (f"wall_ms={best*1e3:.1f};"
+                       f"beats_per_s={beats/best:.0f};"
+                       f"finished={res.finished}/{res.total}")}
+    if verbose:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    return [row]
+
+
+def run_burst(verbose: bool = True, duration: float = 30.0) -> List[Dict]:
+    """Flash-crowd trace: elastic (open-on-demand) worker peak during a 4x
+    rate burst vs the steady state — the scenario Eq. 7 must absorb."""
+    arch = get_arch(MODEL)
+    slo = PAPER_SLOS[MODEL]
+    spec = make_worker_spec(arch, A100_80G, slo, mean_context=450.0)
+    wcfg = WorkloadConfig(mean_rate=2.0, duration=duration, seed=11,
+                          in_mu=5.0, in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+    steady = simulate(generate_trace(wcfg), spec.perf, slo, spec.kv_capacity,
+                      SimConfig(), n_workers=None, predictor=_predictor())
+    btrace = burst_trace(wcfg, burst_rate=8.0, burst_start=duration / 3,
+                         burst_duration=duration / 3)
+    burst = simulate(btrace, spec.perf, slo, spec.kv_capacity,
+                     SimConfig(), n_workers=None, predictor=_predictor())
+    row = {"name": "burst_elastic", "us_per_call": 0.0,
+           "derived": (f"steady_peak={steady.n_workers_peak};"
+                       f"burst_peak={burst.n_workers_peak};"
+                       f"burst_attain={burst.attainment:.3f}")}
+    if verbose:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    return [row]
+
+
+def run_all(verbose: bool = True, smoke: bool = False) -> List[Dict]:
+    """All scenarios; smoke=True shrinks traces for a <60s CI canary."""
+    rows: List[Dict] = []
+    if smoke:
+        rows += run(verbose, rates=(2.0,), duration=10.0)
+        rows += run_hetero(verbose, rates=(2.0,), duration=10.0)
+        rows += run_disagg(verbose, rates=(2.0,), duration=10.0)
+        rows += run_hot_loop(verbose, duration=20.0, repeats=1)
+        rows += run_burst(verbose, duration=15.0)
+    else:
+        rows += run(verbose)
+        rows += run_hetero(verbose)
+        rows += run_disagg(verbose)
+        rows += run_hot_loop(verbose)
+        rows += run_burst(verbose)
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="fig",
+                    choices=["fig", "hetero", "disagg", "hot_loop", "burst",
+                             "all"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny traces, <60s: the CI perf canary")
+    args = ap.parse_args()
+    if args.smoke or args.scenario == "all":
+        run_all(smoke=args.smoke)
+    else:
+        {"fig": run, "hetero": run_hetero, "disagg": run_disagg,
+         "hot_loop": run_hot_loop, "burst": run_burst}[args.scenario]()

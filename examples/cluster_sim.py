@@ -1,6 +1,7 @@
 """Cluster-scale simulation (paper §6.4): minimum GPU count vs arrival rate
-for Aladdin vs JSQ vs power-of-two vs vanilla-vLLM worker config, plus the
-Eq. 7 autoscaler tracking a diurnal demand curve.
+for Aladdin vs JSQ vs power-of-two vs vanilla-vLLM worker config, the Eq. 7
+autoscaler tracking a diurnal demand curve, a heterogeneous A100/V100 fleet,
+and an end-to-end prefill/decode disaggregated cluster.
 
   PYTHONPATH=src:. python examples/cluster_sim.py
 """
@@ -11,8 +12,11 @@ from benchmarks.bench_cluster_sim import (_kv_cap_tokens, _perf_for,
 from repro.configs import get_arch
 from repro.core.scaling import Autoscaler
 from repro.core.slo import PAPER_SLOS
-from repro.core.worker_config import A100_80G, optimal_worker_config
+from repro.core.worker_config import (A100_80G, V100_32G, make_worker_spec,
+                                      optimal_worker_config)
+from repro.serving.disagg import DisaggConfig, min_cost_disagg
 from repro.serving.simulator import SimConfig, min_workers_for_slo, simulate
+from repro.serving.workload import WorkloadConfig, diurnal_trace
 
 
 def main() -> None:
@@ -53,6 +57,44 @@ def main() -> None:
                   f"{res.n_workers_peak:2d} Eq7->{pred:2d} "
                   f"change_point={sc.change_point()}")
     print(f"fitted Eq.7: N_w = ceil({sc.k5:.2f} * r + {sc.c5:.2f})")
+
+    # heterogeneous fleet: alternate optimal A100 workers with V100 TP=8
+    print("\nheterogeneous A100/V100 fleet (50/50 mix):")
+    a100 = make_worker_spec(arch, A100_80G, slo, mean_context=450.0)
+    v100 = make_worker_spec(arch, V100_32G, slo, n_g=8, mean_context=450.0)
+    for rate in (2.0, 5.0):
+        n = min_workers_for_slo(
+            _trace_fn(rate, duration=15.0), a100.perf, slo, a100.kv_capacity,
+            SimConfig(), 0.95, hi=32, predictor=_predictor(),
+            fleet_fn=lambda n: [(a100 if i % 2 == 0 else v100)
+                                for i in range(n)])
+        fleet = [(a100 if i % 2 == 0 else v100) for i in range(n)]
+        print(f"  rate={rate:g}: {n} workers "
+              f"({sum(s.n_accelerators for s in fleet)} GPUs: "
+              f"{sum(1 for s in fleet if s is a100)}x{a100.name} + "
+              f"{sum(1 for s in fleet if s is v100)}x{v100.name})")
+
+    # disaggregated prefill/decode cluster vs the colocated minimum
+    print("\ndisaggregated prefill/decode frontier (rate=2.0):")
+    best = min_cost_disagg(_trace_fn(2.0, duration=15.0), slo, DisaggConfig(),
+                           a100, a100, 0.95, max_prefill=4, hi_decode=32,
+                           predictor=_predictor())
+    if best is None:
+        print("  infeasible within bounds")
+    else:
+        print(f"  cheapest: {best.n_prefill} prefill + {best.n_decode} "
+              f"decode workers = {best.gpu_cost:g} GPUs "
+              f"(attain={best.attainment:.3f}, "
+              f"kv transfer {best.mean_transfer*1e3:.1f} ms/req)")
+
+    # diurnal trace through the elastic simulator
+    wcfg = WorkloadConfig(mean_rate=4.0, duration=30.0, seed=17, in_mu=5.0,
+                          in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+    res = simulate(diurnal_trace(wcfg, amplitude=0.8), a100.perf, slo,
+                   a100.kv_capacity, SimConfig(), n_workers=None,
+                   predictor=_predictor())
+    print(f"\ndiurnal trace (elastic): peak={res.n_workers_peak} workers, "
+          f"attainment={res.attainment:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 test suite + a <60s cluster-simulator smoke benchmark, so simulator
+# performance regressions fail CI rather than landing silently.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== cluster-sim smoke bench (budget: 60s) =="
+start=$(date +%s)
+timeout 60 python benchmarks/bench_cluster_sim.py --smoke
+echo "smoke bench took $(( $(date +%s) - start ))s"

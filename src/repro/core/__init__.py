@@ -20,7 +20,8 @@ from repro.core.request import ReqState, Request                              # 
 from repro.core.scaling import Autoscaler, AutoscalerConfig                   # noqa: F401
 from repro.core.slo import PAPER_SLOS, SLO                                    # noqa: F401
 from repro.core.worker_config import (A100_80G, TPU_V5E, V100_32G,            # noqa: F401
-                                      HardwareSpec, WorkerConfig,
+                                      HardwareSpec, WorkerConfig, WorkerSpec,
+                                      make_worker_spec,
                                       optimal_worker_config)
 from repro.core.distributed_scheduler import (GroupedScheduler,               # noqa: F401
                                               SchedLatencyModel,

@@ -37,7 +37,11 @@ class PlacementConfig:
 
 
 class WorkerState:
-    """Scheduler-side view of one serving worker."""
+    """Scheduler-side view of one serving worker.
+
+    ``cfg`` and ``perf`` are per-worker: a heterogeneous fleet mixes workers
+    whose KV capacity, batch cap and latency models differ (e.g. A100 TP=4
+    next to V100 TP=8 — each built from its own Eq. 5-6 search)."""
 
     def __init__(self, wid: int, cfg: PlacementConfig, perf: PerfModel,
                  slo: SLO):
@@ -49,15 +53,38 @@ class WorkerState:
         self.new_batch: List[Request] = []  # placed this heartbeat, not begun
         self.alive = True
         self.draining = False               # straggler mitigation
+        # cached Σ (l_in + γ·l_pred) over ongoing+new_batch; validated against
+        # the list lengths so external list mutation forces a recompute, and
+        # updated incrementally by place/unplace (which keep lengths AND the
+        # sum in sync even when a re-balance move leaves lengths unchanged
+        # on net). l_pred re-predictions must call mark_dirty().
+        self._wctx = 0.0
+        self._wctx_key: Optional[tuple] = None
 
     # ---- aggregate views ----------------------------------------------------
     @property
     def batch_size(self) -> int:
         return len(self.ongoing) + len(self.new_batch)
 
+    def mark_dirty(self) -> None:
+        """Invalidate cached aggregates after an in-place request mutation
+        (e.g. Algorithm 2 re-prediction rewriting l_pred)."""
+        self._wctx_key = None
+
+    def _wctx_now(self) -> float:
+        key = (len(self.ongoing), len(self.new_batch))
+        if self._wctx_key != key:
+            g = self.cfg.gamma
+            self._wctx = sum(r.l_in + g * r.l_pred
+                             for r in self.ongoing + self.new_batch)
+            self._wctx_key = key
+        return self._wctx
+
     def weighted_context(self, gamma: Optional[float] = None) -> float:
-        g = self.cfg.gamma if gamma is None else gamma
-        return sum(r.l_in + g * r.l_pred for r in self.ongoing + self.new_batch)
+        if gamma is None or gamma == self.cfg.gamma:
+            return self._wctx_now()
+        return sum(r.l_in + gamma * r.l_pred
+                   for r in self.ongoing + self.new_batch)
 
     def capacity_norm(self) -> float:
         """L2 norm of (batch size, weighted context) — the worker 'load' used
@@ -77,10 +104,14 @@ class WorkerState:
             r.l_in + self.cfg.gamma * r.l_pred for r in reqs)
         return w <= self.cfg.theta * budget
 
+    def _prefill_time(self, total_new: float) -> float:
+        p = self.perf.prefill
+        return p.k1 * total_new + p.c1   # scalar Eq. 2 (hot path: no numpy)
+
     def _constraint_c(self, reqs: Sequence[Request]) -> bool:
         total_new = sum(r.l_in for r in self.new_batch) + \
             sum(r.l_in for r in reqs)
-        return self.perf.prefill(total_new) <= self.slo.ttft
+        return self._prefill_time(total_new) <= self.slo.ttft
 
     def _constraint_d(self, reqs: Sequence[Request]) -> bool:
         if not self.ongoing:
@@ -89,7 +120,8 @@ class WorkerState:
                     for r in self.ongoing)
         total_new = sum(r.l_in for r in self.new_batch) + \
             sum(r.l_in for r in reqs)
-        return self.perf.prefill(total_new) <= self.cfg.theta * max(slack, 0.0)
+        return self._prefill_time(total_new) <= \
+            self.cfg.theta * max(slack, 0.0)
 
     def kv_peak(self, extra: Sequence[Request] = ()) -> float:
         """Constraint (e): peak KV demand over future iterations.
@@ -97,17 +129,31 @@ class WorkerState:
         Each request j contributes kv(context_j + k) at future iteration k and
         drops to zero after remaining_pred_j steps; the total is piecewise
         monotone between finish events, so the peak is attained just before
-        some request finishes (or at k=0 when over-capacity already)."""
-        reqs = [r for r in self.ongoing + self.new_batch] + list(extra)
+        some request finishes (or at k=0 when over-capacity already). The KV
+        model is linear (Eq. 1), so each candidate peak is h·Σcontext_alive
+        + n_alive·(h·k + j) over the suffix of requests outliving step k —
+        O(b log b) overall instead of O(b²) kv-model evaluations."""
+        reqs = list(self.ongoing) + self.new_batch + list(extra)
         if not reqs:
             return 0.0
-        kv = self.perf.kv
-        rems = sorted(set(max(r.remaining_pred, 1) for r in reqs))
-        peak = sum(float(kv(r.context)) for r in reqs)
-        for k in rems:
-            tot = sum(float(kv(r.context + min(k, r.remaining_pred) - 0))
-                      for r in reqs if r.remaining_pred >= k)
-            peak = max(peak, tot)
+        h, j = self.perf.kv.h, self.perf.kv.j
+        items = sorted((r.remaining_pred, r.context) for r in reqs)
+        n = len(items)
+        suffix_ctx = 0.0
+        suffix = [0.0] * (n + 1)       # suffix[i] = Σ context of items[i:]
+        for i in range(n - 1, -1, -1):
+            suffix_ctx += items[i][1]
+            suffix[i] = suffix_ctx
+        peak = h * suffix[0] + j * n
+        i = 0
+        for k in sorted({max(rem, 1) for rem, _ in items}):
+            while i < n and items[i][0] < k:
+                i += 1                 # drop requests finished before step k
+            if i == n:
+                break
+            tot = h * (suffix[i] + (n - i) * k) + j * (n - i)
+            if tot > peak:
+                peak = tot
         return peak
 
     def _constraint_e(self, reqs: Sequence[Request]) -> bool:
@@ -118,10 +164,10 @@ class WorkerState:
 
     def kv_now(self, extra: Sequence[Request] = ()) -> float:
         """Current KV usage (what a vLLM-style admission check sees)."""
-        kv = self.perf.kv
-        return sum(float(kv(r.context))
-                   for r in self.ongoing + self.new_batch) + \
-            sum(float(kv(r.l_in)) for r in extra)
+        h, j = self.perf.kv.h, self.perf.kv.j
+        own = len(self.ongoing) + len(self.new_batch)
+        return h * sum(r.context for r in self.ongoing + self.new_batch) \
+            + j * own + sum(h * r.l_in + j for r in extra)
 
     def _admit_naive(self, reqs: Sequence[Request]) -> bool:
         """Baseline admission: current KV + the new prompts fit, batch slot
@@ -139,12 +185,18 @@ class WorkerState:
 
     # ---- mutation ------------------------------------------------------------
     def place(self, r: Request) -> None:
+        self._wctx_now()
         r.worker = self.id
         self.new_batch.append(r)
+        self._wctx += r.l_in + self.cfg.gamma * r.l_pred
+        self._wctx_key = (len(self.ongoing), len(self.new_batch))
 
     def unplace(self, r: Request) -> None:
+        self._wctx_now()
         self.new_batch.remove(r)
         r.worker = None
+        self._wctx -= r.l_in + self.cfg.gamma * r.l_pred
+        self._wctx_key = (len(self.ongoing), len(self.new_batch))
 
 
 def best_fit_place(workers: List[WorkerState], req: Request,

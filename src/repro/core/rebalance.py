@@ -15,7 +15,6 @@ requests from positive-error (over-utilized) workers to negative-error ones,
 greedily minimizing Σ|err_i| while preserving feasibility."""
 from __future__ import annotations
 
-import math
 from typing import Dict, List, Optional
 
 from repro.core.placement import WorkerState
@@ -68,14 +67,10 @@ def rebalance(workers: List[WorkerState], tracker: ErrorTracker,
     Returns the number of moves made."""
     if len(workers) < 2:
         return 0
-    k2 = workers[0].perf.decode.k2
-    c2 = workers[0].perf.decode.c2
-    norm = math.sqrt(k2 * k2 + c2 * c2) or 1.0
-
-    def total_err(errs):
-        return sum(abs(e) for e in errs.values()) / norm
-
-    errs = {w.id: tracker.err(w.id, k2, c2) for w in workers}
+    # per-worker coefficients: in a heterogeneous fleet the same token error
+    # costs different latency on different hardware (its own Eq. 4 line)
+    coef = {w.id: (w.perf.decode.k2, w.perf.decode.c2) for w in workers}
+    errs = {w.id: tracker.err(w.id, *coef[w.id]) for w in workers}
     by_id = {w.id: w for w in workers}
     moves = 0
     improved = True
@@ -91,9 +86,10 @@ def rebalance(workers: List[WorkerState], tracker: ErrorTracker,
                     continue
                 moved = False
                 for r in list(src.new_batch):
-                    delta = k2 * r.l_pred + c2
-                    new_src = errs[src.id] - delta
-                    new_dst = errs[dst.id] + delta
+                    k2s, c2s = coef[src.id]
+                    k2d, c2d = coef[dst.id]
+                    new_src = errs[src.id] - (k2s * r.l_pred + c2s)
+                    new_dst = errs[dst.id] + (k2d * r.l_pred + c2d)
                     if abs(new_src) + abs(new_dst) + 1e-12 < \
                             abs(errs[src.id]) + abs(errs[dst.id]) \
                             and dst.feasible([r]):

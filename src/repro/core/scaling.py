@@ -36,18 +36,33 @@ class Autoscaler:
         self.rates: List[float] = []
         self.k5: Optional[float] = None
         self.c5: Optional[float] = None
+        # running Σx, Σy, Σxy, Σx² for an O(1) two-parameter least squares
+        # per observation (rebuilt only when the history window is trimmed)
+        self._sums = [0.0, 0.0, 0.0, 0.0]
 
     # ---- Eq. 7 fit -----------------------------------------------------------
     def observe(self, rate: float, workers_needed: int) -> None:
         self.history.append((rate, workers_needed))
         self.rates.append(rate)
+        x, y = float(rate), float(workers_needed)
+        s = self._sums
+        s[0] += x
+        s[1] += y
+        s[2] += x * y
+        s[3] += x * x
         if len(self.history) > 4096:
             del self.history[:2048]
-        if len(self.history) >= 4:
-            a = np.asarray(self.history, np.float64)
-            A = np.stack([a[:, 0], np.ones(len(a))], axis=1)
-            (k5, c5), *_ = np.linalg.lstsq(A, a[:, 1], rcond=None)
-            self.k5, self.c5 = float(k5), float(c5)
+            self._sums = [sum(r for r, _ in self.history),
+                          sum(float(n) for _, n in self.history),
+                          sum(r * n for r, n in self.history),
+                          sum(r * r for r, _ in self.history)]
+            s = self._sums
+        n = len(self.history)
+        if n >= 4:
+            det = n * s[3] - s[0] * s[0]
+            if abs(det) > 1e-12:
+                self.k5 = (n * s[2] - s[0] * s[1]) / det
+                self.c5 = (s[1] * s[3] - s[0] * s[2]) / det
 
     def rate_floor(self, sigma_tokens: float, mean_interval: float) -> float:
         """R: smallest rate whose per-heartbeat sample keeps SEM below

@@ -18,7 +18,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence, Tuple
 
-from repro.core.perf_model import DecodeModel, PerfModel
+from repro.core.perf_model import (DecodeModel, KVModel, PerfModel,
+                                   PrefillModel)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +54,60 @@ class WorkerConfig:
     per_gpu_throughput: float        # T_max (req-iterations / s / accel)
     bound: str                       # "kv" | "slo"
     decode_model: DecodeModel
+
+
+@dataclasses.dataclass
+class WorkerSpec:
+    """Everything the cluster simulator needs to know about one worker type.
+
+    A heterogeneous fleet is a list of these; each simulated worker carries
+    its own spec, so A100 TP=4 and V100 TP=8 workers coexist with their own
+    latency models, KV capacities and accelerator costs. ``kv_capacity`` is
+    in the same units the spec's KVModel outputs (token units for specs built
+    by ``make_worker_spec``); ``kv_bytes_per_token`` is kept separately so
+    the disaggregated simulator can price the prefill->decode KV transfer in
+    bytes regardless of those units."""
+    perf: PerfModel
+    kv_capacity: float
+    max_batch: int = 128
+    n_accelerators: int = 1
+    name: str = "worker"
+    kv_bytes_per_token: float = 0.0
+
+    @property
+    def gpu_cost(self) -> float:
+        return float(self.n_accelerators)
+
+
+def make_worker_spec(arch, hw: HardwareSpec, slo,
+                     n_g: Optional[int] = None,
+                     mean_context: float = 1024.0,
+                     max_batch: int = 128,
+                     efficiency: float = 0.875,
+                     prefill_efficiency: float = 0.5) -> WorkerSpec:
+    """Build a simulator-ready WorkerSpec for ``arch`` on ``hw``.
+
+    n_g=None runs the Eq. 5-6 search for the hardware's optimal TP degree;
+    an explicit n_g models a fixed (possibly suboptimal) worker shape. The
+    KV model is in token units (h=1), with capacity = M / kv-bytes-per-token,
+    so constraint (e) compares token counts against a token budget."""
+    if n_g is None:
+        cfg = optimal_worker_config(arch, hw, slo, mean_context=mean_context,
+                                    efficiency=efficiency)
+        n_g, dm, M = cfg.n_accelerators, cfg.decode_model, cfg.kv_capacity
+    else:
+        M = n_g * hw.mem_bytes - 2.0 * arch.param_count()
+        if M <= 0:
+            raise ValueError(f"{arch.name} does not fit on {n_g}x {hw.name}")
+        dm = _decode_model_for(arch, hw, n_g, efficiency)
+    kv_tok = arch.kv_bytes_per_token()
+    k1 = 2.0 * arch.param_count() / (n_g * hw.peak_flops * prefill_efficiency)
+    perf = PerfModel(kv=KVModel(h=1.0, j=0.0),
+                     prefill=PrefillModel(k1=k1, c1=0.01),
+                     decode=dm)
+    return WorkerSpec(perf=perf, kv_capacity=M / kv_tok, max_batch=max_batch,
+                      n_accelerators=n_g, name=f"{hw.name}-tp{n_g}",
+                      kv_bytes_per_token=kv_tok)
 
 
 def _decode_model_for(arch, hw: HardwareSpec, n_g: int,

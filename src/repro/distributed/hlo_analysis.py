@@ -178,7 +178,11 @@ def analyze_hlo(hlo: str, operand_shapes: Optional[Dict[str, str]] = None
                         b = shape_bytes(shape_of.get(om.group(1), "")) or b
                 d[op] = d.get(op, 0.0) + b
                 c += 1
-            dm = re.search(r"=\s*\w+\[([\d,]*)\]\S*\s+dot\(\s*%([\w\.\-]+)",
+            # operands may carry inline shapes (jax>=0.4.3x verbose HLO):
+            #   dot(f32[8,4096]{1,0} %call.20, ...) — prefer the inline lhs
+            # shape, fall back to the module-wide %name -> shape table
+            dm = re.search(r"=\s*\w+\[([\d,]*)\]\S*\s+dot\("
+                           r"\s*(?:(\w+\[[\d,]*\])\S*\s+)?%([\w\.\-]+)",
                            line)
             if dm:
                 res_dims = [int(x) for x in dm.group(1).split(",") if x]
@@ -187,7 +191,7 @@ def analyze_hlo(hlo: str, operand_shapes: Optional[Dict[str, str]] = None
                     out *= x
                 mc = re.search(r"lhs_contracting_dims={([\d,]*)}", line)
                 contract = 1.0
-                lhs = shape_of.get(dm.group(2), "")
+                lhs = dm.group(2) or shape_of.get(dm.group(3), "")
                 ls = _SHAPE_RE.search(lhs)
                 if mc and ls:
                     dims = [int(x) for x in ls.group(2).split(",") if x]

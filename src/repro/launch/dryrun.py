@@ -185,6 +185,8 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # jax returns [dict] on some versions
+            cost = cost[0] if cost else None
         hlo_text = compiled.as_text()
         hlo = analyze_hlo(hlo_text)
         if out_dir:

@@ -1,9 +1,14 @@
 """Serving substrate: paged continuous-batching engine, cluster control
 plane, discrete-event simulator, workload + length prediction."""
 from repro.serving.cluster import ClusterConfig, ServingCluster      # noqa: F401
+from repro.serving.disagg import (DisaggConfig, DisaggResult,        # noqa: F401
+                                  min_cost_disagg,
+                                  simulate_disaggregated)
 from repro.serving.engine import EngineConfig, PagedEngine           # noqa: F401
 from repro.serving.length_predictor import LengthPredictor           # noqa: F401
 from repro.serving.simulator import (SimConfig, SimResult,           # noqa: F401
                                      min_workers_for_slo, simulate)
-from repro.serving.workload import (WorkloadConfig, generate_trace,  # noqa: F401
+from repro.serving.workload import (WorkloadConfig, burst_trace,     # noqa: F401
+                                    diurnal_trace, generate_trace,
+                                    nonhomogeneous_trace,
                                     sample_lengths)

@@ -193,6 +193,7 @@ class ServingCluster:
                 if r.l_out > r.l_pred and not r.repredicted:
                     self.tracker.on_underrun(
                         r, self.predictor.repredict(r.l_in, r.l_out))
+                    w.state.mark_dirty()
             # refit perf models from live traces (workflow step 3)
             self.perf.update_from_traces(w.engine.traces)
         self._detect_stragglers()

@@ -1,0 +1,251 @@
+"""End-to-end prefill/decode disaggregated cluster simulation.
+
+The Splitwise/DistServe topology as a discrete-event model: a *prefill pool*
+admits arrivals under constraint (c) only (TTFT is the prefill pool's whole
+job), finished prefills hand their KV cache to a *decode pool* over an
+interconnect with modeled bandwidth/latency, and the decode pool runs the
+split-phase variant of Algorithm 1 (constraints (b)/(e); no prefill ever
+interferes with decode, which is the point of disaggregation).
+
+This replaces the decode-pool-only ``split_phase`` approximation for cost
+studies: ``min_cost_disagg`` walks the joint (n_prefill, n_decode) frontier
+and returns the cheapest configuration meeting the SLO target, directly
+comparable with the colocated ``min_workers_for_slo`` cost on the same trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.perf_model import PerfModel
+from repro.core.placement import (PlacementConfig, WorkerState,
+                                  best_fit_place, jsq_place)
+from repro.core.request import ReqState, Request
+from repro.core.slo import SLO
+from repro.core.worker_config import WorkerSpec
+from repro.serving.length_predictor import LengthPredictor
+from repro.serving.simulator import SimWorker
+
+
+@dataclasses.dataclass
+class DisaggConfig:
+    heartbeat: float = 0.25
+    policy: str = "aladdin"            # decode-pool placement: aladdin | jsq
+    gamma: float = 0.5
+    theta: float = 0.9
+    kv_transfer_bw: float = 64e9       # bytes/s prefill->decode interconnect
+    kv_transfer_lat: float = 2e-3      # fixed per-handoff latency, s
+    seed: int = 0
+
+
+class PrefillSimWorker:
+    """One prefill-pool worker: a clock and a queue of admitted prompts.
+
+    Admission is constraint (c) alone — the pending prompt tokens plus the
+    candidate must prefill within the TTFT budget (Eq. 2). Queued prompts are
+    batched once per heartbeat, exactly like the colocated simulator's
+    prefill iterations."""
+
+    def __init__(self, wid: int, perf: PerfModel, slo: SLO):
+        self.id = wid
+        self.perf = perf
+        self.slo = slo
+        self.t = 0.0
+        self.queue: List[Request] = []
+        self.pending_tokens = 0
+        self.iters = 0
+
+    def feasible(self, r: Request) -> bool:
+        return float(self.perf.prefill(self.pending_tokens + r.l_in)) \
+            <= self.slo.ttft
+
+    def place(self, r: Request) -> None:
+        r.worker = self.id
+        r.state = ReqState.PLACED
+        self.queue.append(r)
+        self.pending_tokens += r.l_in
+
+    def advance_to(self, t_end: float, t_start: float,
+                   done: List[Request]) -> None:
+        if self.queue:
+            self.t = max(self.t, t_start)
+        while self.queue and self.t < t_end:
+            batch, self.queue = self.queue, []
+            dur = float(self.perf.prefill(sum(r.l_in for r in batch)))
+            self.t += dur
+            self.iters += 1
+            for r in batch:
+                self.pending_tokens -= r.l_in
+                r.t_first_token = self.t     # first token comes from prefill
+                r.l_out = 1
+                done.append(r)
+        if not self.queue:
+            self.t = max(self.t, t_end)
+
+
+@dataclasses.dataclass
+class DisaggResult:
+    n_prefill: int
+    n_decode: int
+    gpu_cost: float
+    attainment: float
+    p99_ttft: float
+    p99_atgt: float
+    mean_transfer: float               # mean KV-handoff time, s
+    finished: int
+    total: int
+
+    def row(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def simulate_disaggregated(trace: Sequence[Request], slo: SLO,
+                           cfg: DisaggConfig,
+                           prefill_spec: WorkerSpec,
+                           decode_spec: WorkerSpec,
+                           n_prefill: int, n_decode: int,
+                           predictor: Optional[LengthPredictor] = None,
+                           observer: Optional[Callable] = None
+                           ) -> DisaggResult:
+    """Simulate ``trace`` on a (n_prefill, n_decode) disaggregated cluster."""
+    kv_tok = prefill_spec.kv_bytes_per_token
+    pool_p = [PrefillSimWorker(i + 1, prefill_spec.perf, slo)
+              for i in range(n_prefill)]
+    dcfg = PlacementConfig(gamma=cfg.gamma, theta=cfg.theta,
+                           kv_capacity=decode_spec.kv_capacity,
+                           max_batch=decode_spec.max_batch, split_phase=True)
+    states_d: List[WorkerState] = []
+    sims_d: Dict[int, SimWorker] = {}
+    for i in range(n_decode):
+        w = WorkerState(1000 + i, dcfg, decode_spec.perf, slo)
+        w.spec = decode_spec
+        states_d.append(w)
+        sims_d[w.id] = SimWorker(w, w.perf, 0.0, split_phase=True)
+
+    trace = sorted(trace, key=lambda r: r.arrival)
+    horizon = max(r.arrival for r in trace) + 240.0
+    queued_p: List[Request] = []       # waiting for prefill-pool admission
+    in_transfer: List[Tuple[float, Request]] = []   # (ready time, request)
+    queued_d: List[Request] = []       # KV arrived, waiting for decode slot
+    finished: List[Request] = []
+    transfers: List[float] = []
+    idx = 0
+    t = 0.0
+    while t < horizon:
+        t_next = t + cfg.heartbeat
+        # only admit requests that have actually arrived by this boundary
+        # (the colocated simulator's intra-beat admission can stamp a first
+        # token before the arrival; the disaggregated path keeps causal time)
+        while idx < len(trace) and trace[idx].arrival <= t:
+            r = trace[idx]
+            r.l_pred = predictor.predict(r.l_in) if predictor else r.l_real
+            queued_p.append(r)
+            idx += 1
+        # prefill placement: constraint (c) only, best-fit (fullest feasible
+        # worker first, mirroring Algorithm 1's bin-packing order)
+        still: List[Request] = []
+        for r in queued_p:
+            ranked = sorted(pool_p, key=lambda w: w.pending_tokens,
+                            reverse=True)
+            for w in ranked:
+                if w.feasible(r):
+                    w.place(r)
+                    break
+            else:
+                still.append(r)
+        queued_p = still
+        # advance the prefill pool; completed prefills enter KV transfer
+        prefilled: List[Request] = []
+        for w in pool_p:
+            w.advance_to(t_next, t, prefilled)
+        for r in prefilled:
+            dt = cfg.kv_transfer_lat \
+                + r.l_in * kv_tok / max(cfg.kv_transfer_bw, 1.0)
+            transfers.append(dt)
+            in_transfer.append((max(r.t_first_token, t) + dt, r))
+        # KV handoffs that completed by this heartbeat join the decode queue
+        in_transfer.sort(key=lambda e: e[0])
+        while in_transfer and in_transfer[0][0] <= t_next:
+            queued_d.append(in_transfer.pop(0)[1])
+        # decode placement: split-phase constraints (b)/(e)
+        still = []
+        for r in queued_d:
+            if cfg.policy == "aladdin":
+                w = best_fit_place(states_d, r, allow_new=False)
+            else:
+                w = jsq_place(states_d, r, allow_new=False)
+            if w is None:
+                still.append(r)
+            else:
+                r.state = ReqState.PLACED
+        queued_d = still
+        for w in states_d:
+            sims_d[w.id].advance_to(t_next, finished, t_start=t)
+        t = t_next
+        if observer is not None:
+            observer(t=t, pool_p=pool_p, states_d=states_d,
+                     queued_p=queued_p, in_transfer=in_transfer,
+                     queued_d=queued_d, finished=finished, arrived=idx)
+        if idx >= len(trace) and not queued_p and not queued_d \
+                and not in_transfer \
+                and all(not w.queue for w in pool_p) \
+                and all(not w.ongoing and not w.new_batch for w in states_d) \
+                and all(not s.preempted for s in sims_d.values()):
+            break
+
+    atgts = [r.atgt() for r in finished if r.atgt() is not None]
+    ttfts = [r.ttft() for r in finished if r.ttft() is not None]
+    ok = [r for r in finished if r.slo_ok(slo)]
+    total = len(trace)
+    return DisaggResult(
+        n_prefill=n_prefill, n_decode=n_decode,
+        gpu_cost=n_prefill * prefill_spec.gpu_cost
+        + n_decode * decode_spec.gpu_cost,
+        attainment=len(ok) / max(total, 1),
+        p99_ttft=float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
+        p99_atgt=float(np.percentile(atgts, 99)) if atgts else float("nan"),
+        mean_transfer=float(np.mean(transfers)) if transfers else 0.0,
+        finished=len(finished), total=total)
+
+
+def min_cost_disagg(trace_fn, slo: SLO, cfg: DisaggConfig,
+                    prefill_spec: WorkerSpec, decode_spec: WorkerSpec,
+                    attain_target: float = 0.99,
+                    max_prefill: int = 8, hi_decode: int = 64,
+                    predictor: Optional[LengthPredictor] = None
+                    ) -> Optional[DisaggResult]:
+    """Walk the joint (n_prefill, n_decode) frontier: for each prefill-pool
+    size, binary-search the minimum decode pool meeting the target, and keep
+    the cheapest feasible point. Returns None if nothing within the bounds
+    attains the target."""
+    best: Optional[DisaggResult] = None
+
+    def attains(res: DisaggResult) -> bool:
+        return res.attainment >= attain_target and res.finished == res.total
+
+    for n_p in range(1, max_prefill + 1):
+        if best is not None and \
+                n_p * prefill_spec.gpu_cost + decode_spec.gpu_cost \
+                >= best.gpu_cost:
+            break                      # every remaining point costs more
+        lo, hi = 1, hi_decode
+        res_hi = simulate_disaggregated(trace_fn(), slo, cfg, prefill_spec,
+                                        decode_spec, n_p, hi,
+                                        predictor=predictor)
+        if not attains(res_hi):
+            continue                   # prefill pool too small at any scale
+        best_np = res_hi
+        while lo < hi:
+            mid = (lo + hi) // 2
+            res = simulate_disaggregated(trace_fn(), slo, cfg, prefill_spec,
+                                         decode_spec, n_p, mid,
+                                         predictor=predictor)
+            if attains(res):
+                best_np, hi = res, mid
+            else:
+                lo = mid + 1
+        if best is None or best_np.gpu_cost < best.gpu_cost:
+            best = best_np
+    return best

@@ -5,12 +5,17 @@ the fitted performance models (Eqs. 2-3); the scheduler (Aladdin best-fit /
 JSQ / power-of-two) places requests at heartbeat boundaries, re-balances
 against prediction error (Algorithm 2), and the autoscaler (Eq. 7) tracks
 demand. Used to measure the minimum worker count that attains the SLOs at a
-given arrival rate — the paper's cost metric."""
+given arrival rate — the paper's cost metric.
+
+Fleets may be heterogeneous: pass ``fleet`` (a list of ``WorkerSpec``) and
+each simulated worker carries its own latency models, KV capacity, batch cap
+and accelerator cost. The legacy (perf, kv_capacity) arguments describe a
+homogeneous fleet and remain the default."""
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -22,6 +27,7 @@ from repro.core.rebalance import ErrorTracker, rebalance
 from repro.core.request import ReqState, Request
 from repro.core.scaling import Autoscaler
 from repro.core.slo import SLO
+from repro.core.worker_config import WorkerSpec
 from repro.serving.length_predictor import LengthPredictor
 
 
@@ -38,7 +44,13 @@ class SimConfig:
 
 
 class SimWorker:
-    """Execution model of one worker: runs iterations in virtual time."""
+    """Execution model of one worker: runs iterations in virtual time.
+
+    The decode loop is event-batched: between finish/preemption/heartbeat
+    events the batch composition is fixed, so each iteration costs O(1)
+    (context sum and KV usage are tracked incrementally; the linear KV model
+    makes current usage h·Σcontext + j·b) and per-request bookkeeping is
+    applied once per segment instead of once per iteration."""
 
     def __init__(self, state: WorkerState, perf: PerfModel, now: float,
                  split_phase: bool):
@@ -49,15 +61,22 @@ class SimWorker:
         self.iters = 0
         self.preempted: List[Request] = []   # KV-overflow victims (vLLM
         self.preemptions = 0                 # recompute-preemption semantics)
+        self._ctx = 0                        # Σ context over state.ongoing
 
     def _kv_now(self) -> float:
         kv = self.perf.kv
-        return sum(float(kv(r.context)) for r in self.state.ongoing)
+        return kv.h * self._ctx + kv.j * len(self.state.ongoing)
+
+    def _admit(self, r: Request) -> None:
+        self.state.ongoing.append(r)
+        self._ctx += r.context
 
     def advance_to(self, t_end: float, finished: List[Request],
                    t_start: Optional[float] = None) -> None:
         w = self.state
         M = w.cfg.kv_capacity
+        kv = self.perf.kv
+        dec = self.perf.decode
         if t_start is not None and (w.new_batch or self.preempted):
             # work placed at the heartbeat boundary cannot start earlier
             self.t = max(self.t, t_start)
@@ -65,8 +84,8 @@ class SimWorker:
             # resume preempted requests when KV frees up (recompute: the
             # prompt AND the already-generated tokens are re-prefilled)
             resume = []
-            while self.preempted and self._kv_now() + float(
-                    self.perf.kv(self.preempted[0].context)) <= 0.9 * M:
+            while self.preempted and self._kv_now() + \
+                    kv.h * self.preempted[0].context + kv.j <= 0.9 * M:
                 resume.append(self.preempted.pop(0))
             # start any newly placed requests (prefill)
             if (w.new_batch or resume) and not self.split_phase:
@@ -83,25 +102,33 @@ class SimWorker:
                     r.t_first_token = self.t
                     r.l_out = 1
                     r.state = ReqState.DECODING
-                    w.ongoing.append(r)
+                    self._admit(r)
                 for r in resume:
                     r.state = ReqState.DECODING
-                    w.ongoing.append(r)
+                    self._admit(r)
                 w.new_batch.clear()
                 self.iters += 1
                 continue
             if w.new_batch and self.split_phase:
-                # decode pool: requests arrive pre-filled
+                # decode pool: requests arrive pre-filled (first token — and
+                # TTFT — may already be stamped by a disaggregated prefill
+                # pool; only stamp it here for decode-pool-only traces)
                 for r in w.new_batch:
-                    r.t_first_token = self.t
+                    if r.t_first_token is None:
+                        r.t_first_token = self.t
+                    else:
+                        # disaggregated handoff: KV transfer + decode-queue
+                        # wait stalls the token stream after the first token,
+                        # so it burns ATGT budget like a prefill stall does
+                        r.t_decode_spent += max(self.t - r.t_first_token, 0.0)
                     r.l_out = max(r.l_out, 1)
                     r.state = ReqState.DECODING
-                    w.ongoing.append(r)
+                    self._admit(r)
                 w.new_batch.clear()
             if self.split_phase and resume:
                 for r in resume:
                     r.state = ReqState.DECODING
-                    w.ongoing.append(r)
+                    self._admit(r)
             if not w.ongoing:
                 self.t = t_end
                 break
@@ -110,25 +137,44 @@ class SimWorker:
             while self._kv_now() > M and len(w.ongoing) > 1:
                 victim = max(w.ongoing, key=lambda r: r.arrival)
                 w.ongoing.remove(victim)
+                self._ctx -= victim.context
                 victim.state = ReqState.QUEUED
                 self.preempted.append(victim)
                 self.preemptions += 1
+            # decode segment: batch is fixed until the next finish /
+            # KV-overflow / heartbeat event
             b = len(w.ongoing)
-            total_ctx = sum(r.context for r in w.ongoing)
-            dur = float(self.perf.decode(b, total_ctx))
-            self.t += dur
-            self.iters += 1
+            n_fin = min(max(r.l_real - r.l_out, 1) for r in w.ongoing)
+            C = self._ctx
+            k = 0
+            seg = 0.0
+            while k < n_fin and self.t < t_end:
+                if k > 0 and kv.h * C + kv.j * b > M and b > 1:
+                    break               # preemption due before next iteration
+                dur = dec.k2 * C + dec.c2 * b + dec.c3
+                self.t += dur
+                seg += dur
+                C += b
+                k += 1
+            self._ctx = C
+            self.iters += k
+            for r in w.ongoing:
+                r.l_out += k
+                r.t_decode_spent += seg
             for r in list(w.ongoing):
-                r.l_out += 1
-                r.t_decode_spent += dur
                 if r.l_out >= r.l_real:
                     r.state = ReqState.FINISHED
                     r.t_finish = self.t
                     w.ongoing.remove(r)
+                    self._ctx -= r.context
                     finished.append(r)
             # preempted requests' ATGT clocks also advance (they are stalled)
             for r in self.preempted:
-                r.t_decode_spent += dur
+                r.t_decode_spent += seg
+        # this call mutated w.ongoing in ways the length-keyed aggregate
+        # cache cannot see (a finish + a resume can swap membership at equal
+        # length) — force one recompute before the next placement pass
+        w.mark_dirty()
 
 
 @dataclasses.dataclass
@@ -141,6 +187,7 @@ class SimResult:
     finished: int
     total: int
     moves: int = 0
+    gpu_cost: float = 0.0            # Σ accelerators over the fleet
 
     def row(self) -> Dict:
         return dataclasses.asdict(self)
@@ -149,27 +196,51 @@ class SimResult:
 def simulate(trace: Sequence[Request], perf: PerfModel, slo: SLO,
              kv_capacity: float, cfg: SimConfig,
              n_workers: Optional[int] = None,
-             predictor: Optional[LengthPredictor] = None) -> SimResult:
-    """Run the serving simulation. n_workers fixed (None = elastic: open a
-    worker whenever placement fails, i.e. the min-cost oracle mode)."""
+             predictor: Optional[LengthPredictor] = None,
+             fleet: Optional[Sequence[WorkerSpec]] = None,
+             observer: Optional[Callable] = None) -> SimResult:
+    """Run the serving simulation.
+
+    n_workers fixed (None = elastic: open a worker whenever placement fails,
+    i.e. the min-cost oracle mode). ``fleet`` overrides the homogeneous
+    (perf, kv_capacity) description with exactly one WorkerSpec per worker —
+    a fixed (possibly heterogeneous) fleet; elastic mode requires fleet=None
+    (sweep fleet sizes via min_workers_for_slo's fleet_fn instead).
+    ``observer(t, workers, sims, queued, finished, arrived)`` is called at
+    the end of every heartbeat (invariant checks in tests)."""
     rng = np.random.default_rng(cfg.seed)
-    pcfg = PlacementConfig(gamma=cfg.gamma, theta=cfg.theta,
-                           kv_capacity=kv_capacity, max_batch=cfg.max_batch,
-                           split_phase=cfg.split_phase)
+    specs = list(fleet) if fleet is not None else None
+    default_spec = WorkerSpec(perf=perf, kv_capacity=kv_capacity,
+                              max_batch=cfg.max_batch)
     tracker = ErrorTracker()
     wid_counter = [0]
 
-    def factory() -> WorkerState:
+    def _new_worker(spec: WorkerSpec) -> WorkerState:
         wid_counter[0] += 1
-        return WorkerState(wid_counter[0], pcfg, perf, slo)
+        pcfg = PlacementConfig(gamma=cfg.gamma, theta=cfg.theta,
+                               kv_capacity=spec.kv_capacity,
+                               max_batch=spec.max_batch,
+                               split_phase=cfg.split_phase)
+        w = WorkerState(wid_counter[0], pcfg, spec.perf, slo)
+        w.spec = spec
+        return w
+
+    def factory() -> WorkerState:
+        return _new_worker(default_spec)
 
     workers: List[WorkerState] = []
     sims: Dict[int, SimWorker] = {}
-    if n_workers:
+    if specs is not None:
+        for spec in specs:
+            w = _new_worker(spec)
+            workers.append(w)
+            sims[w.id] = SimWorker(w, w.perf, 0.0, cfg.split_phase)
+    elif n_workers:
         for _ in range(n_workers):
             w = factory()
             workers.append(w)
-            sims[w.id] = SimWorker(w, perf, 0.0, cfg.split_phase)
+            sims[w.id] = SimWorker(w, w.perf, 0.0, cfg.split_phase)
+    elastic = specs is None and not n_workers
 
     trace = sorted(trace, key=lambda r: r.arrival)
     horizon = max(r.arrival for r in trace) + 240.0
@@ -193,10 +264,11 @@ def simulate(trace: Sequence[Request], perf: PerfModel, slo: SLO,
                 if r.l_out > r.l_pred and not r.repredicted and predictor:
                     tracker.on_underrun(r, predictor.repredict(r.l_in,
                                                                r.l_out))
+                    w.mark_dirty()
         # placement
         still: List[Request] = []
         for r in queued:
-            fac = None if n_workers else factory
+            fac = factory if elastic else None
             if cfg.policy == "aladdin":
                 w = best_fit_place(workers, r, allow_new=fac is not None,
                                    new_worker_factory=fac)
@@ -212,7 +284,7 @@ def simulate(trace: Sequence[Request], perf: PerfModel, slo: SLO,
             else:
                 r.state = ReqState.PLACED
                 if w.id not in sims:
-                    sims[w.id] = SimWorker(w, perf, t, cfg.split_phase)
+                    sims[w.id] = SimWorker(w, w.perf, t, cfg.split_phase)
         queued = still
         if cfg.rebalance and cfg.policy == "aladdin":
             moves += rebalance(workers, tracker)
@@ -227,6 +299,9 @@ def simulate(trace: Sequence[Request], perf: PerfModel, slo: SLO,
             if predictor:
                 predictor.observe(r.l_in, r.l_real)
         t = t_next
+        if observer is not None:
+            observer(t=t, workers=workers, sims=sims, queued=queued,
+                     finished=finished, arrived=idx)
         if idx >= len(trace) and not queued \
                 and all(not w.ongoing and not w.new_batch for w in workers) \
                 and all(not s.preempted for s in sims.values()):
@@ -243,21 +318,29 @@ def simulate(trace: Sequence[Request], perf: PerfModel, slo: SLO,
         p99_atgt=float(np.percentile(atgts, 99)) if atgts else float("nan"),
         p99_ttft=float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
         mean_atgt=float(np.mean(atgts)) if atgts else float("nan"),
-        finished=len(finished), total=total, moves=moves)
+        finished=len(finished), total=total, moves=moves,
+        gpu_cost=sum(w.spec.n_accelerators for w in workers))
 
 
 def min_workers_for_slo(trace_fn, perf: PerfModel, slo: SLO,
                         kv_capacity: float, cfg: SimConfig,
                         attain_target: float = 0.99, lo: int = 1,
                         hi: int = 512,
-                        predictor: Optional[LengthPredictor] = None) -> int:
+                        predictor: Optional[LengthPredictor] = None,
+                        fleet_fn: Optional[Callable[[int],
+                                                    Sequence[WorkerSpec]]]
+                        = None) -> int:
     """Binary search the minimum fixed worker count attaining the SLO target
-    (the paper's cost metric in Figs. 11/12)."""
+    (the paper's cost metric in Figs. 11/12). ``fleet_fn(n)`` maps a worker
+    count to a (possibly heterogeneous) fleet — e.g. an A100/V100 mix at a
+    fixed ratio; the default is n homogeneous (perf, kv_capacity) workers."""
     attain_hist = []
 
     def ok(n: int) -> bool:
-        res = simulate(trace_fn(), perf, slo, kv_capacity, cfg, n_workers=n,
-                       predictor=predictor)
+        fl = fleet_fn(n) if fleet_fn is not None else None
+        res = simulate(trace_fn(), perf, slo, kv_capacity, cfg,
+                       n_workers=None if fl is not None else n,
+                       predictor=predictor, fleet=fl)
         attain_hist.append((n, res.attainment))
         return res.attainment >= attain_target and res.finished == res.total
 

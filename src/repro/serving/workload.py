@@ -8,7 +8,7 @@ CDFs shift only slightly across prompt-length bins)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional
+from typing import Callable, Iterator, List, Optional
 
 import numpy as np
 
@@ -25,6 +25,8 @@ class WorkloadConfig:
     out_mu: float = 5.1                 # ~164 median
     out_sigma: float = 0.9
     out_in_corr: float = 0.15           # mild coupling of ln-lengths
+    tail_frac: float = 0.0              # fraction of Pareto-tail outputs
+    tail_alpha: float = 1.5             # Pareto shape (lower = heavier)
     seed: int = 0
 
 
@@ -35,6 +37,13 @@ def sample_lengths(cfg: WorkloadConfig, n: int, rng=None):
         * rng.standard_normal(n)
     l_in = np.exp(cfg.in_mu + cfg.in_sigma * z1).astype(np.int64)
     l_out = np.exp(cfg.out_mu + cfg.out_sigma * z2).astype(np.int64)
+    if cfg.tail_frac > 0:
+        # heavy-tail mixture: a Pareto(α) share of outputs models the long
+        # agentic/code generations the lognormal body under-represents
+        tail = rng.random(n) < cfg.tail_frac
+        pareto = (np.exp(cfg.out_mu)
+                  * (1.0 + rng.pareto(cfg.tail_alpha, n))).astype(np.int64)
+        l_out = np.where(tail, pareto, l_out)
     l_in = np.clip(l_in, 4, cfg.max_context // 2)
     l_out = np.clip(l_out, 4, cfg.max_context // 2)
     return l_in, l_out
@@ -52,3 +61,55 @@ def generate_trace(cfg: WorkloadConfig,
     l_in, l_out = sample_lengths(cfg, len(arrivals), rng)
     return [Request(l_in=int(a), l_pred=0, l_real=int(b), arrival=float(t))
             for a, b, t in zip(l_in, l_out, arrivals)]
+
+
+def nonhomogeneous_trace(cfg: WorkloadConfig,
+                         rate_fn: Callable[[float], float],
+                         rate_max: float) -> List[Request]:
+    """Non-homogeneous Poisson arrivals via Lewis-Shedler thinning: draw a
+    homogeneous stream at rate_max, keep each point with probability
+    rate_fn(t) / rate_max."""
+    rng = np.random.default_rng(cfg.seed)
+    scale = 1.0 / max(rate_max, 1e-9)
+    chunk = max(int(rate_max * cfg.duration * 1.5), 16)
+    gaps = rng.exponential(scale, chunk)
+    # keep drawing until the candidate stream covers the whole horizon —
+    # a fixed draw silently truncates the trace tail on unlucky seeds
+    while gaps.sum() < cfg.duration:
+        gaps = np.concatenate([gaps, rng.exponential(scale, chunk)])
+    cand = np.cumsum(gaps)
+    cand = cand[cand < cfg.duration]
+    keep = rng.random(len(cand)) < np.array(
+        [rate_fn(float(t)) for t in cand]) / rate_max
+    arrivals = cand[keep]
+    l_in, l_out = sample_lengths(cfg, len(arrivals), rng)
+    return [Request(l_in=int(a), l_pred=0, l_real=int(b), arrival=float(t))
+            for a, b, t in zip(l_in, l_out, arrivals)]
+
+
+def burst_trace(cfg: WorkloadConfig, burst_rate: float,
+                burst_start: float, burst_duration: float) -> List[Request]:
+    """Base-rate stream with a rectangular rate spike (flash crowd): the
+    demand change the Eq. 7 autoscaler's change-point detector must catch."""
+    base = cfg.mean_rate
+
+    def rate_fn(t: float) -> float:
+        return burst_rate if burst_start <= t < burst_start + burst_duration \
+            else base
+
+    return nonhomogeneous_trace(cfg, rate_fn, max(base, burst_rate))
+
+
+def diurnal_trace(cfg: WorkloadConfig, amplitude: float = 0.5,
+                  period: Optional[float] = None,
+                  phase: float = 0.0) -> List[Request]:
+    """Sinusoidal day/night demand: rate(t) = mean·(1 + A·sin(2πt/period)).
+    period defaults to the trace duration (one full cycle)."""
+    period = period or cfg.duration
+    a = min(max(amplitude, 0.0), 1.0)
+
+    def rate_fn(t: float) -> float:
+        return cfg.mean_rate * (1.0 + a * np.sin(2 * np.pi * t / period
+                                                 + phase))
+
+    return nonhomogeneous_trace(cfg, rate_fn, cfg.mean_rate * (1.0 + a))

@@ -1,0 +1,86 @@
+"""Autoscaler (Eq. 7) edge cases: empty history, constant streams, clamping,
+and exact fit recovery — including the O(1) running-sum fit's trim/rebuild
+path."""
+import numpy as np
+import pytest
+
+from repro.core import Autoscaler, AutoscalerConfig
+
+
+def test_empty_history_falls_back_to_min_workers():
+    sc = Autoscaler(AutoscalerConfig(min_workers=3, max_workers=10))
+    assert sc.predict_workers(50.0) == 3
+    assert sc.k5 is None and sc.c5 is None
+
+
+def test_last_needed_fallback_below_rate_floor():
+    sc = Autoscaler(AutoscalerConfig(min_workers=1, max_workers=100,
+                                     headroom=1.5))
+    # below the rate floor (no fit yet): most recent requirement + head-room
+    assert sc.predict_workers(1.0, last_needed=4) == 6
+
+
+def test_constant_rate_no_change_point():
+    sc = Autoscaler()
+    for _ in range(40):
+        sc.rates.append(12.0)
+    assert not sc.change_point()
+    # mild noise around a constant mean must not trigger either
+    rng = np.random.default_rng(0)
+    sc2 = Autoscaler()
+    for _ in range(40):
+        sc2.rates.append(12.0 + float(rng.normal(0, 0.2)))
+    assert not sc2.change_point()
+
+
+def test_change_point_on_demand_jump():
+    sc = Autoscaler()
+    for _ in range(16):
+        sc.rates.append(5.0)
+    for _ in range(sc.cfg.change_window):
+        sc.rates.append(25.0)
+    assert sc.change_point()
+
+
+def test_predict_clamps_to_min_and_max():
+    sc = Autoscaler(AutoscalerConfig(min_workers=2, max_workers=8))
+    for r in (20.0, 40.0, 60.0, 80.0, 100.0):
+        sc.observe(r, int(0.5 * r + 1))
+    assert sc.predict_workers(1000.0) == 8     # ceil(501) -> max
+    assert sc.predict_workers(11.0) >= 2       # above floor, small fit value
+    sc2 = Autoscaler(AutoscalerConfig(min_workers=2, max_workers=8))
+    assert sc2.predict_workers(0.0, last_needed=0) == 2   # floor clamp
+
+
+def test_eq7_exact_recovery_on_linear_data():
+    sc = Autoscaler()
+    # noiseless y = 0.5 r + 3 at even rates (integer worker counts)
+    for r in range(12, 60, 2):
+        sc.observe(float(r), int(0.5 * r + 3))
+    assert sc.k5 == pytest.approx(0.5, abs=1e-9)
+    assert sc.c5 == pytest.approx(3.0, abs=1e-7)
+    assert sc.predict_workers(40.0) == 23      # ceil(0.5*40 + 3)
+
+
+def test_constant_rate_history_keeps_previous_fit():
+    """A degenerate design matrix (all rates equal) must not produce a wild
+    fit — the previous coefficients are kept."""
+    sc = Autoscaler()
+    for r in range(12, 28, 2):
+        sc.observe(float(r), int(0.5 * r + 3))
+    k5, c5 = sc.k5, sc.c5
+    sc2 = Autoscaler()
+    for _ in range(10):
+        sc2.observe(20.0, 13)
+    assert sc2.k5 is None or np.isfinite(sc2.k5)
+    assert sc.k5 == k5 and sc.c5 == c5
+
+
+def test_incremental_fit_survives_history_trim():
+    sc = Autoscaler()
+    rng = np.random.default_rng(1)
+    for i in range(5000):                      # crosses the 4096 trim point
+        r = float(rng.uniform(12, 80))
+        sc.observe(r, int(round(0.5 * r + 3)))
+    assert sc.k5 == pytest.approx(0.5, abs=0.02)
+    assert sc.c5 == pytest.approx(3.0, abs=1.0)

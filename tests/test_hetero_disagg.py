@@ -1,0 +1,174 @@
+"""Heterogeneous-fleet and disaggregated-cluster simulation, end to end:
+mixed A100/V100 min_workers_for_slo completes, per-worker budgets are
+respected, the prefill/decode pipeline conserves requests and reports a
+joint (n_prefill, n_decode) cost."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (A100_80G, DecodeModel, KVModel, PAPER_SLOS,
+                        PerfModel, PlacementConfig, PrefillModel, Request,
+                        SLO, V100_32G, WorkerState, best_fit_place,
+                        make_worker_spec)
+from repro.core.worker_config import WorkerSpec
+from repro.serving import (DisaggConfig, SimConfig, WorkloadConfig,
+                           generate_trace, min_cost_disagg,
+                           min_workers_for_slo, simulate,
+                           simulate_disaggregated)
+
+ARCH = get_arch("llama2-70b")
+SLO_70B = PAPER_SLOS["llama2-70b"]
+WCFG = WorkloadConfig(mean_rate=2.0, duration=15.0, seed=3, in_mu=5.0,
+                      in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+
+
+@pytest.fixture(scope="module")
+def specs():
+    a100 = make_worker_spec(ARCH, A100_80G, SLO_70B, mean_context=450.0)
+    v100 = make_worker_spec(ARCH, V100_32G, SLO_70B, n_g=8,
+                            mean_context=450.0)
+    return a100, v100
+
+
+def test_worker_specs_are_heterogeneous(specs):
+    a100, v100 = specs
+    assert a100.n_accelerators != v100.n_accelerators
+    assert a100.kv_capacity != v100.kv_capacity
+    assert a100.perf.decode.k2 != v100.perf.decode.k2
+
+
+def test_mixed_fleet_simulation_completes(specs):
+    a100, v100 = specs
+    fleet = [a100, v100, a100, v100]
+    res = simulate(generate_trace(WCFG), a100.perf, SLO_70B,
+                   a100.kv_capacity, SimConfig(), fleet=fleet)
+    assert res.finished == res.total
+    assert res.gpu_cost == sum(s.n_accelerators for s in fleet)
+
+
+def test_mixed_fleet_min_workers_for_slo(specs):
+    a100, v100 = specs
+
+    def fleet_fn(n):
+        return [(a100 if i % 2 == 0 else v100) for i in range(n)]
+
+    n = min_workers_for_slo(lambda: generate_trace(WCFG), a100.perf, SLO_70B,
+                            a100.kv_capacity, SimConfig(), 0.9, hi=16,
+                            fleet_fn=fleet_fn)
+    assert 1 <= n <= 16
+    # the returned fleet attains what the search claims
+    res = simulate(generate_trace(WCFG), a100.perf, SLO_70B,
+                   a100.kv_capacity, SimConfig(), fleet=fleet_fn(n))
+    assert res.attainment >= 0.9 and res.finished == res.total
+
+
+def test_mixed_fleet_respects_per_worker_budgets(specs):
+    a100, v100 = specs
+    fleet = [a100, v100]
+
+    def observer(t, workers, sims, queued, finished, arrived):
+        caps = {w.id: (w.cfg.max_batch, w.cfg.kv_capacity) for w in workers}
+        assert len(set(caps.values())) == 2, "fleet must stay heterogeneous"
+        for w in workers:
+            assert w.batch_size <= w.cfg.max_batch
+
+    simulate(generate_trace(WCFG), a100.perf, SLO_70B, a100.kv_capacity,
+             SimConfig(), fleet=fleet, observer=observer)
+
+
+def test_best_fit_respects_per_worker_kv_budget():
+    """A request whose KV trajectory only fits the big worker must land on
+    the big worker even when the small one is emptier."""
+    perf = PerfModel(kv=KVModel(h=1.0, j=0.0),
+                     prefill=PrefillModel(k1=1e-5, c1=1e-3),
+                     decode=DecodeModel(k2=1e-8, c2=1e-6, c3=1e-4))
+    slo = SLO(ttft=2.0, atgt=0.1)
+    small = WorkerState(1, PlacementConfig(theta=1.0, kv_capacity=100.0,
+                                           max_batch=8), perf, slo)
+    big = WorkerState(2, PlacementConfig(theta=1.0, kv_capacity=1e5,
+                                         max_batch=8), perf, slo)
+    big.place(Request(l_in=50, l_pred=50))      # big is the fuller bin
+    r = Request(l_in=400, l_pred=400)           # kv peak 800 > small's 100
+    w = best_fit_place([small, big], r, allow_new=False)
+    assert w is big
+    assert not small.new_batch
+
+
+def test_best_fit_respects_per_worker_ttft_budget():
+    """Constraint (c) binds per worker: a slow-prefill worker is infeasible
+    for a prompt a fast worker accepts."""
+    slo = SLO(ttft=0.5, atgt=0.1)
+    slow = PerfModel(kv=KVModel(h=1.0, j=0.0),
+                     prefill=PrefillModel(k1=1e-2, c1=0.0),   # 10ms/token
+                     decode=DecodeModel(k2=1e-8, c2=1e-6, c3=1e-4))
+    fast = PerfModel(kv=KVModel(h=1.0, j=0.0),
+                     prefill=PrefillModel(k1=1e-5, c1=0.0),
+                     decode=DecodeModel(k2=1e-8, c2=1e-6, c3=1e-4))
+    cfg = PlacementConfig(theta=1.0, kv_capacity=1e6, max_batch=8)
+    w_slow = WorkerState(1, cfg, slow, slo)
+    w_fast = WorkerState(2, cfg, fast, slo)
+    r = Request(l_in=200, l_pred=50)            # 2s on slow, 2ms on fast
+    w = best_fit_place([w_slow, w_fast], r, allow_new=False)
+    assert w is w_fast
+
+
+# ---- disaggregated pipeline --------------------------------------------------
+
+def test_disagg_completes_and_conserves(specs):
+    a100, _ = specs
+    trace = generate_trace(WCFG)
+    total = len(trace)
+
+    def observer(t, pool_p, states_d, queued_p, in_transfer, queued_d,
+                 finished, arrived):
+        in_prefill = sum(len(w.queue) for w in pool_p)
+        in_decode = sum(len(w.ongoing) + len(w.new_batch) for w in states_d)
+        assert len(finished) + len(queued_p) + in_prefill \
+            + len(in_transfer) + len(queued_d) + in_decode \
+            + (total - arrived) == total, f"request leak at t={t}"
+
+    res = simulate_disaggregated(trace, SLO_70B, DisaggConfig(), a100, a100,
+                                 n_prefill=2, n_decode=4, observer=observer)
+    assert res.finished == res.total == total
+    assert res.mean_transfer > 0.0
+    assert res.gpu_cost == 6 * a100.n_accelerators
+    for r in trace:
+        assert r.t_first_token is not None and r.t_finish is not None
+        assert r.arrival <= r.t_first_token <= r.t_finish + 1e-9
+        assert r.l_out == r.l_real
+
+
+def test_disagg_deterministic(specs):
+    a100, _ = specs
+
+    def once():
+        return simulate_disaggregated(generate_trace(WCFG), SLO_70B,
+                                      DisaggConfig(), a100, a100,
+                                      n_prefill=1, n_decode=3)
+
+    assert dataclasses.asdict(once()) == dataclasses.asdict(once())
+
+
+def test_disagg_transfer_time_scales_with_bandwidth(specs):
+    a100, _ = specs
+    fast = simulate_disaggregated(generate_trace(WCFG), SLO_70B,
+                                  DisaggConfig(kv_transfer_bw=640e9), a100,
+                                  a100, n_prefill=1, n_decode=3)
+    slow = simulate_disaggregated(generate_trace(WCFG), SLO_70B,
+                                  DisaggConfig(kv_transfer_bw=6.4e9), a100,
+                                  a100, n_prefill=1, n_decode=3)
+    assert slow.mean_transfer > fast.mean_transfer
+
+
+def test_min_cost_disagg_frontier(specs):
+    a100, _ = specs
+    best = min_cost_disagg(lambda: generate_trace(WCFG), SLO_70B,
+                           DisaggConfig(), a100, a100, 0.9, max_prefill=4,
+                           hi_decode=16)
+    assert best is not None
+    assert best.attainment >= 0.9 and best.finished == best.total
+    assert best.n_prefill >= 1 and best.n_decode >= 1
+    assert best.gpu_cost == (best.n_prefill + best.n_decode) \
+        * a100.n_accelerators

@@ -2,6 +2,9 @@
 import math
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (DecodeModel, KVModel, PerfModel, PlacementConfig,

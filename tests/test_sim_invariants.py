@@ -1,0 +1,116 @@
+"""Simulator determinism + conservation invariants (observer-hook based):
+same seed => identical SimResult; every request is accounted for at every
+heartbeat; finished requests have a consistent timeline."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (DecodeModel, KVModel, PerfModel, PrefillModel,
+                        Request, SLO)
+from repro.serving import SimConfig, WorkloadConfig, generate_trace, simulate
+from repro.serving.length_predictor import LengthPredictor
+from repro.serving.workload import sample_lengths
+
+
+def paper_like_perf():
+    return PerfModel(kv=KVModel(h=1.0, j=0.0),
+                     prefill=PrefillModel(k1=2.4e-4, c1=8e-3),
+                     decode=DecodeModel(k2=1.2e-6, c2=2.8e-4, c3=8e-3))
+
+
+def make_trace(rate=4.0, seed=0, duration=20.0):
+    return generate_trace(WorkloadConfig(mean_rate=rate, duration=duration,
+                                         seed=seed))
+
+
+def fitted_predictor(seed=99):
+    cfg = WorkloadConfig(seed=seed)
+    li, lo = sample_lengths(cfg, 3000)
+    p = LengthPredictor()
+    p.fit(li, lo)
+    return p
+
+
+SLO_EASY = SLO(ttft=1.5, atgt=0.05)
+
+
+@pytest.mark.parametrize("policy", ["aladdin", "jsq", "po2"])
+@pytest.mark.parametrize("split", [False, True])
+def test_same_seed_identical_result(policy, split):
+    cfg = SimConfig(policy=policy, split_phase=split)
+
+    def once():
+        return simulate(make_trace(seed=7), paper_like_perf(), SLO_EASY,
+                        2e5, cfg, n_workers=4,
+                        predictor=fitted_predictor())
+
+    assert dataclasses.asdict(once()) == dataclasses.asdict(once())
+
+
+def test_conservation_every_heartbeat():
+    trace = make_trace(seed=3)
+    total = len(trace)
+    beats = []
+
+    def observer(t, workers, sims, queued, finished, arrived):
+        in_flight = sum(len(w.ongoing) + len(w.new_batch) for w in workers)
+        preempted = sum(len(s.preempted) for s in sims.values())
+        not_arrived = total - arrived
+        assert len(finished) + len(queued) + in_flight + preempted \
+            + not_arrived == total, f"request leak at t={t}"
+        beats.append(t)
+
+    res = simulate(trace, paper_like_perf(), SLO_EASY, 2e5,
+                   SimConfig(), n_workers=4, predictor=fitted_predictor(),
+                   observer=observer)
+    assert len(beats) > 10
+    assert res.finished == res.total == total
+
+
+def test_conservation_under_kv_pressure():
+    """Same invariant when the KV capacity is tight enough to force
+    preemptions (requests transit the preempted list and come back)."""
+    trace = make_trace(rate=6.0, seed=5)
+    total = len(trace)
+    preempt_seen = [0]
+
+    def observer(t, workers, sims, queued, finished, arrived):
+        in_flight = sum(len(w.ongoing) + len(w.new_batch) for w in workers)
+        preempted = sum(len(s.preempted) for s in sims.values())
+        preempt_seen[0] = max(preempt_seen[0],
+                              sum(s.preemptions for s in sims.values()))
+        assert len(finished) + len(queued) + in_flight + preempted \
+            + (total - arrived) == total
+
+    res = simulate(trace, paper_like_perf(), SLO_EASY, 4e3,
+                   SimConfig(policy="jsq", theta=1.0), n_workers=3,
+                   observer=observer)
+    assert res.finished == res.total
+    assert preempt_seen[0] > 0, "scenario must actually exercise preemption"
+
+
+def test_finished_request_timeline():
+    trace = make_trace(seed=11)
+    res = simulate(trace, paper_like_perf(), SLO_EASY, 2e5,
+                   SimConfig(), n_workers=4, predictor=fitted_predictor())
+    assert res.finished == len(trace)
+    hb = SimConfig().heartbeat
+    for r in trace:
+        assert r.t_first_token is not None and r.t_finish is not None
+        # the colocated heartbeat loop admits requests arriving inside the
+        # current beat at the beat's start, so the first token can lead the
+        # arrival by at most one heartbeat
+        assert r.arrival - hb <= r.t_first_token <= r.t_finish + 1e-9
+        assert r.l_out == r.l_real
+        assert r.t_decode_spent <= r.t_finish - r.arrival + hb + 1e-9
+        assert (r.atgt() or 0.0) >= 0.0
+
+
+def test_elastic_mode_conserves_and_finishes():
+    trace = make_trace(rate=6.0, seed=13)
+    res = simulate(trace, paper_like_perf(), SLO_EASY, 2e5,
+                   SimConfig(), n_workers=None, predictor=fitted_predictor())
+    assert res.finished == res.total
+    assert res.n_workers_peak >= 1
+    assert res.gpu_cost >= res.n_workers_peak  # default spec: 1 accel/worker
