@@ -21,6 +21,7 @@ GPU cost = workers x accelerators-per-worker. Latency models per worker
 config come from Eqs. 5-6 (core.worker_config)."""
 from __future__ import annotations
 
+import json
 import time
 from typing import Dict, List
 
@@ -32,14 +33,37 @@ from repro.core.slo import PAPER_SLOS
 from repro.core.worker_config import (A100_80G, V100_32G, make_worker_spec,
                                       optimal_worker_config)
 from repro.serving.disagg import DisaggConfig, min_cost_disagg
+from repro.serving.forecast import (ForecastConfig, ForecastPolicy,
+                                    ReactivePolicy, ScaleSimConfig,
+                                    SeasonalNaiveForecaster,
+                                    simulate_autoscaled)
 from repro.serving.length_predictor import LengthPredictor
 from repro.serving.simulator import (SimConfig, min_workers_for_slo,
                                      simulate)
 from repro.serving.workload import (WorkloadConfig, burst_trace,
-                                    generate_trace, sample_lengths)
+                                    diurnal_trace, generate_trace,
+                                    sample_lengths)
 
 MODEL = "llama2-70b"
 ATTAIN = 0.98
+
+
+def _write_bench(scenario: str, rows: List[Dict]) -> None:
+    """Record the scenario's cost/attainment rows as BENCH_<scenario>.json
+    so the perf trajectory across PRs is on disk, not just in stdout.
+    Non-finite floats become null: bare NaN tokens are not valid JSON."""
+    def clean(v):
+        if isinstance(v, float) and not np.isfinite(v):
+            return None
+        return v
+
+    path = f"BENCH_{scenario}.json"
+    with open(path, "w") as f:
+        json.dump({"scenario": scenario,
+                   "rows": [{k: clean(v) for k, v in row.items()}
+                            for row in rows]},
+                  f, indent=1, default=float)
+    print(f"wrote {path} ({len(rows)} rows)")
 
 
 def _perf_for(arch, n_g: int) -> PerfModel:
@@ -131,6 +155,7 @@ def run(verbose: bool = True, rates=(2.0, 5.0, 10.0),
     if verbose:
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    _write_bench("fig", rows)
     return rows
 
 
@@ -163,21 +188,32 @@ def run_hetero(verbose: bool = True, rates=(2.0, 5.0),
                 costs[label] = float("nan")
         rows.append({
             "name": f"hetero_rate{rate:g}", "us_per_call": 0.0,
+            "gpu_cost": costs["mixed"],
             "derived": (f"gpus_mixed={costs['mixed']:g};"
                         f"gpus_a100={costs['a100']:g}")})
     if verbose:
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    _write_bench("hetero", rows)
     return rows
 
 
 def run_disagg(verbose: bool = True, rates=(2.0, 5.0),
                duration: float = 25.0) -> List[Dict]:
     """End-to-end disaggregated (n_prefill, n_decode) cost vs the colocated
-    minimum on the same trace."""
+    minimum on the same trace, plus a 2-pool heterogeneous frontier (A100 +
+    V100 pools, affine router) against the homogeneous one."""
     arch = get_arch(MODEL)
     slo = PAPER_SLOS[MODEL]
     spec = make_worker_spec(arch, A100_80G, slo, mean_context=450.0)
+    v100 = make_worker_spec(arch, V100_32G, slo, n_g=8, mean_context=450.0)
+
+    def mix(n: int):
+        # A100-heavy split: the cheap pool absorbs short prompts when the
+        # affine router finds that worth it
+        na = (n + 1) // 2
+        return [(spec, na), (v100, n - na)]
+
     dcfg = DisaggConfig()
     rows: List[Dict] = []
     for rate in rates:
@@ -193,17 +229,29 @@ def run_disagg(verbose: bool = True, rates=(2.0, 5.0),
         best = min_cost_disagg(_trace_fn(rate, duration=duration), slo, dcfg,
                                spec, spec, ATTAIN, max_prefill=6,
                                hi_decode=64, predictor=_predictor())
+        het = min_cost_disagg(_trace_fn(rate, duration=duration), slo, dcfg,
+                              attain_target=ATTAIN, max_prefill=6,
+                              hi_decode=64, predictor=_predictor(),
+                              prefill_pool_fn=mix, decode_pool_fn=mix) \
+            if best is not None else None
         if best is None:
             derived = f"colocated={cost_co:g};disagg=nan"
         else:
             derived = (f"colocated={cost_co:g};disagg={best.gpu_cost:g};"
                        f"n_prefill={best.n_prefill};n_decode={best.n_decode};"
-                       f"transfer_ms={best.mean_transfer*1e3:.2f}")
+                       f"transfer_ms={best.mean_transfer*1e3:.2f};"
+                       + (f"hetero={het.gpu_cost:g};het_mix={het.pool_mix}"
+                          if het is not None else "hetero=nan"))
         rows.append({"name": f"disagg_rate{rate:g}", "us_per_call": 0.0,
+                     "gpu_cost": best.gpu_cost if best else float("nan"),
+                     "attainment": best.attainment if best else float("nan"),
+                     "p99_ttft": best.p99_ttft if best else float("nan"),
+                     "p99_atgt": best.p99_atgt if best else float("nan"),
                      "derived": derived})
     if verbose:
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    _write_bench("disagg", rows)
     return rows
 
 
@@ -233,6 +281,7 @@ def run_hot_loop(verbose: bool = True, rate: float = 8.0,
                        f"finished={res.finished}/{res.total}")}
     if verbose:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    _write_bench("hot_loop", [row])
     return [row]
 
 
@@ -251,29 +300,96 @@ def run_burst(verbose: bool = True, duration: float = 30.0) -> List[Dict]:
     burst = simulate(btrace, spec.perf, slo, spec.kv_capacity,
                      SimConfig(), n_workers=None, predictor=_predictor())
     row = {"name": "burst_elastic", "us_per_call": 0.0,
+           "attainment": burst.attainment,
            "derived": (f"steady_peak={steady.n_workers_peak};"
                        f"burst_peak={burst.n_workers_peak};"
                        f"burst_attain={burst.attainment:.3f}")}
     if verbose:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    _write_bench("burst", [row])
     return [row]
 
 
-def run_all(verbose: bool = True, smoke: bool = False) -> List[Dict]:
-    """All scenarios; smoke=True shrinks traces for a <60s CI canary."""
+def run_forecast(verbose: bool = True, duration: float = 600.0,
+                 period: float = 300.0, rate: float = 6.0,
+                 amplitude: float = 0.6, seed: int = 21) -> List[Dict]:
+    """Predictive vs reactive worker-count scaling on a diurnal trace
+    (SageServe-style §5.2 extension): both policies share the Eq. 7 fit and
+    the same provisioning delay; the forecast policy provisions ahead of the
+    ramp from a seasonal-naive + EWMA-residual rate forecast. The cost
+    metric is billed GPU-seconds; attainment is the shared ok/total
+    definition."""
+    arch = get_arch(MODEL)
+    slo = PAPER_SLOS[MODEL]
+    spec = make_worker_spec(arch, A100_80G, slo, mean_context=450.0)
+    wcfg = WorkloadConfig(mean_rate=rate, duration=duration, seed=seed,
+                          in_mu=5.0, in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+
+    def trace_fn():
+        return diurnal_trace(wcfg, amplitude=amplitude, period=period)
+
+    # warm start sized by the elastic oracle on a short constant-rate prefix
+    # (a production service is never cold-started at zero capacity)
+    warm = simulate(generate_trace(
+        WorkloadConfig(mean_rate=rate, duration=10.0, seed=1, in_mu=5.0,
+                       in_sigma=1.1, out_mu=5.3, out_sigma=0.9)),
+        spec.perf, slo, spec.kv_capacity, SimConfig(), n_workers=None)
+    scfg = ScaleSimConfig(interval=5.0, provision_delay=10.0, cooldown=60.0,
+                          initial_workers=warm.n_workers_peak)
+    fc = SeasonalNaiveForecaster(ForecastConfig(period=period,
+                                                bin_width=scfg.interval))
     rows: List[Dict] = []
-    if smoke:
-        rows += run(verbose, rates=(2.0,), duration=10.0)
-        rows += run_hetero(verbose, rates=(2.0,), duration=10.0)
-        rows += run_disagg(verbose, rates=(2.0,), duration=10.0)
-        rows += run_hot_loop(verbose, duration=20.0, repeats=1)
-        rows += run_burst(verbose, duration=15.0)
-    else:
-        rows += run(verbose)
-        rows += run_hetero(verbose)
-        rows += run_disagg(verbose)
-        rows += run_hot_loop(verbose)
-        rows += run_burst(verbose)
+    results = {}
+    for policy in (ReactivePolicy(scfg), ForecastPolicy(scfg, fc)):
+        res = simulate_autoscaled(trace_fn(), spec, slo, SimConfig(), scfg,
+                                  policy)
+        results[res.policy] = res
+        rows.append({
+            "name": f"forecast_{res.policy}", "us_per_call": 0.0,
+            "scenario": "forecast", "policy": res.policy,
+            "gpu_cost": res.gpu_seconds, "gpu_seconds": res.gpu_seconds,
+            "attainment": res.attainment, "p99_ttft": res.p99_ttft,
+            "p99_atgt": res.p99_atgt, "peak_workers": res.peak_workers,
+            "derived": (f"gpu_s={res.gpu_seconds:.0f};"
+                        f"attain={res.attainment:.4f};"
+                        f"p99_ttft={res.p99_ttft:.3f};"
+                        f"p99_atgt={res.p99_atgt:.4f};"
+                        f"peak={res.peak_workers}")})
+    r, f = results["reactive"], results["forecast"]
+    saving = 1.0 - f.gpu_seconds / r.gpu_seconds if r.gpu_seconds else 0.0
+    rows.append({"name": "forecast_saving", "us_per_call": 0.0,
+                 "scenario": "forecast", "gpu_cost": f.gpu_seconds,
+                 "attainment": f.attainment,
+                 "derived": (f"save_vs_reactive={saving:.3f};"
+                             f"forecast_attain={f.attainment:.4f};"
+                             f"reactive_attain={r.attainment:.4f}")})
+    if verbose:
+        for row in rows:
+            print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    _write_bench("forecast", rows)
+    return rows
+
+
+SCENARIOS = {"fig": run, "hetero": run_hetero, "disagg": run_disagg,
+             "hot_loop": run_hot_loop, "burst": run_burst,
+             "forecast": run_forecast}
+
+# shrunken per-scenario parameters for the CI canary (--smoke)
+SMOKE_PARAMS = {
+    "fig": dict(rates=(2.0,), duration=10.0),
+    "hetero": dict(rates=(2.0,), duration=10.0),
+    "disagg": dict(rates=(2.0,), duration=10.0),
+    "hot_loop": dict(duration=20.0, repeats=1),
+    "burst": dict(duration=15.0),
+    "forecast": dict(duration=150.0, period=75.0, rate=4.0),
+}
+
+
+def run_all(verbose: bool = True, smoke: bool = False) -> List[Dict]:
+    """All scenarios; smoke=True shrinks traces for the CI canary."""
+    rows: List[Dict] = []
+    for name, fn in SCENARIOS.items():
+        rows += fn(verbose, **(SMOKE_PARAMS[name] if smoke else {}))
     return rows
 
 
@@ -281,13 +397,12 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="fig",
-                    choices=["fig", "hetero", "disagg", "hot_loop", "burst",
-                             "all"])
+                    choices=sorted(SCENARIOS) + ["all"])
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny traces, <60s: the CI perf canary")
+                    help="tiny traces: the CI perf canary")
     args = ap.parse_args()
-    if args.smoke or args.scenario == "all":
+    if args.scenario == "all":
         run_all(smoke=args.smoke)
     else:
-        {"fig": run, "hetero": run_hetero, "disagg": run_disagg,
-         "hot_loop": run_hot_loop, "burst": run_burst}[args.scenario]()
+        SCENARIOS[args.scenario](
+            **(SMOKE_PARAMS[args.scenario] if args.smoke else {}))

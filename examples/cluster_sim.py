@@ -15,6 +15,10 @@ from repro.core.slo import PAPER_SLOS
 from repro.core.worker_config import (A100_80G, V100_32G, make_worker_spec,
                                       optimal_worker_config)
 from repro.serving.disagg import DisaggConfig, min_cost_disagg
+from repro.serving.forecast import (ForecastConfig, ForecastPolicy,
+                                    ReactivePolicy, ScaleSimConfig,
+                                    SeasonalNaiveForecaster,
+                                    simulate_autoscaled)
 from repro.serving.simulator import SimConfig, min_workers_for_slo, simulate
 from repro.serving.workload import WorkloadConfig, diurnal_trace
 
@@ -86,6 +90,36 @@ def main() -> None:
               f"decode workers = {best.gpu_cost:g} GPUs "
               f"(attain={best.attainment:.3f}, "
               f"kv transfer {best.mean_transfer*1e3:.1f} ms/req)")
+
+    # heterogeneous 2-pool frontier: the affine router may split traffic
+    # between A100 and V100 pools when the mix prices out cheaper
+    def mix(n):
+        na = (n + 1) // 2
+        return [(a100, na), (v100, n - na)]
+
+    het = min_cost_disagg(_trace_fn(2.0, duration=15.0), slo, DisaggConfig(),
+                          attain_target=0.95, max_prefill=4, hi_decode=32,
+                          predictor=_predictor(),
+                          prefill_pool_fn=mix, decode_pool_fn=mix)
+    if het is not None:
+        print(f"  2-pool hetero: {het.gpu_cost:g} GPUs ({het.pool_mix}, "
+              f"attain={het.attainment:.3f})")
+
+    # forecast-aware vs reactive scaling on a diurnal day (provision delay
+    # 10s): the forecaster provisions before the ramp and sheds on descent
+    print("\nforecast-aware vs reactive scaling (diurnal, 2 periods):")
+    period, dur = 150.0, 300.0
+    fcfg = WorkloadConfig(mean_rate=4.0, duration=dur, seed=21, in_mu=5.0,
+                          in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+    scfg = ScaleSimConfig(interval=5.0, provision_delay=10.0, cooldown=60.0,
+                          initial_workers=3)
+    fc = SeasonalNaiveForecaster(ForecastConfig(period=period, bin_width=5.0))
+    for pol in (ReactivePolicy(scfg), ForecastPolicy(scfg, fc)):
+        r = simulate_autoscaled(diurnal_trace(fcfg, amplitude=0.6,
+                                              period=period),
+                                a100, slo, SimConfig(), scfg, pol)
+        print(f"  {r.policy:9s} gpu_seconds={r.gpu_seconds:8.0f} "
+              f"attain={r.attainment:.3f} peak={r.peak_workers}")
 
     # diurnal trace through the elastic simulator
     wcfg = WorkloadConfig(mean_rate=4.0, duration=30.0, seed=17, in_mu=5.0,

@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 test suite + a <60s cluster-simulator smoke benchmark, so simulator
-# performance regressions fail CI rather than landing silently.
+# Tier-1 test suite + a cluster-simulator smoke benchmark (all scenarios,
+# including the forecast-aware scaling one), so simulator performance and
+# cost-metric regressions fail CI rather than landing silently. Each smoke
+# scenario also writes its BENCH_<scenario>.json cost row.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -9,7 +11,7 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 pytest =="
 python -m pytest -x -q
 
-echo "== cluster-sim smoke bench (budget: 60s) =="
+echo "== cluster-sim smoke bench (budget: 90s, incl. forecast scenario) =="
 start=$(date +%s)
-timeout 60 python benchmarks/bench_cluster_sim.py --smoke
+timeout 90 python benchmarks/bench_cluster_sim.py --scenario all --smoke
 echo "smoke bench took $(( $(date +%s) - start ))s"

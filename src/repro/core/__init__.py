@@ -18,7 +18,7 @@ from repro.core.placement import (PlacementConfig, WorkerState,               # 
 from repro.core.rebalance import ErrorTracker, rebalance                      # noqa: F401
 from repro.core.request import ReqState, Request                              # noqa: F401
 from repro.core.scaling import Autoscaler, AutoscalerConfig                   # noqa: F401
-from repro.core.slo import PAPER_SLOS, SLO                                    # noqa: F401
+from repro.core.slo import PAPER_SLOS, SLO, slo_attainment                    # noqa: F401
 from repro.core.worker_config import (A100_80G, TPU_V5E, V100_32G,            # noqa: F401
                                       HardwareSpec, WorkerConfig, WorkerSpec,
                                       make_worker_spec,

@@ -6,8 +6,9 @@ The MIP's constraints, evaluated per worker:
       with C_max from Eq. 4 and b the post-placement batch size;
   (c) TTFT budget:            t_pre(Σ new l_in)          ≤  T_pre;
   (d) preemption budget:      t_pre(Σ new l_in)          ≤  θ · min_j slack_j,
-      slack_j = T_dec·l_out_j − t_dec_j (decode time the ongoing requests
-      have "banked" against the ATGT SLO);
+      slack_j = T_dec·(l_out_j − 1) − t_dec_j (decode time the ongoing
+      requests have "banked" against the ATGT SLO; ATGT divides by
+      l_out − 1, the first token being TTFT's);
   (e) per-iteration KV:       peak over future iterations of Σ kv_j(·) ≤ M.
 
 Algorithm 1 (best-fit): rank workers by capacity_norm (L2 norm of batch size
@@ -116,7 +117,11 @@ class WorkerState:
     def _constraint_d(self, reqs: Sequence[Request]) -> bool:
         if not self.ongoing:
             return True
-        slack = min(self.slo.atgt * max(r.l_out, 1) - r.t_decode_spent
+        # ATGT divides decode time by (l_out - 1) — the first token is paid
+        # by TTFT — so the banked slack is atgt*(l_out - 1), not atgt*l_out:
+        # budgeting against l_out lets every stalled request finish up to
+        # l_real/(l_real-1) over the SLO (a scale-invariant miss tail)
+        slack = min(self.slo.atgt * max(r.l_out - 1, 0) - r.t_decode_spent
                     for r in self.ongoing)
         total_new = sum(r.l_in for r in self.new_batch) + \
             sum(r.l_in for r in reqs)

@@ -17,6 +17,9 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+# History window: keep at most this many observations; halve when exceeded.
+HISTORY_MAX = 4096
+
 
 @dataclasses.dataclass
 class AutoscalerConfig:
@@ -50,13 +53,17 @@ class Autoscaler:
         s[1] += y
         s[2] += x * y
         s[3] += x * x
-        if len(self.history) > 4096:
-            del self.history[:2048]
+        if len(self.history) > HISTORY_MAX:
+            del self.history[:HISTORY_MAX // 2]
             self._sums = [sum(r for r, _ in self.history),
                           sum(float(n) for _, n in self.history),
                           sum(r * n for r, n in self.history),
                           sum(r * r for r, _ in self.history)]
             s = self._sums
+        if len(self.rates) > HISTORY_MAX:
+            # change_point() only looks at the last 2*change_window entries,
+            # so dropping the old half never alters its verdict
+            del self.rates[:HISTORY_MAX // 2]
         n = len(self.history)
         if n >= 4:
             det = n * s[3] - s[0] * s[0]
@@ -64,16 +71,18 @@ class Autoscaler:
                 self.k5 = (n * s[2] - s[0] * s[1]) / det
                 self.c5 = (s[1] * s[3] - s[0] * s[2]) / det
 
-    def rate_floor(self, sigma_tokens: float, mean_interval: float) -> float:
+    def rate_floor(self) -> float:
         """R: smallest rate whose per-heartbeat sample keeps SEM below
-        sem_target * sigma (n = r * heartbeat)."""
+        sem_target * sigma.  SEM = sigma/sqrt(n) <= sem_target * sigma needs
+        n >= 1/sem_target^2 samples; with n = r * heartbeat the length sigma
+        cancels, so the floor depends only on (sem_target, heartbeat)."""
         n_min = 1.0 / (self.cfg.sem_target ** 2)
         return n_min / max(self.cfg.heartbeat, 1e-9)
 
     def predict_workers(self, rate: float,
                         last_needed: Optional[int] = None) -> int:
         cfg = self.cfg
-        if self.k5 is not None and rate > self.rate_floor(0.0, 0.0):
+        if self.k5 is not None and rate > self.rate_floor():
             n = math.ceil(self.k5 * rate + self.c5)
         elif last_needed is not None:
             n = math.ceil(last_needed * cfg.headroom)

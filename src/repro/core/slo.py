@@ -8,6 +8,7 @@ ATGT  — average token-generation time: decode_time / (l_out - 1) must stay
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -18,6 +19,17 @@ class SLO:
 
     def scaled(self, f: float) -> "SLO":
         return SLO(self.ttft * f, self.atgt * f, self.attain_target)
+
+
+def slo_attainment(finished: Iterable, total: int, slo: "SLO") -> float:
+    """Canonical SLO attainment: requests meeting BOTH deadlines over all
+    requests offered (ok / total).  Unfinished requests count as misses.
+
+    Every simulator result (colocated, disaggregated, autoscaled) must report
+    this one definition, so cost comparisons across serving topologies can
+    never drift apart on the metric itself."""
+    ok = sum(1 for r in finished if r.slo_ok(slo))
+    return ok / max(total, 1)
 
 
 # The paper's Table 2 (A100 testbed), in seconds.

@@ -5,10 +5,17 @@ from repro.serving.disagg import (DisaggConfig, DisaggResult,        # noqa: F40
                                   min_cost_disagg,
                                   simulate_disaggregated)
 from repro.serving.engine import EngineConfig, PagedEngine           # noqa: F401
+from repro.serving.forecast import (EWMAForecaster, ForecastConfig,  # noqa: F401
+                                    ForecastPolicy, ReactivePolicy,
+                                    ScaleSimConfig, ScaleSimResult,
+                                    SeasonalNaiveForecaster,
+                                    simulate_autoscaled)
 from repro.serving.length_predictor import LengthPredictor           # noqa: F401
 from repro.serving.simulator import (SimConfig, SimResult,           # noqa: F401
-                                     min_workers_for_slo, simulate)
+                                     min_workers_for_slo,
+                                     run_heartbeat_loop, simulate)
 from repro.serving.workload import (WorkloadConfig, burst_trace,     # noqa: F401
-                                    diurnal_trace, generate_trace,
+                                    diurnal_rate_fn, diurnal_trace,
+                                    generate_trace,
                                     nonhomogeneous_trace,
                                     sample_lengths)

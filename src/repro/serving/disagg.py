@@ -1,16 +1,32 @@
 """End-to-end prefill/decode disaggregated cluster simulation.
 
-The Splitwise/DistServe topology as a discrete-event model: a *prefill pool*
-admits arrivals under constraint (c) only (TTFT is the prefill pool's whole
-job), finished prefills hand their KV cache to a *decode pool* over an
-interconnect with modeled bandwidth/latency, and the decode pool runs the
+The Splitwise/DistServe topology as a discrete-event model: *prefill pools*
+admit arrivals under constraint (c) only (TTFT is the prefill pool's whole
+job), finished prefills hand their KV cache to *decode pools* over an
+interconnect with modeled bandwidth/latency, and the decode pools run the
 split-phase variant of Algorithm 1 (constraints (b)/(e); no prefill ever
 interferes with decode, which is the point of disaggregation).
 
-This replaces the decode-pool-only ``split_phase`` approximation for cost
-studies: ``min_cost_disagg`` walks the joint (n_prefill, n_decode) frontier
-and returns the cheapest configuration meeting the SLO target, directly
-comparable with the colocated ``min_workers_for_slo`` cost on the same trace.
+Pools may be heterogeneous: ``simulate_disaggregated`` takes lists of
+``(WorkerSpec, count)`` pool types on both sides (e.g. A100-TP4 next to
+V100-TP8 prefill pools) and an SLO-aware router picks the pool per request.
+The router score is prompt-length-affine (UELLM-style): the accelerator-cost
+-weighted prefill latency ``gpu_cost * (k1*l_in + c1)`` — short prompts flow
+to cheap pools, long prompts to pools whose fast prefill is worth the cost —
+and a pool is only eligible when constraint (c) holds on some worker in it.
+The legacy single ``(prefill_spec, decode_spec)`` arguments still work and
+describe one pool type per side.
+
+Both simulators share the causal-time heartbeat core
+(``run_heartbeat_loop``): a request is admitted at the first heartbeat
+boundary at-or-after its arrival, never before it, so colocated and
+disaggregated TTFTs are measured under identical admission semantics.
+
+``min_cost_disagg`` walks the joint (n_prefill, n_decode) frontier and
+returns the cheapest configuration meeting the SLO target, directly
+comparable with the colocated ``min_workers_for_slo`` cost on the same
+trace; ``prefill_pool_fn`` / ``decode_pool_fn`` map a worker count to a
+heterogeneous pool mix for the same search.
 """
 from __future__ import annotations
 
@@ -23,21 +39,44 @@ from repro.core.perf_model import PerfModel
 from repro.core.placement import (PlacementConfig, WorkerState,
                                   best_fit_place, jsq_place)
 from repro.core.request import ReqState, Request
-from repro.core.slo import SLO
+from repro.core.slo import SLO, slo_attainment
 from repro.core.worker_config import WorkerSpec
-from repro.serving.length_predictor import LengthPredictor
-from repro.serving.simulator import SimWorker
+from repro.serving.simulator import SimWorker, run_heartbeat_loop
+
+# One pool type: (worker spec, number of workers of that type).
+Pool = Tuple[WorkerSpec, int]
 
 
 @dataclasses.dataclass
 class DisaggConfig:
-    heartbeat: float = 0.25
+    # Finer than the colocated 0.25 s default: the disaggregated pipeline
+    # has TWO scheduler-quantized hops (arrival->prefill, handoff->decode),
+    # and the handoff wait is charged against the tight ATGT budget. Real
+    # systems admit handoffs at decode-iteration granularity (~tens of ms);
+    # a coarse beat would bill scheduling quantization as SLO loss (the
+    # seed hid it by starting decode before the KV had arrived).
+    heartbeat: float = 0.05
     policy: str = "aladdin"            # decode-pool placement: aladdin | jsq
     gamma: float = 0.5
     theta: float = 0.9
     kv_transfer_bw: float = 64e9       # bytes/s prefill->decode interconnect
     kv_transfer_lat: float = 2e-3      # fixed per-handoff latency, s
     seed: int = 0
+
+
+def prefill_affinity(spec: WorkerSpec, l_in: int) -> float:
+    """UELLM-style prompt-length-affine routing score (lower = preferred):
+    accelerator-cost-weighted prefill latency a + b*l_in of this prompt on
+    the pool type."""
+    p = spec.perf.prefill
+    return spec.gpu_cost * (p.k1 * l_in + p.c1)
+
+
+def decode_affinity(spec: WorkerSpec, r: Request, gamma: float) -> float:
+    """Decode-side analogue, affine in the predicted context: cost-weighted
+    marginal decode time of carrying (l_in + gamma*l_pred) KV tokens."""
+    d = spec.perf.decode
+    return spec.gpu_cost * (d.k2 * (r.l_in + gamma * r.l_pred) + d.c2)
 
 
 class PrefillSimWorker:
@@ -48,9 +87,10 @@ class PrefillSimWorker:
     batched once per heartbeat, exactly like the colocated simulator's
     prefill iterations."""
 
-    def __init__(self, wid: int, perf: PerfModel, slo: SLO):
+    def __init__(self, wid: int, spec: WorkerSpec, slo: SLO):
         self.id = wid
-        self.perf = perf
+        self.spec = spec
+        self.perf = spec.perf
         self.slo = slo
         self.t = 0.0
         self.queue: List[Request] = []
@@ -96,86 +136,151 @@ class DisaggResult:
     mean_transfer: float               # mean KV-handoff time, s
     finished: int
     total: int
+    pool_mix: str = ""                 # e.g. "p:a100-tp4x2|d:a100-tp4x4"
 
     def row(self) -> Dict:
         return dataclasses.asdict(self)
 
 
+def _as_pools(spec: Optional[WorkerSpec], n: int,
+              pools: Optional[Sequence[Pool]]) -> List[Pool]:
+    if pools is not None:
+        out = [(s, int(k)) for s, k in pools if k > 0]
+        if not out:
+            raise ValueError("pool list contains no workers")
+        return out
+    if spec is None:
+        raise ValueError("pass either a spec+count or a pool list")
+    if n <= 0:
+        raise ValueError(f"worker count must be positive, got {n}")
+    return [(spec, int(n))]
+
+
+def pool_cost(pools: Sequence[Pool]) -> float:
+    return sum(k * s.gpu_cost for s, k in pools)
+
+
+def _mix_label(prefill_pools: Sequence[Pool],
+               decode_pools: Sequence[Pool]) -> str:
+    p = ",".join(f"{s.name}x{k}" for s, k in prefill_pools)
+    d = ",".join(f"{s.name}x{k}" for s, k in decode_pools)
+    return f"p:{p}|d:{d}"
+
+
 def simulate_disaggregated(trace: Sequence[Request], slo: SLO,
                            cfg: DisaggConfig,
-                           prefill_spec: WorkerSpec,
-                           decode_spec: WorkerSpec,
-                           n_prefill: int, n_decode: int,
-                           predictor: Optional[LengthPredictor] = None,
-                           observer: Optional[Callable] = None
+                           prefill_spec: Optional[WorkerSpec] = None,
+                           decode_spec: Optional[WorkerSpec] = None,
+                           n_prefill: int = 0, n_decode: int = 0,
+                           predictor=None,
+                           observer: Optional[Callable] = None,
+                           prefill_pools: Optional[Sequence[Pool]] = None,
+                           decode_pools: Optional[Sequence[Pool]] = None
                            ) -> DisaggResult:
-    """Simulate ``trace`` on a (n_prefill, n_decode) disaggregated cluster."""
-    kv_tok = prefill_spec.kv_bytes_per_token
-    pool_p = [PrefillSimWorker(i + 1, prefill_spec.perf, slo)
-              for i in range(n_prefill)]
-    dcfg = PlacementConfig(gamma=cfg.gamma, theta=cfg.theta,
-                           kv_capacity=decode_spec.kv_capacity,
-                           max_batch=decode_spec.max_batch, split_phase=True)
-    states_d: List[WorkerState] = []
-    sims_d: Dict[int, SimWorker] = {}
-    for i in range(n_decode):
-        w = WorkerState(1000 + i, dcfg, decode_spec.perf, slo)
-        w.spec = decode_spec
-        states_d.append(w)
-        sims_d[w.id] = SimWorker(w, w.perf, 0.0, split_phase=True)
+    """Simulate ``trace`` on a disaggregated cluster.
 
-    trace = sorted(trace, key=lambda r: r.arrival)
-    horizon = max(r.arrival for r in trace) + 240.0
+    Homogeneous form: ``(prefill_spec, decode_spec, n_prefill, n_decode)``.
+    Heterogeneous form: ``prefill_pools`` / ``decode_pools`` as lists of
+    ``(WorkerSpec, count)``; the affine router picks the pool per request,
+    falling through to the next-ranked pool when no worker is feasible."""
+    p_pools = _as_pools(prefill_spec, n_prefill, prefill_pools)
+    d_pools = _as_pools(decode_spec, n_decode, decode_pools)
+
+    # prefill pools: one worker group per type, ids dense from 1
+    pools_p: List[Tuple[WorkerSpec, List[PrefillSimWorker]]] = []
+    wid = 0
+    for spec, k in p_pools:
+        group = []
+        for _ in range(k):
+            wid += 1
+            group.append(PrefillSimWorker(wid, spec, slo))
+        pools_p.append((spec, group))
+    pool_p = [w for _, group in pools_p for w in group]
+
+    # decode pools: split-phase WorkerStates per type, ids from 1000
+    pools_d: List[Tuple[WorkerSpec, List[WorkerState]]] = []
+    sims_d: Dict[int, SimWorker] = {}
+    wid = 1000
+    for spec, k in d_pools:
+        dcfg = PlacementConfig(gamma=cfg.gamma, theta=cfg.theta,
+                               kv_capacity=spec.kv_capacity,
+                               max_batch=spec.max_batch, split_phase=True)
+        group = []
+        for _ in range(k):
+            w = WorkerState(wid, dcfg, spec.perf, slo)
+            w.spec = spec
+            group.append(w)
+            sims_d[w.id] = SimWorker(w, w.perf, 0.0, split_phase=True)
+            wid += 1
+        pools_d.append((spec, group))
+    states_d = [w for _, group in pools_d for w in group]
+
     queued_p: List[Request] = []       # waiting for prefill-pool admission
     in_transfer: List[Tuple[float, Request]] = []   # (ready time, request)
     queued_d: List[Request] = []       # KV arrived, waiting for decode slot
     finished: List[Request] = []
     transfers: List[float] = []
-    idx = 0
-    t = 0.0
-    while t < horizon:
-        t_next = t + cfg.heartbeat
-        # only admit requests that have actually arrived by this boundary
-        # (the colocated simulator's intra-beat admission can stamp a first
-        # token before the arrival; the disaggregated path keeps causal time)
-        while idx < len(trace) and trace[idx].arrival <= t:
-            r = trace[idx]
-            r.l_pred = predictor.predict(r.l_in) if predictor else r.l_real
-            queued_p.append(r)
-            idx += 1
-        # prefill placement: constraint (c) only, best-fit (fullest feasible
-        # worker first, mirroring Algorithm 1's bin-packing order)
-        still: List[Request] = []
-        for r in queued_p:
-            ranked = sorted(pool_p, key=lambda w: w.pending_tokens,
+
+    def admit(r: Request) -> None:
+        r.l_pred = predictor.predict(r.l_in) if predictor else r.l_real
+        queued_p.append(r)
+
+    def place_prefill(r: Request) -> Optional[PrefillSimWorker]:
+        # rank pool types by the affine routing score, then best-fit within
+        # the pool (fullest feasible worker first, Algorithm 1's bin order);
+        # fall through to the next pool when nothing in this one is feasible
+        for spec, group in sorted(pools_p,
+                                  key=lambda p: prefill_affinity(p[0],
+                                                                 r.l_in)):
+            ranked = sorted(group, key=lambda w: w.pending_tokens,
                             reverse=True)
             for w in ranked:
                 if w.feasible(r):
                     w.place(r)
-                    break
+                    return w
+        return None
+
+    def place_decode(r: Request) -> Optional[WorkerState]:
+        for spec, group in sorted(pools_d,
+                                  key=lambda p: decode_affinity(p[0], r,
+                                                                cfg.gamma)):
+            if cfg.policy == "aladdin":
+                w = best_fit_place(group, r, allow_new=False)
             else:
+                w = jsq_place(group, r, allow_new=False)
+            if w is not None:
+                return w
+        return None
+
+    def step(t: float, t_next: float, arrived: int) -> None:
+        nonlocal queued_p, queued_d
+        # prefill placement: constraint (c) only, router picks the pool
+        still: List[Request] = []
+        for r in queued_p:
+            if place_prefill(r) is None:
                 still.append(r)
         queued_p = still
-        # advance the prefill pool; completed prefills enter KV transfer
-        prefilled: List[Request] = []
-        for w in pool_p:
-            w.advance_to(t_next, t, prefilled)
-        for r in prefilled:
-            dt = cfg.kv_transfer_lat \
-                + r.l_in * kv_tok / max(cfg.kv_transfer_bw, 1.0)
-            transfers.append(dt)
-            in_transfer.append((max(r.t_first_token, t) + dt, r))
-        # KV handoffs that completed by this heartbeat join the decode queue
+        # advance the prefill pools; completed prefills enter KV transfer
+        for spec, group in pools_p:
+            done: List[Request] = []
+            for w in group:
+                w.advance_to(t_next, t, done)
+            for r in done:
+                dt = cfg.kv_transfer_lat \
+                    + r.l_in * spec.kv_bytes_per_token \
+                    / max(cfg.kv_transfer_bw, 1.0)
+                transfers.append(dt)
+                in_transfer.append((max(r.t_first_token, t) + dt, r))
+        # KV handoffs completed by this boundary join the decode queue —
+        # causally: a handoff ready inside (t, t_next) must wait for the
+        # next boundary, else its decode would start before the KV arrived
         in_transfer.sort(key=lambda e: e[0])
-        while in_transfer and in_transfer[0][0] <= t_next:
+        while in_transfer and in_transfer[0][0] <= t:
             queued_d.append(in_transfer.pop(0)[1])
-        # decode placement: split-phase constraints (b)/(e)
+        # decode placement: split-phase constraints (b)/(e), router-ordered
         still = []
         for r in queued_d:
-            if cfg.policy == "aladdin":
-                w = best_fit_place(states_d, r, allow_new=False)
-            else:
-                w = jsq_place(states_d, r, allow_new=False)
+            w = place_decode(r)
             if w is None:
                 still.append(r)
             else:
@@ -183,65 +288,81 @@ def simulate_disaggregated(trace: Sequence[Request], slo: SLO,
         queued_d = still
         for w in states_d:
             sims_d[w.id].advance_to(t_next, finished, t_start=t)
-        t = t_next
         if observer is not None:
-            observer(t=t, pool_p=pool_p, states_d=states_d,
+            observer(t=t_next, pool_p=pool_p, states_d=states_d,
                      queued_p=queued_p, in_transfer=in_transfer,
-                     queued_d=queued_d, finished=finished, arrived=idx)
-        if idx >= len(trace) and not queued_p and not queued_d \
-                and not in_transfer \
-                and all(not w.queue for w in pool_p) \
-                and all(not w.ongoing and not w.new_batch for w in states_d) \
-                and all(not s.preempted for s in sims_d.values()):
-            break
+                     queued_d=queued_d, finished=finished, arrived=arrived)
+
+    def drained() -> bool:
+        return (not queued_p and not queued_d and not in_transfer
+                and all(not w.queue for w in pool_p)
+                and all(not w.ongoing and not w.new_batch for w in states_d)
+                and all(not s.preempted for s in sims_d.values()))
+
+    trace = run_heartbeat_loop(trace, cfg.heartbeat, admit, step, drained)
 
     atgts = [r.atgt() for r in finished if r.atgt() is not None]
     ttfts = [r.ttft() for r in finished if r.ttft() is not None]
-    ok = [r for r in finished if r.slo_ok(slo)]
     total = len(trace)
     return DisaggResult(
-        n_prefill=n_prefill, n_decode=n_decode,
-        gpu_cost=n_prefill * prefill_spec.gpu_cost
-        + n_decode * decode_spec.gpu_cost,
-        attainment=len(ok) / max(total, 1),
+        n_prefill=sum(k for _, k in p_pools),
+        n_decode=sum(k for _, k in d_pools),
+        gpu_cost=pool_cost(p_pools) + pool_cost(d_pools),
+        attainment=slo_attainment(finished, total, slo),
         p99_ttft=float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
         p99_atgt=float(np.percentile(atgts, 99)) if atgts else float("nan"),
         mean_transfer=float(np.mean(transfers)) if transfers else 0.0,
-        finished=len(finished), total=total)
+        finished=len(finished), total=total,
+        pool_mix=_mix_label(p_pools, d_pools))
 
 
 def min_cost_disagg(trace_fn, slo: SLO, cfg: DisaggConfig,
-                    prefill_spec: WorkerSpec, decode_spec: WorkerSpec,
+                    prefill_spec: Optional[WorkerSpec] = None,
+                    decode_spec: Optional[WorkerSpec] = None,
                     attain_target: float = 0.99,
                     max_prefill: int = 8, hi_decode: int = 64,
-                    predictor: Optional[LengthPredictor] = None
-                    ) -> Optional[DisaggResult]:
+                    predictor=None,
+                    prefill_pool_fn: Optional[Callable[[int],
+                                                       Sequence[Pool]]]
+                    = None,
+                    decode_pool_fn: Optional[Callable[[int],
+                                                      Sequence[Pool]]]
+                    = None) -> Optional[DisaggResult]:
     """Walk the joint (n_prefill, n_decode) frontier: for each prefill-pool
     size, binary-search the minimum decode pool meeting the target, and keep
     the cheapest feasible point. Returns None if nothing within the bounds
-    attains the target."""
+    attains the target.
+
+    ``prefill_pool_fn(n)`` / ``decode_pool_fn(n)`` map a worker count to a
+    heterogeneous (spec, count) mix — e.g. a 50/50 A100/V100 split; they must
+    be monotone (cost non-decreasing in n) for the frontier prune to stay
+    exact. The default is n homogeneous workers of the given spec."""
+    pf = prefill_pool_fn or (lambda n: [(prefill_spec, n)])
+    df = decode_pool_fn or (lambda n: [(decode_spec, n)])
     best: Optional[DisaggResult] = None
+    min_decode_cost = pool_cost(df(1))
 
     def attains(res: DisaggResult) -> bool:
         return res.attainment >= attain_target and res.finished == res.total
 
+    def run(n_p: int, n_d: int) -> DisaggResult:
+        return simulate_disaggregated(trace_fn(), slo, cfg,
+                                      predictor=predictor,
+                                      prefill_pools=pf(n_p),
+                                      decode_pools=df(n_d))
+
     for n_p in range(1, max_prefill + 1):
         if best is not None and \
-                n_p * prefill_spec.gpu_cost + decode_spec.gpu_cost \
-                >= best.gpu_cost:
+                pool_cost(pf(n_p)) + min_decode_cost >= best.gpu_cost:
             break                      # every remaining point costs more
         lo, hi = 1, hi_decode
-        res_hi = simulate_disaggregated(trace_fn(), slo, cfg, prefill_spec,
-                                        decode_spec, n_p, hi,
-                                        predictor=predictor)
+        res_hi = run(n_p, hi)
         if not attains(res_hi):
             continue                   # prefill pool too small at any scale
         best_np = res_hi
         while lo < hi:
             mid = (lo + hi) // 2
-            res = simulate_disaggregated(trace_fn(), slo, cfg, prefill_spec,
-                                         decode_spec, n_p, mid,
-                                         predictor=predictor)
+            res = run(n_p, mid)
             if attains(res):
                 best_np, hi = res, mid
             else:

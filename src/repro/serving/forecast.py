@@ -1,0 +1,379 @@
+"""Forecast-aware worker-count scaling (SageServe-style predictive scaling).
+
+The reactive Eq. 7 scaler only reacts: it observes the arrival rate of the
+*last* epoch, so with a non-zero provisioning delay every diurnal ramp is
+served late (SLO misses on the ascent) and every decline is served long
+(GPU-seconds wasted on the descent, where a reactive policy must hold a
+scale-down cooldown because it cannot know demand is really falling).
+
+This module adds the look-ahead half of the paper's §5.2 story:
+
+  * ``SeasonalNaiveForecaster`` — demand forecast = the rate observed at the
+    same phase one period ago (seasonal-naive) plus an EWMA of the recent
+    residuals (level correction for traffic growth/decay). Any object with
+    ``observe(t, rate)`` / ``forecast(t, lead)`` plugs in; ``EWMAForecaster``
+    is the trivial non-seasonal baseline.
+  * ``ReactivePolicy`` / ``ForecastPolicy`` — epoch scaling policies. Both
+    feed the Eq. 7 fit; the forecast policy asks the forecaster for the rate
+    ``provision_delay + epoch`` ahead, so workers are booted *before* the
+    ramp needs them, and it keeps a per-phase floor of the worker count each
+    phase bin has historically needed (never provision fewer workers at a
+    ramp peak than the same phase needed one period earlier).
+  * ``simulate_autoscaled`` — the colocated simulator with a worker
+    lifecycle (boot delay, draining, retirement) driven by a policy, built
+    on the same causal-time heartbeat core; reports GPU-seconds actually
+    billed, which is what the cost comparison in the benchmarks uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.placement import (PlacementConfig, WorkerState,
+                                  best_fit_place, jsq_place,
+                                  power_of_two_place)
+from repro.core.request import ReqState, Request
+from repro.core.scaling import Autoscaler, AutoscalerConfig
+from repro.core.slo import SLO, slo_attainment
+from repro.core.worker_config import WorkerSpec
+from repro.serving.simulator import SimConfig, SimWorker, run_heartbeat_loop
+
+
+# ---- forecasters -------------------------------------------------------------
+
+@dataclasses.dataclass
+class ForecastConfig:
+    period: float = 300.0       # seasonal period, s (one diurnal cycle)
+    bin_width: float = 5.0      # phase-bin resolution, s
+    ewma_alpha: float = 0.3     # residual / level smoothing
+
+
+class SeasonalNaiveForecaster:
+    """Seasonal-naive + EWMA-residual demand forecaster.
+
+    ``forecast(t, lead)`` returns the rate last observed at phase
+    ``(t + lead) mod period`` plus the EWMA of recent (observed - seasonal)
+    residuals; before a phase has been seen once, it falls back to the EWMA
+    level of the rate itself (cold start = the reactive estimate)."""
+
+    def __init__(self, cfg: ForecastConfig = ForecastConfig()):
+        self.cfg = cfg
+        self.n_bins = max(int(round(cfg.period / cfg.bin_width)), 1)
+        self.seasonal: List[float] = [float("nan")] * self.n_bins
+        self.resid = 0.0
+        self.level: Optional[float] = None
+
+    def _bin(self, t: float) -> int:
+        return int(t / self.cfg.bin_width) % self.n_bins
+
+    def observe(self, t: float, rate: float) -> None:
+        a = self.cfg.ewma_alpha
+        b = self._bin(t)
+        prev = self.seasonal[b]
+        if not math.isnan(prev):
+            self.resid = a * (rate - prev) + (1 - a) * self.resid
+        self.level = rate if self.level is None \
+            else a * rate + (1 - a) * self.level
+        self.seasonal[b] = rate
+
+    def forecast(self, t: float, lead: float = 0.0) -> float:
+        s = self.seasonal[self._bin(t + lead)]
+        if math.isnan(s):
+            return self.level if self.level is not None else 0.0
+        return max(s + self.resid, 0.0)
+
+
+class EWMAForecaster:
+    """Non-seasonal baseline: the forecast at any lead is the EWMA level."""
+
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = alpha
+        self.level: Optional[float] = None
+
+    def observe(self, t: float, rate: float) -> None:
+        self.level = rate if self.level is None \
+            else self.alpha * rate + (1 - self.alpha) * self.level
+
+    def forecast(self, t: float, lead: float = 0.0) -> float:
+        return self.level if self.level is not None else 0.0
+
+
+# ---- scaling policies --------------------------------------------------------
+
+@dataclasses.dataclass
+class ScaleSimConfig:
+    interval: float = 5.0            # scaling-epoch length, s
+    provision_delay: float = 10.0    # boot time before a new worker serves
+    cooldown: float = 60.0           # reactive scale-down stabilization, s
+    lead: Optional[float] = None     # forecast look-ahead; None = delay+epoch
+    min_workers: int = 1
+    max_workers: int = 512
+    initial_workers: int = 1
+
+
+class ReactivePolicy:
+    """Eq. 7 on the last observed rate + change-point boost + a scale-down
+    cooldown (the kube-HPA-style stabilization window a reactive scaler
+    needs to avoid flapping, and the GPU-seconds it pays on every descent)."""
+
+    name = "reactive"
+
+    def __init__(self, scfg: ScaleSimConfig,
+                 autoscaler: Optional[Autoscaler] = None):
+        self.scfg = scfg
+        self.autoscaler = autoscaler or Autoscaler(AutoscalerConfig(
+            heartbeat=scfg.interval, min_workers=scfg.min_workers,
+            max_workers=scfg.max_workers))
+        self._recent: List[tuple] = []      # (t, raw target) inside cooldown
+
+    def target(self, t: float, rate: float, needed: int,
+               queued: int) -> int:
+        sc = self.autoscaler
+        sc.observe(rate, needed)
+        tgt = sc.predict_workers(rate, last_needed=needed)
+        if sc.change_point():
+            tgt = max(tgt, needed)
+        self._recent.append((t, tgt))
+        self._recent = [x for x in self._recent
+                        if x[0] >= t - self.scfg.cooldown]
+        return max(tg for _, tg in self._recent)
+
+
+class ForecastPolicy:
+    """Eq. 7 on the *forecast* rate ``lead`` seconds ahead, plus a per-phase
+    floor of the worker count that phase has historically needed.  No
+    cooldown: the forecaster itself says when demand is really falling, so
+    the policy sheds workers on the descent instead of holding them."""
+
+    name = "forecast"
+
+    def __init__(self, scfg: ScaleSimConfig, forecaster,
+                 autoscaler: Optional[Autoscaler] = None):
+        self.scfg = scfg
+        self.forecaster = forecaster
+        self.autoscaler = autoscaler or Autoscaler(AutoscalerConfig(
+            heartbeat=scfg.interval, min_workers=scfg.min_workers,
+            max_workers=scfg.max_workers))
+        # phase bin -> max workers that phase has needed (seasonal floor);
+        # a forecaster without phase bins degrades to one global bin
+        self._bin: Callable[[float], int] = getattr(forecaster, "_bin",
+                                                    lambda t: 0)
+        self._season_needed: Dict[int, int] = {}
+
+    @property
+    def lead(self) -> float:
+        return self.scfg.lead if self.scfg.lead is not None \
+            else self.scfg.provision_delay + self.scfg.interval
+
+    def _leads(self) -> List[float]:
+        # sample the whole look-ahead window at epoch resolution so no
+        # phase bin inside [t, t + lead] can be skipped over
+        step = max(min(self.scfg.interval, self.lead), 1e-9)
+        leads = [k * step for k in range(int(self.lead / step) + 1)]
+        if leads[-1] < self.lead:
+            leads.append(self.lead)
+        return leads
+
+    def target(self, t: float, rate: float, needed: int,
+               queued: int) -> int:
+        sc, fc = self.autoscaler, self.forecaster
+        sc.observe(rate, needed)
+        fc.observe(t, rate)
+        b_now = self._bin(t)
+        self._season_needed[b_now] = max(self._season_needed.get(b_now, 0),
+                                         needed)
+        leads = self._leads()
+        r_ahead = max(fc.forecast(t, dl) for dl in leads)
+        tgt = sc.predict_workers(max(rate, r_ahead), last_needed=needed)
+        floor = max(self._season_needed.get(self._bin(t + dl), 0)
+                    for dl in leads)
+        return max(tgt, floor)
+
+
+# ---- autoscaled simulation ---------------------------------------------------
+
+@dataclasses.dataclass
+class EpochStat:
+    t: float                 # epoch start time
+    rate: float              # observed arrivals / interval
+    needed: int              # peak busy workers (+1 if a backlog remained)
+    target: int              # policy decision for the next epoch
+    online: int              # workers online after applying the decision
+
+
+@dataclasses.dataclass
+class ScaleSimResult:
+    policy: str
+    gpu_seconds: float       # Σ accelerators billed (online+boot+drain) * dt
+    attainment: float
+    p99_ttft: float
+    p99_atgt: float
+    mean_atgt: float
+    finished: int
+    total: int
+    peak_workers: int
+    epochs: List[EpochStat] = dataclasses.field(default_factory=list)
+
+    def row(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.pop("epochs")
+        return d
+
+
+def simulate_autoscaled(trace: Sequence[Request], spec: WorkerSpec, slo: SLO,
+                        cfg: SimConfig, scfg: ScaleSimConfig, policy,
+                        predictor=None) -> ScaleSimResult:
+    """Colocated serving with a policy-driven worker lifecycle.
+
+    Same causal-time heartbeat core and placement as ``simulate``, but the
+    worker count is owned by ``policy.target(t, rate, needed, queued)``
+    evaluated once per scaling epoch: new workers take ``provision_delay``
+    seconds to boot (billed while booting), surplus workers drain (no new
+    placements; billed until their last request finishes) and a scale-up
+    reclaims draining workers before booting cold ones.  ``gpu_seconds`` is
+    the billed accelerator time — the cost metric the reactive-vs-forecast
+    benchmark compares."""
+    rng = np.random.default_rng(cfg.seed)
+    beats_per_epoch = max(int(round(scfg.interval / cfg.heartbeat)), 1)
+
+    online: List[WorkerState] = []
+    draining: List[WorkerState] = []
+    booting: List[List] = []           # [online_at, WorkerState]
+    sims: Dict[int, SimWorker] = {}
+    finished: List[Request] = []
+    queued: List[Request] = []
+    epochs: List[EpochStat] = []
+    wid = [0]
+    acc = {"gpu_s": 0.0, "beat": 0, "arrivals": 0, "busy_peak": 0,
+           "peak": 0}
+
+    def new_worker() -> WorkerState:
+        wid[0] += 1
+        pcfg = PlacementConfig(gamma=cfg.gamma, theta=cfg.theta,
+                               kv_capacity=spec.kv_capacity,
+                               max_batch=spec.max_batch,
+                               split_phase=cfg.split_phase)
+        w = WorkerState(wid[0], pcfg, spec.perf, slo)
+        w.spec = spec
+        return w
+
+    for _ in range(max(scfg.initial_workers, scfg.min_workers)):
+        w = new_worker()
+        online.append(w)
+        sims[w.id] = SimWorker(w, w.perf, 0.0, cfg.split_phase)
+
+    def admit(r: Request) -> None:
+        r.l_pred = predictor.predict(r.l_in) if predictor else r.l_real
+        queued.append(r)
+        acc["arrivals"] += 1
+
+    def place(r: Request, t: float) -> bool:
+        if cfg.policy == "aladdin":
+            w = best_fit_place(online, r, allow_new=False)
+        elif cfg.policy == "jsq":
+            w = jsq_place(online, r, allow_new=False)
+        else:
+            w = power_of_two_place(online, r, rng, allow_new=False)
+        if w is None:
+            return False
+        r.state = ReqState.PLACED
+        if w.id not in sims:
+            sims[w.id] = SimWorker(w, w.perf, t, cfg.split_phase)
+        return True
+
+    def apply_target(t: float, target: int) -> None:
+        cur = len(online) + len(booting)
+        if target > cur:
+            want = target - cur
+            # reclaim draining workers first: they are warm, boot is free
+            while want > 0 and draining:
+                w = draining.pop()
+                online.append(w)
+                want -= 1
+            for _ in range(want):
+                booting.append([t + scfg.provision_delay, new_worker()])
+        elif target < cur:
+            excess = cur - target
+            # cancel pending boots first (nothing running on them yet)
+            while excess > 0 and booting:
+                booting.pop()
+                excess -= 1
+            # then drain the emptiest online workers; never below the busy
+            # set — draining a loaded worker strands its queue time
+            victims = sorted(online, key=lambda w: w.batch_size)
+            for w in victims:
+                if excess <= 0 or len(online) <= scfg.min_workers:
+                    break
+                if w.batch_size > 0 and queued:
+                    break             # backlog: keep every loaded worker
+                online.remove(w)
+                draining.append(w)
+                excess -= 1
+
+    def step(t: float, t_next: float, arrived: int) -> None:
+        nonlocal queued
+        # workers whose boot completed join the serving set
+        ready = [b for b in booting if b[0] <= t]
+        for b in ready:
+            booting.remove(b)
+            w = b[1]
+            online.append(w)
+            sims[w.id] = SimWorker(w, w.perf, t, cfg.split_phase)
+        queued = [r for r in queued if not place(r, t)]
+        for w in online + draining:
+            sims[w.id].advance_to(t_next, finished, t_start=t)
+        # retire drained workers (billing stops with this heartbeat)
+        for w in list(draining):
+            if not w.ongoing and not w.new_batch \
+                    and not sims[w.id].preempted:
+                draining.remove(w)
+        busy = sum(1 for w in online if w.batch_size > 0)
+        acc["busy_peak"] = max(acc["busy_peak"], busy)
+        acc["peak"] = max(acc["peak"], len(online))
+        acc["gpu_s"] += (len(online) + len(draining) + len(booting)) \
+            * spec.n_accelerators * (t_next - t)
+        acc["beat"] += 1
+        if acc["beat"] % beats_per_epoch == 0:
+            rate = acc["arrivals"] / scfg.interval
+            # workers needed = peak busy set, plus enough extra workers to
+            # absorb any placement backlog at the typical per-worker batch
+            if queued:
+                per_w = sum(w.batch_size for w in online) / max(busy, 1)
+                backlog = max(int(math.ceil(len(queued) / max(per_w, 1.0))),
+                              1)
+            else:
+                backlog = 0
+            needed = acc["busy_peak"] + backlog
+            t_epoch = t_next - scfg.interval
+            tgt = policy.target(t_epoch, rate, needed, len(queued))
+            tgt = max(tgt, busy, scfg.min_workers)
+            tgt = min(tgt, scfg.max_workers)
+            apply_target(t_next, tgt)
+            epochs.append(EpochStat(t=t_epoch, rate=rate, needed=needed,
+                                    target=tgt, online=len(online)))
+            acc["arrivals"] = 0
+            acc["busy_peak"] = 0
+
+    def drained() -> bool:
+        return (not queued
+                and all(not w.ongoing and not w.new_batch
+                        for w in online + draining)
+                and all(not s.preempted for s in sims.values()))
+
+    trace = run_heartbeat_loop(trace, cfg.heartbeat, admit, step, drained)
+
+    atgts = [r.atgt() for r in finished if r.atgt() is not None]
+    ttfts = [r.ttft() for r in finished if r.ttft() is not None]
+    total = len(trace)
+    return ScaleSimResult(
+        policy=getattr(policy, "name", type(policy).__name__),
+        gpu_seconds=acc["gpu_s"],
+        attainment=slo_attainment(finished, total, slo),
+        p99_ttft=float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
+        p99_atgt=float(np.percentile(atgts, 99)) if atgts else float("nan"),
+        mean_atgt=float(np.mean(atgts)) if atgts else float("nan"),
+        finished=len(finished), total=total,
+        peak_workers=acc["peak"], epochs=epochs)

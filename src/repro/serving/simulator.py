@@ -26,9 +26,41 @@ from repro.core.placement import (PlacementConfig, WorkerState,
 from repro.core.rebalance import ErrorTracker, rebalance
 from repro.core.request import ReqState, Request
 from repro.core.scaling import Autoscaler
-from repro.core.slo import SLO
+from repro.core.slo import SLO, slo_attainment
 from repro.core.worker_config import WorkerSpec
 from repro.serving.length_predictor import LengthPredictor
+
+
+def run_heartbeat_loop(trace: Sequence[Request], heartbeat: float,
+                       admit: Callable[[Request], None],
+                       step: Callable[[float, float, int], None],
+                       drained: Callable[[], bool],
+                       tail: float = 240.0) -> List[Request]:
+    """Causal-time heartbeat event core shared by every cluster simulator
+    (colocated, disaggregated, autoscaled).
+
+    Arrivals are admitted at the first heartbeat boundary ``t >= r.arrival``
+    and never before it, so no simulator can see — let alone prefill — a
+    request ahead of its arrival timestamp.  ``admit(r)`` is called once per
+    request in timestamp order, ``step(t, t_next, arrived)`` runs one
+    heartbeat over [t, t_next), and the loop ends when the trace is exhausted
+    and ``drained()`` reports every queue empty (or at the horizon = last
+    arrival + ``tail``).  Returns the time-sorted trace."""
+    trace = sorted(trace, key=lambda r: r.arrival)
+    horizon = (trace[-1].arrival if trace else 0.0) + tail
+    n = len(trace)
+    idx = 0
+    t = 0.0
+    while t < horizon:
+        t_next = t + heartbeat
+        while idx < n and trace[idx].arrival <= t:
+            admit(trace[idx])
+            idx += 1
+        step(t, t_next, idx)
+        t = t_next
+        if idx >= n and drained():
+            break
+    return trace
 
 
 @dataclasses.dataclass
@@ -242,22 +274,17 @@ def simulate(trace: Sequence[Request], perf: PerfModel, slo: SLO,
             sims[w.id] = SimWorker(w, w.perf, 0.0, cfg.split_phase)
     elastic = specs is None and not n_workers
 
-    trace = sorted(trace, key=lambda r: r.arrival)
-    horizon = max(r.arrival for r in trace) + 240.0
     finished: List[Request] = []
     queued: List[Request] = []
-    idx = 0
     moves = 0
-    t = 0.0
     peak_workers = len(workers)
-    while t < horizon:
-        t_next = t + cfg.heartbeat
-        # arrivals in this heartbeat
-        while idx < len(trace) and trace[idx].arrival < t_next:
-            r = trace[idx]
-            r.l_pred = predictor.predict(r.l_in) if predictor else r.l_real
-            queued.append(r)
-            idx += 1
+
+    def admit(r: Request) -> None:
+        r.l_pred = predictor.predict(r.l_in) if predictor else r.l_real
+        queued.append(r)
+
+    def step(t: float, t_next: float, arrived: int) -> None:
+        nonlocal queued, moves, peak_workers
         # re-prediction for underruns (Algorithm 2 inputs)
         for w in workers:
             for r in w.ongoing:
@@ -298,23 +325,23 @@ def simulate(trace: Sequence[Request], perf: PerfModel, slo: SLO,
             tracker.on_finish(r)
             if predictor:
                 predictor.observe(r.l_in, r.l_real)
-        t = t_next
         if observer is not None:
-            observer(t=t, workers=workers, sims=sims, queued=queued,
-                     finished=finished, arrived=idx)
-        if idx >= len(trace) and not queued \
-                and all(not w.ongoing and not w.new_batch for w in workers) \
-                and all(not s.preempted for s in sims.values()):
-            break
+            observer(t=t_next, workers=workers, sims=sims, queued=queued,
+                     finished=finished, arrived=arrived)
+
+    def drained() -> bool:
+        return (not queued
+                and all(not w.ongoing and not w.new_batch for w in workers)
+                and all(not s.preempted for s in sims.values()))
+
+    trace = run_heartbeat_loop(trace, cfg.heartbeat, admit, step, drained)
 
     atgts = [r.atgt() for r in finished if r.atgt() is not None]
     ttfts = [r.ttft() for r in finished if r.ttft() is not None]
-    ok = [r for r in finished if r.slo_ok(slo)]
     total = len(trace)
     return SimResult(
         n_workers_peak=peak_workers,
-        attainment=len(ok) / max(len(finished), 1) *
-        (len(finished) / max(total, 1)),
+        attainment=slo_attainment(finished, total, slo),
         p99_atgt=float(np.percentile(atgts, 99)) if atgts else float("nan"),
         p99_ttft=float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
         mean_atgt=float(np.mean(atgts)) if atgts else float("nan"),

@@ -100,11 +100,12 @@ def burst_trace(cfg: WorkloadConfig, burst_rate: float,
     return nonhomogeneous_trace(cfg, rate_fn, max(base, burst_rate))
 
 
-def diurnal_trace(cfg: WorkloadConfig, amplitude: float = 0.5,
-                  period: Optional[float] = None,
-                  phase: float = 0.0) -> List[Request]:
-    """Sinusoidal day/night demand: rate(t) = mean·(1 + A·sin(2πt/period)).
-    period defaults to the trace duration (one full cycle)."""
+def diurnal_rate_fn(cfg: WorkloadConfig, amplitude: float = 0.5,
+                    period: Optional[float] = None,
+                    phase: float = 0.0) -> Callable[[float], float]:
+    """Ground-truth diurnal rate curve rate(t) = mean·(1 + A·sin(2πt/period)),
+    exposed separately so forecast evaluations can compare predictions
+    against the true intensity (period defaults to the trace duration)."""
     period = period or cfg.duration
     a = min(max(amplitude, 0.0), 1.0)
 
@@ -112,4 +113,14 @@ def diurnal_trace(cfg: WorkloadConfig, amplitude: float = 0.5,
         return cfg.mean_rate * (1.0 + a * np.sin(2 * np.pi * t / period
                                                  + phase))
 
+    return rate_fn
+
+
+def diurnal_trace(cfg: WorkloadConfig, amplitude: float = 0.5,
+                  period: Optional[float] = None,
+                  phase: float = 0.0) -> List[Request]:
+    """Sinusoidal day/night demand: rate(t) = mean·(1 + A·sin(2πt/period)).
+    period defaults to the trace duration (one full cycle)."""
+    a = min(max(amplitude, 0.0), 1.0)
+    rate_fn = diurnal_rate_fn(cfg, amplitude, period, phase)
     return nonhomogeneous_trace(cfg, rate_fn, cfg.mean_rate * (1.0 + a))

@@ -84,3 +84,32 @@ def test_incremental_fit_survives_history_trim():
         sc.observe(r, int(round(0.5 * r + 3)))
     assert sc.k5 == pytest.approx(0.5, abs=0.02)
     assert sc.c5 == pytest.approx(3.0, abs=1.0)
+
+
+def test_rates_are_trimmed_with_history():
+    """Regression: ``rates`` grew without bound (history was trimmed at
+    4096, rates never was)."""
+    from repro.core.scaling import HISTORY_MAX
+    sc = Autoscaler()
+    for i in range(3 * HISTORY_MAX):
+        sc.observe(float(i % 50 + 10), 5)
+    assert len(sc.rates) <= HISTORY_MAX
+    assert len(sc.history) <= HISTORY_MAX
+    # trimming must not break change-point detection on the recent window
+    for _ in range(sc.cfg.change_window):
+        sc.observe(500.0, 100)
+    assert sc.change_point()
+
+
+def test_rate_floor_signature_and_value():
+    """Regression: rate_floor() took (sigma_tokens, mean_interval) and
+    ignored both; the SEM target is relative so the floor depends only on
+    (sem_target, heartbeat)."""
+    import inspect
+    sc = Autoscaler(AutoscalerConfig(heartbeat=10.0, sem_target=0.1))
+    params = inspect.signature(sc.rate_floor).parameters
+    assert len(params) == 0, "rate_floor must not take unused arguments"
+    # n_min = 1/0.1^2 = 100 samples over a 10 s heartbeat -> 10 req/s
+    assert sc.rate_floor() == pytest.approx(10.0)
+    sc2 = Autoscaler(AutoscalerConfig(heartbeat=5.0, sem_target=0.2))
+    assert sc2.rate_floor() == pytest.approx(5.0)

@@ -1,0 +1,104 @@
+"""Causal-time regressions shared by both simulators: no request may be
+admitted — let alone prefilled — before its arrival timestamp, and every
+result reports the one canonical attainment definition (ok / total)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (A100_80G, PAPER_SLOS, make_worker_spec,
+                        slo_attainment)
+from repro.core.request import Request
+from repro.serving import (DisaggConfig, SimConfig, WorkloadConfig,
+                           generate_trace, simulate, simulate_disaggregated)
+from repro.serving.simulator import run_heartbeat_loop
+
+ARCH = get_arch("llama2-70b")
+SLO_70B = PAPER_SLOS["llama2-70b"]
+WCFG = WorkloadConfig(mean_rate=3.0, duration=15.0, seed=9, in_mu=5.0,
+                      in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return make_worker_spec(ARCH, A100_80G, SLO_70B, mean_context=450.0)
+
+
+def test_colocated_first_token_never_leads_arrival(spec):
+    """Regression: the seed's colocated loop admitted arrivals with
+    arrival < t_next at heartbeat start t, stamping first tokens up to one
+    heartbeat before the request existed."""
+    trace = generate_trace(WCFG)
+    res = simulate(trace, spec.perf, SLO_70B, spec.kv_capacity, SimConfig(),
+                   n_workers=4)
+    assert res.finished == res.total
+    for r in trace:
+        assert r.t_first_token is not None
+        assert r.t_first_token >= r.arrival, \
+            f"request {r.id} prefilled {r.arrival - r.t_first_token:.3f}s " \
+            "before it arrived"
+
+
+def test_disagg_first_token_never_leads_arrival(spec):
+    trace = generate_trace(WCFG)
+    res = simulate_disaggregated(trace, SLO_70B, DisaggConfig(), spec, spec,
+                                 n_prefill=2, n_decode=4)
+    assert res.finished == res.total
+    for r in trace:
+        assert r.t_first_token is not None
+        assert r.t_first_token >= r.arrival
+
+
+def test_heartbeat_core_admits_causally():
+    """The shared event core itself: admit is called at the first boundary
+    at-or-after each arrival, in timestamp order."""
+    trace = [Request(l_in=8, l_pred=8, l_real=8, arrival=a)
+             for a in (0.0, 0.1, 0.25, 0.6, 0.6, 2.0)]
+    admitted = []
+
+    def admit(r):
+        admitted.append(r)
+
+    seen = []
+
+    def step(t, t_next, arrived):
+        for r in admitted[len(seen):]:
+            assert r.arrival <= t + 1e-12
+            seen.append(r)
+
+    run_heartbeat_loop(trace, 0.25, admit, step, lambda: True, tail=1.0)
+    assert len(admitted) == len(trace)
+    assert [r.arrival for r in admitted] == sorted(r.arrival for r in trace)
+
+
+def test_attainment_is_ok_over_total_everywhere(spec):
+    """Both simulators must report the shared ok/total definition — the
+    seed encoded ok/finished * finished/total on one side and ok/total on
+    the other."""
+    trace = generate_trace(WCFG)
+    res = simulate(trace, spec.perf, SLO_70B, spec.kv_capacity, SimConfig(),
+                   n_workers=4)
+    ok = sum(1 for r in trace if r.t_finish is not None
+             and r.slo_ok(SLO_70B))
+    assert res.attainment == pytest.approx(ok / len(trace))
+
+    trace_d = generate_trace(WCFG)
+    res_d = simulate_disaggregated(trace_d, SLO_70B, DisaggConfig(), spec,
+                                   spec, n_prefill=2, n_decode=4)
+    ok_d = sum(1 for r in trace_d if r.t_finish is not None
+               and r.slo_ok(SLO_70B))
+    assert res_d.attainment == pytest.approx(ok_d / len(trace_d))
+
+
+def test_slo_attainment_counts_unfinished_as_misses():
+    good = Request(l_in=8, l_pred=8, l_real=8)
+    good.t_first_token = 0.1
+    good.t_finish = 0.5
+    good.t_decode_spent = 0.2
+    bad = Request(l_in=8, l_pred=8, l_real=8)
+    bad.t_first_token = 99.0            # blown TTFT
+    bad.t_finish = 99.5
+    slo = PAPER_SLOS["llama2-70b"]
+    # two finished (one ok), four offered: attainment = 1/4, not 1/2
+    assert slo_attainment([good, bad], 4, slo) == pytest.approx(0.25)
+    assert slo_attainment([], 4, slo) == 0.0
+    assert slo_attainment([], 0, slo) == 0.0

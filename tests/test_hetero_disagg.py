@@ -172,3 +172,120 @@ def test_min_cost_disagg_frontier(specs):
     assert best.n_prefill >= 1 and best.n_decode >= 1
     assert best.gpu_cost == (best.n_prefill + best.n_decode) \
         * a100.n_accelerators
+
+
+# ---- heterogeneous pools -----------------------------------------------------
+
+def test_two_pool_disagg_completes_and_conserves(specs):
+    a100, v100 = specs
+    trace = generate_trace(WCFG)
+    total = len(trace)
+
+    def observer(t, pool_p, states_d, queued_p, in_transfer, queued_d,
+                 finished, arrived):
+        in_prefill = sum(len(w.queue) for w in pool_p)
+        in_decode = sum(len(w.ongoing) + len(w.new_batch) for w in states_d)
+        assert len(finished) + len(queued_p) + in_prefill \
+            + len(in_transfer) + len(queued_d) + in_decode \
+            + (total - arrived) == total, f"request leak at t={t}"
+
+    res = simulate_disaggregated(
+        trace, SLO_70B, DisaggConfig(), observer=observer,
+        prefill_pools=[(a100, 1), (v100, 1)],
+        decode_pools=[(a100, 2), (v100, 2)])
+    assert res.finished == res.total == total
+    assert res.n_prefill == 2 and res.n_decode == 4
+    assert res.gpu_cost == 3 * a100.gpu_cost + 3 * v100.gpu_cost
+    assert a100.name in res.pool_mix and v100.name in res.pool_mix
+    for r in trace:
+        assert r.t_first_token is not None and r.arrival <= r.t_first_token
+
+
+def test_two_pool_legacy_single_pool_results_agree(specs):
+    """A one-type pool list must reproduce the legacy spec+count form
+    exactly (the router degenerates to the seed's ranking)."""
+    a100, _ = specs
+    legacy = simulate_disaggregated(generate_trace(WCFG), SLO_70B,
+                                    DisaggConfig(), a100, a100,
+                                    n_prefill=2, n_decode=3)
+    pooled = simulate_disaggregated(generate_trace(WCFG), SLO_70B,
+                                    DisaggConfig(),
+                                    prefill_pools=[(a100, 2)],
+                                    decode_pools=[(a100, 3)])
+    le, po = dataclasses.asdict(legacy), dataclasses.asdict(pooled)
+    assert le == po
+
+
+def test_affine_router_crossover_and_ttft_fallthrough(specs):
+    """The affine score routes short prompts to the cheap pool and long
+    prompts to the fast one (crossover), and prompts the cheap pool cannot
+    prefill within TTFT fall through to the fast pool instead of starving.
+
+    cheap: score = 1e-3 * l_in            (1 accel, k1=1e-3, c1=0)
+    fast:  score = 4e-4 * l_in + 0.2      (4 accels, k1=1e-4, c1=0.05)
+    crossover at l_in ~ 333; cheap infeasible once prefill > TTFT."""
+    a100, _ = specs
+    from repro.serving.disagg import prefill_affinity
+    cheap = dataclasses.replace(
+        a100, perf=PerfModel(kv=a100.perf.kv,
+                             prefill=PrefillModel(k1=1e-3, c1=0.0),
+                             decode=a100.perf.decode),
+        n_accelerators=1, name="cheap")
+    fast = dataclasses.replace(
+        a100, perf=PerfModel(kv=a100.perf.kv,
+                             prefill=PrefillModel(k1=1e-4, c1=0.05),
+                             decode=a100.perf.decode),
+        n_accelerators=4, name="fast")
+    assert prefill_affinity(cheap, 100) < prefill_affinity(fast, 100)
+    assert prefill_affinity(cheap, 1000) > prefill_affinity(fast, 1000)
+
+    trace = generate_trace(WCFG)
+    iters = {}
+
+    def observer(t, pool_p, **kw):
+        for w in pool_p:
+            iters[w.id] = w.iters
+
+    res = simulate_disaggregated(trace, SLO_70B, DisaggConfig(),
+                                 observer=observer,
+                                 prefill_pools=[(cheap, 1), (fast, 1)],
+                                 decode_pools=[(a100, 4)])
+    assert res.finished == res.total      # TTFT-infeasible prompts fell
+    for r in trace:                       # through instead of starving
+        assert r.ttft() is not None and r.arrival <= r.t_first_token
+    assert iters.get(1, 0) > 0, "cheap pool never served a short prompt"
+    assert iters.get(2, 0) > 0, "fast pool never served a long prompt"
+
+
+def test_min_cost_disagg_prune_matches_exhaustive_grid(specs):
+    """The frontier walk's break on the n_p cost lower bound must never
+    skip a cheaper feasible point: compare against brute force over the
+    whole (n_p, n_d) grid on the same traces."""
+    a100, _ = specs
+    cfg = DisaggConfig()
+    max_p, max_d = 3, 6
+    target = 0.9
+
+    for seed in (3, 5):
+        wcfg = dataclasses.replace(WCFG, seed=seed, duration=10.0)
+
+        def tf():
+            return generate_trace(wcfg)
+
+        got = min_cost_disagg(tf, SLO_70B, cfg, a100, a100, target,
+                              max_prefill=max_p, hi_decode=max_d)
+        # brute force
+        best_cost = None
+        for n_p in range(1, max_p + 1):
+            for n_d in range(1, max_d + 1):
+                res = simulate_disaggregated(tf(), SLO_70B, cfg, a100, a100,
+                                             n_prefill=n_p, n_decode=n_d)
+                if res.attainment >= target and res.finished == res.total:
+                    if best_cost is None or res.gpu_cost < best_cost:
+                        best_cost = res.gpu_cost
+        if best_cost is None:
+            assert got is None
+        else:
+            assert got is not None
+            assert got.gpu_cost == best_cost, \
+                f"seed {seed}: prune found {got.gpu_cost}, grid {best_cost}"

@@ -84,7 +84,8 @@ def test_constraint_d_preemption_budget():
                     kv_capacity=1e12)
     ongoing = Request(l_in=100, l_pred=50)
     ongoing.l_out = 10
-    ongoing.t_decode_spent = 0.4         # slack = 0.05*10 - 0.4 = 0.1s
+    # ATGT divides by (l_out - 1): banked slack = 0.05*(10-1) - 0.35 = 0.1s
+    ongoing.t_decode_spent = 0.35
     w.ongoing.append(ongoing)
     assert w.feasible([Request(l_in=90, l_pred=10)])      # 0.09s prefill
     assert not w.feasible([Request(l_in=200, l_pred=10)])  # 0.2s prefill
