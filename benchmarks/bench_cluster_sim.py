@@ -29,20 +29,21 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core.perf_model import PerfModel
+from repro.core.scaling import SpotMixConfig
 from repro.core.slo import PAPER_SLOS
 from repro.core.worker_config import (A100_80G, V100_32G, make_worker_spec,
-                                      optimal_worker_config)
+                                      optimal_worker_config, spot_variant)
 from repro.serving.disagg import DisaggConfig, min_cost_disagg
 from repro.serving.forecast import (ForecastConfig, ForecastPolicy,
                                     ReactivePolicy, ScaleSimConfig,
-                                    SeasonalNaiveForecaster,
+                                    SeasonalNaiveForecaster, SpotMarket,
                                     simulate_autoscaled)
 from repro.serving.length_predictor import LengthPredictor
 from repro.serving.simulator import (SimConfig, min_workers_for_slo,
                                      simulate)
 from repro.serving.workload import (WorkloadConfig, burst_trace,
                                     diurnal_trace, generate_trace,
-                                    sample_lengths)
+                                    preemption_trace, sample_lengths)
 
 MODEL = "llama2-70b"
 ATTAIN = 0.98
@@ -370,9 +371,83 @@ def run_forecast(verbose: bool = True, duration: float = 600.0,
     return rows
 
 
+def run_spot(verbose: bool = True, duration: float = 600.0,
+             period: float = 300.0, rate: float = 6.0,
+             amplitude: float = 0.6, seed: int = 21,
+             hazard: float = 1.0 / 600.0, discount: float = 0.35,
+             event_frac: float = 0.25, event_seed: int = 13) -> List[Dict]:
+    """Spot-aware vs all-on-demand forecast scaling on the default diurnal
+    trace. The spot pool bills at ``discount`` of on-demand but is reclaimed
+    by a ``preemption_trace`` market (per-worker hazard ~ event_rate * frac);
+    reclaimed workers drop their in-flight requests back into the queue with
+    the full KV re-prefill recovery cost. The mix policy serves the diurnal
+    trough on-demand and the swing on hazard-inflated spot capacity; billed
+    GPU-seconds are price-weighted, so the row pair is the paper-style
+    claim: same attainment target, lower serving cost."""
+    arch = get_arch(MODEL)
+    slo = PAPER_SLOS[MODEL]
+    spec = make_worker_spec(arch, A100_80G, slo, mean_context=450.0)
+    spot_spec = spot_variant(spec, price=discount, preempt_hazard=hazard)
+    wcfg = WorkloadConfig(mean_rate=rate, duration=duration, seed=seed,
+                          in_mu=5.0, in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+
+    def trace_fn():
+        return diurnal_trace(wcfg, amplitude=amplitude, period=period)
+
+    scfg = ScaleSimConfig(interval=5.0, provision_delay=10.0, cooldown=60.0,
+                          initial_workers=5)
+    events = preemption_trace(duration, event_rate=hazard / event_frac,
+                              frac=event_frac, seed=event_seed)
+
+    def policy(mix):
+        fc = SeasonalNaiveForecaster(ForecastConfig(period=period,
+                                                    bin_width=scfg.interval))
+        return ForecastPolicy(scfg, fc, spot_mix=mix)
+
+    mix = SpotMixConfig(discount=discount, hazard=hazard, max_spot_frac=0.7)
+    runs = {
+        "on_demand": simulate_autoscaled(trace_fn(), spec, slo, SimConfig(),
+                                         scfg, policy(None)),
+        "spot_mix": simulate_autoscaled(trace_fn(), spec, slo, SimConfig(),
+                                        scfg, policy(mix),
+                                        spot=SpotMarket(spot_spec, events)),
+    }
+    rows: List[Dict] = []
+    for label, res in runs.items():
+        rows.append({
+            "name": f"spot_{label}", "us_per_call": 0.0,
+            "scenario": "spot", "policy": label,
+            "gpu_cost": res.gpu_seconds, "gpu_seconds": res.gpu_seconds,
+            "spot_gpu_seconds": res.spot_gpu_seconds,
+            "attainment": res.attainment, "p99_ttft": res.p99_ttft,
+            "p99_atgt": res.p99_atgt, "peak_workers": res.peak_workers,
+            "preempted_workers": res.preempted_workers,
+            "requeued": res.requeued,
+            "derived": (f"gpu_s={res.gpu_seconds:.0f};"
+                        f"spot_s={res.spot_gpu_seconds:.0f};"
+                        f"attain={res.attainment:.4f};"
+                        f"killed={res.preempted_workers};"
+                        f"requeued={res.requeued};"
+                        f"peak={res.peak_workers}")})
+    od, sp = runs["on_demand"], runs["spot_mix"]
+    saving = 1.0 - sp.gpu_seconds / od.gpu_seconds if od.gpu_seconds else 0.0
+    rows.append({"name": "spot_saving", "us_per_call": 0.0,
+                 "scenario": "spot", "gpu_cost": sp.gpu_seconds,
+                 "attainment": sp.attainment,
+                 "derived": (f"save_vs_on_demand={saving:.3f};"
+                             f"spot_attain={sp.attainment:.4f};"
+                             f"od_attain={od.attainment:.4f};"
+                             f"events={len(events)}")})
+    if verbose:
+        for row in rows:
+            print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    _write_bench("spot", rows)
+    return rows
+
+
 SCENARIOS = {"fig": run, "hetero": run_hetero, "disagg": run_disagg,
              "hot_loop": run_hot_loop, "burst": run_burst,
-             "forecast": run_forecast}
+             "forecast": run_forecast, "spot": run_spot}
 
 # shrunken per-scenario parameters for the CI canary (--smoke)
 SMOKE_PARAMS = {
@@ -382,6 +457,8 @@ SMOKE_PARAMS = {
     "hot_loop": dict(duration=20.0, repeats=1),
     "burst": dict(duration=15.0),
     "forecast": dict(duration=150.0, period=75.0, rate=4.0),
+    "spot": dict(duration=150.0, period=75.0, rate=4.0,
+                 hazard=1.0 / 150.0, event_seed=2),
 }
 
 

@@ -13,9 +13,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch, reduced
-from repro.core.perf_model import (DecodeModel, KVModel, PrefillModel)
-from repro.core.request import Request
-from repro.models.model import LM, ExecConfig
+from repro.core.perf_model import DecodeModel, KVModel, PrefillModel
+from repro.models.model import LM
 from repro.serving.engine import EngineConfig, PagedEngine
 
 

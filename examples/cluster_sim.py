@@ -10,17 +10,18 @@ import numpy as np
 from benchmarks.bench_cluster_sim import (_kv_cap_tokens, _perf_for,
                                           _predictor, _trace_fn, MODEL)
 from repro.configs import get_arch
-from repro.core.scaling import Autoscaler
+from repro.core.scaling import Autoscaler, SpotMixConfig
 from repro.core.slo import PAPER_SLOS
 from repro.core.worker_config import (A100_80G, V100_32G, make_worker_spec,
-                                      optimal_worker_config)
+                                      optimal_worker_config, spot_variant)
 from repro.serving.disagg import DisaggConfig, min_cost_disagg
 from repro.serving.forecast import (ForecastConfig, ForecastPolicy,
                                     ReactivePolicy, ScaleSimConfig,
-                                    SeasonalNaiveForecaster,
+                                    SeasonalNaiveForecaster, SpotMarket,
                                     simulate_autoscaled)
 from repro.serving.simulator import SimConfig, min_workers_for_slo, simulate
-from repro.serving.workload import WorkloadConfig, diurnal_trace
+from repro.serving.workload import (WorkloadConfig, diurnal_trace,
+                                    preemption_trace)
 
 
 def main() -> None:
@@ -105,6 +106,17 @@ def main() -> None:
         print(f"  2-pool hetero: {het.gpu_cost:g} GPUs ({het.pool_mix}, "
               f"attain={het.attainment:.3f})")
 
+    # pool-*ratio* search: instead of a fixed 50/50 mix, let min_cost_disagg
+    # sweep the A100 share on both sides and keep the cheapest ratio
+    rat = min_cost_disagg(_trace_fn(2.0, duration=15.0), slo, DisaggConfig(),
+                          attain_target=0.95, max_prefill=4, hi_decode=32,
+                          predictor=_predictor(),
+                          prefill_mix=[a100, v100], decode_mix=[a100, v100],
+                          ratio_grid=(0.0, 0.5, 1.0))
+    if rat is not None:
+        print(f"  ratio search:  {rat.gpu_cost:g} GPUs ({rat.pool_mix}, "
+              f"attain={rat.attainment:.3f})")
+
     # forecast-aware vs reactive scaling on a diurnal day (provision delay
     # 10s): the forecaster provisions before the ramp and sheds on descent
     print("\nforecast-aware vs reactive scaling (diurnal, 2 periods):")
@@ -120,6 +132,25 @@ def main() -> None:
                                 a100, slo, SimConfig(), scfg, pol)
         print(f"  {r.policy:9s} gpu_seconds={r.gpu_seconds:8.0f} "
               f"attain={r.attainment:.3f} peak={r.peak_workers}")
+
+    # spot-aware mix: the diurnal trough stays on-demand, the swing rides
+    # spot capacity billed at a discount but reclaimable by the market —
+    # reclaimed workers requeue their work with a full KV re-prefill
+    print("\nspot-aware mix vs all-on-demand (same trace):")
+    hazard = 1.0 / 300.0
+    sspec = spot_variant(a100, price=0.35, preempt_hazard=hazard)
+    market = SpotMarket(sspec, preemption_trace(dur, event_rate=hazard / 0.25,
+                                                frac=0.25, seed=13))
+    fc2 = SeasonalNaiveForecaster(ForecastConfig(period=period,
+                                                 bin_width=5.0))
+    pol = ForecastPolicy(scfg, fc2,
+                         spot_mix=SpotMixConfig(discount=0.35, hazard=hazard))
+    r = simulate_autoscaled(diurnal_trace(fcfg, amplitude=0.6, period=period),
+                            a100, slo, SimConfig(), scfg, pol, spot=market)
+    print(f"  spot mix  gpu_seconds={r.gpu_seconds:8.0f} "
+          f"(spot share {r.spot_gpu_seconds:.0f}) "
+          f"attain={r.attainment:.3f} reclaimed={r.preempted_workers} "
+          f"requeued={r.requeued}")
 
     # diurnal trace through the elastic simulator
     wcfg = WorkloadConfig(mean_rate=4.0, duration=30.0, seed=17, in_mu=5.0,

@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare freshly written BENCH_*.json rows against
+committed smoke baselines.
+
+The smoke bench (`bench_cluster_sim.py --scenario all --smoke`) is seeded and
+deterministic, so on unchanged code the fresh rows match the baselines under
+`benchmarks/baselines/` exactly; tolerances exist so legitimate modeling
+changes within the stated envelope do not fail CI. The gate enforces, per row
+matched by name:
+
+  * attainment may not drop more than --attain-tol (absolute), and
+  * gpu_cost may not regress (grow) more than --cost-tol (relative).
+
+A scenario file or row present in the baselines but missing from the fresh
+run fails the gate (a silently dropped scenario is a regression too). Rows
+whose baseline metric is missing/NaN are skipped for that metric. When a PR
+intentionally shifts the numbers, regenerate the baselines
+(`python scripts/check_bench.py --update`) and commit the diff.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import shutil
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+BASELINE_DIR = REPO / "benchmarks" / "baselines"
+
+
+def load_rows(path: Path) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {row["name"]: row for row in data.get("rows", [])}
+
+
+def finite(row: dict, key: str):
+    v = row.get(key)
+    if isinstance(v, (int, float)) and math.isfinite(v):
+        return float(v)
+    return None
+
+
+def check_file(base_path: Path, fresh_path: Path, attain_tol: float,
+               cost_tol: float) -> list:
+    problems = []
+    if not fresh_path.exists():
+        return [f"{fresh_path.name}: missing (scenario no longer writes "
+                f"its bench file)"]
+    base = load_rows(base_path)
+    fresh = load_rows(fresh_path)
+    for name, brow in base.items():
+        frow = fresh.get(name)
+        if frow is None:
+            problems.append(f"{fresh_path.name}: row '{name}' disappeared")
+            continue
+        b_att, f_att = finite(brow, "attainment"), finite(frow, "attainment")
+        if b_att is not None and f_att is not None \
+                and f_att < b_att - attain_tol:
+            problems.append(
+                f"{fresh_path.name}:{name}: attainment dropped "
+                f"{b_att:.4f} -> {f_att:.4f} (tol {attain_tol})")
+        b_cost, f_cost = finite(brow, "gpu_cost"), finite(frow, "gpu_cost")
+        if b_cost is not None and f_cost is not None \
+                and f_cost > b_cost * (1.0 + cost_tol):
+            problems.append(
+                f"{fresh_path.name}:{name}: gpu_cost regressed "
+                f"{b_cost:.1f} -> {f_cost:.1f} "
+                f"(+{(f_cost / b_cost - 1.0) * 100:.1f}% > "
+                f"{cost_tol * 100:.0f}%)")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh-dir", type=Path, default=REPO,
+                    help="where the smoke bench wrote BENCH_*.json")
+    ap.add_argument("--baseline-dir", type=Path, default=BASELINE_DIR)
+    ap.add_argument("--attain-tol", type=float, default=0.01,
+                    help="max absolute attainment drop per row")
+    ap.add_argument("--cost-tol", type=float, default=0.10,
+                    help="max relative gpu_cost growth per row")
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh BENCH files over the baselines "
+                    "instead of checking (for intentional shifts)")
+    args = ap.parse_args()
+
+    baselines = sorted(args.baseline_dir.glob("BENCH_*.json"))
+    if args.update:
+        args.baseline_dir.mkdir(parents=True, exist_ok=True)
+        updated = 0
+        for fresh in sorted(args.fresh_dir.glob("BENCH_*.json")):
+            shutil.copy(fresh, args.baseline_dir / fresh.name)
+            updated += 1
+        print(f"check_bench: baselines updated from {updated} fresh files")
+        return 0
+    if not baselines:
+        print(f"check_bench: no baselines under {args.baseline_dir}; "
+              f"run with --update after a smoke bench to create them",
+              file=sys.stderr)
+        return 1
+
+    problems = []
+    checked = 0
+    for base_path in baselines:
+        problems += check_file(base_path, args.fresh_dir / base_path.name,
+                               args.attain_tol, args.cost_tol)
+        checked += 1
+    if problems:
+        print(f"check_bench: {len(problems)} regression(s) vs committed "
+              f"baselines:", file=sys.stderr)
+        for p in problems:
+            print(f"  FAIL {p}", file=sys.stderr)
+        print("If the shift is intentional, refresh the baselines with "
+              "`python scripts/check_bench.py --update` and commit.",
+              file=sys.stderr)
+        return 1
+    print(f"check_bench: OK ({checked} scenario files within tolerances: "
+          f"attainment -{args.attain_tol}, gpu_cost +{args.cost_tol:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,17 +1,50 @@
 #!/usr/bin/env bash
-# Tier-1 test suite + a cluster-simulator smoke benchmark (all scenarios,
-# including the forecast-aware scaling one), so simulator performance and
-# cost-metric regressions fail CI rather than landing silently. Each smoke
-# scenario also writes its BENCH_<scenario>.json cost row.
+# CI entrypoint — the one pipeline both local runs and the GitHub Actions
+# workflow (.github/workflows/ci.yml) execute:
+#   1. lint/format gate (ruff; skipped with a warning where not installed,
+#      the workflow always installs it so the gate is real on every PR)
+#   2. tier-1 pytest
+#   3. cluster-sim smoke bench (all scenarios, incl. forecast + spot) under
+#      a 90s budget — a timeout is reported as a PERF regression, distinct
+#      from a crash
+#   4. scripts/check_bench.py — fresh BENCH_*.json rows vs the committed
+#      baselines (attainment may not drop, gpu_cost may not regress >10%)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== lint (ruff check + format) =="
+if command -v ruff >/dev/null 2>&1; then
+  ruff check .
+  # format coverage starts with the CI tooling added in PR 3; widen as
+  # older files are migrated to ruff's formatter style
+  ruff format --check scripts/check_bench.py
+else
+  echo "WARNING: ruff not installed locally; lint gate skipped here" \
+       "(GitHub Actions installs ruff and enforces it on every PR)"
+fi
+
 echo "== tier-1 pytest =="
 python -m pytest -x -q
 
-echo "== cluster-sim smoke bench (budget: 90s, incl. forecast scenario) =="
+echo "== cluster-sim smoke bench (budget: 90s, all scenarios) =="
 start=$(date +%s)
+set +e
 timeout 90 python benchmarks/bench_cluster_sim.py --scenario all --smoke
+rc=$?
+set -e
+if [ "$rc" -eq 124 ]; then
+  echo "ERROR: smoke bench exceeded its 90s budget and was killed by" >&2
+  echo "timeout(1). This is a simulator PERFORMANCE regression (or an" >&2
+  echo "accidentally enlarged smoke scenario), not a test failure —" >&2
+  echo "profile the hot loop (--scenario hot_loop) before retrying." >&2
+  exit 1
+elif [ "$rc" -ne 0 ]; then
+  echo "ERROR: smoke bench crashed with exit code $rc (not a timeout)." >&2
+  exit "$rc"
+fi
 echo "smoke bench took $(( $(date +%s) - start ))s"
+
+echo "== bench regression gate (check_bench.py) =="
+python scripts/check_bench.py

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import math
 from typing import Optional, Sequence
 
 

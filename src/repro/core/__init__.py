@@ -17,12 +17,13 @@ from repro.core.placement import (PlacementConfig, WorkerState,               # 
                                   power_of_two_place)
 from repro.core.rebalance import ErrorTracker, rebalance                      # noqa: F401
 from repro.core.request import ReqState, Request                              # noqa: F401
-from repro.core.scaling import Autoscaler, AutoscalerConfig                   # noqa: F401
+from repro.core.scaling import (Autoscaler, AutoscalerConfig,                 # noqa: F401
+                                SpotMixConfig, split_spot_mix)
 from repro.core.slo import PAPER_SLOS, SLO, slo_attainment                    # noqa: F401
 from repro.core.worker_config import (A100_80G, TPU_V5E, V100_32G,            # noqa: F401
                                       HardwareSpec, WorkerConfig, WorkerSpec,
                                       make_worker_spec,
-                                      optimal_worker_config)
+                                      optimal_worker_config, spot_variant)
 from repro.core.distributed_scheduler import (GroupedScheduler,               # noqa: F401
                                               SchedLatencyModel,
                                               choose_group_count)

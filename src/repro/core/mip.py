@@ -6,10 +6,9 @@ by tests to certify Algorithm 1's near-optimality (best-fit is 1.7-competitive
 for classical bin packing; the paper calls it near-optimal)."""
 from __future__ import annotations
 
-import copy
 from typing import Callable, List, Optional, Sequence
 
-from repro.core.placement import PlacementConfig, WorkerState
+from repro.core.placement import WorkerState
 from repro.core.request import Request
 
 

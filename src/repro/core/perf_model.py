@@ -16,7 +16,7 @@ paper's but numerically better conditioned than (l_ave, b).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Sequence
 
 import numpy as np
 

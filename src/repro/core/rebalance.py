@@ -15,7 +15,7 @@ requests from positive-error (over-utilized) workers to negative-error ones,
 greedily minimizing Σ|err_i| while preserving feasibility."""
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.core.placement import WorkerState
 from repro.core.request import Request
@@ -71,7 +71,6 @@ def rebalance(workers: List[WorkerState], tracker: ErrorTracker,
     # costs different latency on different hardware (its own Eq. 4 line)
     coef = {w.id: (w.perf.decode.k2, w.perf.decode.c2) for w in workers}
     errs = {w.id: tracker.err(w.id, *coef[w.id]) for w in workers}
-    by_id = {w.id: w for w in workers}
     moves = 0
     improved = True
     while improved and moves < max_moves:

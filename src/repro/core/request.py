@@ -35,6 +35,13 @@ class Request:
     t_prefill_start: Optional[float] = None
     repredicted: bool = False              # Alg. 2: re-predicted after overrun
     tokens: Optional[object] = None        # actual token ids (engine only)
+    # spot-preemption recovery: the worker serving this request was reclaimed
+    # mid-flight, its KV was lost, and the request re-entered the queue. The
+    # generated-token count (l_out) is retained — recovery re-prefills the
+    # prompt AND the tokens generated so far — and the stall from reclaim to
+    # re-prefill completion is charged against the ATGT clock.
+    preempt_count: int = 0                 # times reclaimed mid-flight
+    t_preempted: Optional[float] = None    # pending reclaim stall start
 
     # ---- derived ------------------------------------------------------------
     @property

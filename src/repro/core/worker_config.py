@@ -16,7 +16,7 @@ The optimum is arrival-rate independent (§4.1), so it is computed once per
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 from repro.core.perf_model import (DecodeModel, KVModel, PerfModel,
                                    PrefillModel)
@@ -66,17 +66,40 @@ class WorkerSpec:
     in the same units the spec's KVModel outputs (token units for specs built
     by ``make_worker_spec``); ``kv_bytes_per_token`` is kept separately so
     the disaggregated simulator can price the prefill->decode KV transfer in
-    bytes regardless of those units."""
+    bytes regardless of those units.
+
+    ``price`` and ``preempt_hazard`` describe the worker's market class:
+    on-demand capacity is ``price=1.0, preempt_hazard=0`` (the default);
+    a spot/preemptible variant of the same hardware bills at a discount but
+    can be reclaimed by the provider at any time — ``preempt_hazard`` is the
+    per-worker per-second reclaim rate the mix planner
+    (``core.scaling.split_spot_mix``) provisions against. Billed cost is
+    always ``gpu_cost = n_accelerators * price``."""
     perf: PerfModel
     kv_capacity: float
     max_batch: int = 128
     n_accelerators: int = 1
     name: str = "worker"
     kv_bytes_per_token: float = 0.0
+    price: float = 1.0               # $/accelerator-s relative to on-demand
+    preempt_hazard: float = 0.0      # per-second reclaim rate (0 = on-demand)
 
     @property
     def gpu_cost(self) -> float:
-        return float(self.n_accelerators)
+        return float(self.n_accelerators) * self.price
+
+    @property
+    def is_spot(self) -> bool:
+        return self.price < 1.0 or self.preempt_hazard > 0.0
+
+
+def spot_variant(spec: WorkerSpec, price: float = 0.35,
+                 preempt_hazard: float = 1.0 / 1800.0) -> WorkerSpec:
+    """The preemptible twin of an on-demand worker type: same hardware and
+    latency models, billed at ``price`` of on-demand, reclaimable at
+    ``preempt_hazard`` per second."""
+    return dataclasses.replace(spec, name=f"{spec.name}-spot", price=price,
+                               preempt_hazard=preempt_hazard)
 
 
 def make_worker_spec(arch, hw: HardwareSpec, slo,

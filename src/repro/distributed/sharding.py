@@ -21,7 +21,7 @@ Default mappings per (arch, shape) are chosen by ``make_policy``:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple, Union
+from typing import Optional, Sequence, Tuple
 
 import jax
 import numpy as np

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention.decode_attention import (
     paged_decode_attention_pallas)
-from repro.kernels.decode_attention.ref import (
+from repro.kernels.decode_attention.ref import (    # noqa: F401 (re-export)
     attend_partial, decode_attention_ref, merge_partials, paged_decode_ref)
 
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 from typing import Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30

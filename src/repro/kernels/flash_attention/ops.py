@@ -8,8 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
-from repro.kernels.flash_attention.ref import (attention_dense_ref,
-                                               flash_attention_ref)
+from repro.kernels.flash_attention.ref import (     # noqa: F401 (re-export)
+    attention_dense_ref, flash_attention_ref)
 
 
 def _on_tpu() -> bool:

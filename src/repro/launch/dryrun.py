@@ -133,7 +133,7 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
         from repro.training.optimizer import init_opt_state
         opt_shape = jax.eval_shape(
             lambda p: init_opt_state(p, compression=False), params_shape)
-        f32 = lambda t: t  # opt state shards like params
+        # opt state shards like params
         opt_sh = type(opt_shape)(
             step=NamedSharding(mesh, P()),
             mu=pspecs, nu=pspecs, master=pspecs, ef=None)

@@ -5,8 +5,6 @@ jax device state. The dry-run launcher forces 512 host platform devices
 *before* any jax import; everything else sees the real device count."""
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 
 

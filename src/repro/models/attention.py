@@ -125,7 +125,6 @@ def self_attention_decode(x, cache: AttnCache, p, arch,
                           ) -> Tuple[jnp.ndarray, AttnCache]:
     """One-token decode with the staged cache. x: (B, D) -> (B, D)."""
     b, d = x.shape
-    hd = arch.resolved_head_dim
     pos = cache.big_len + cache.recent_len              # scalar position
     q, k, v = _qkv(x[:, None, :], p, arch, policy)
     q, k = _apply_rope(arch, q, k, pos[None])

@@ -23,7 +23,6 @@ without materializing anything.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -32,10 +31,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, Family, PosEmb
 from repro.distributed.sharding import NO_POLICY, Policy
-from repro.models import attention as attn_mod
 from repro.models.attention import (AttnCache, cross_attention_decode,
                                     cross_attention_full, flush_cache,
-                                    make_attn_cache, self_attention_decode,
+                                    self_attention_decode,
                                     self_attention_full)
 from repro.models.common import gated_mlp, rms_norm, sinusoidal_pos
 from repro.models.mamba2 import (MambaCache, make_mamba_cache,
@@ -451,7 +449,6 @@ class LM:
 
                 def body(carry, lp):
                     y = carry
-                    inner_caches = []
 
                     def inner(c2, lp2):
                         y2, cc = self._mamba_layer_full(c2, lp2, return_cache)

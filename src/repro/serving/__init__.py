@@ -2,20 +2,20 @@
 plane, discrete-event simulator, workload + length prediction."""
 from repro.serving.cluster import ClusterConfig, ServingCluster      # noqa: F401
 from repro.serving.disagg import (DisaggConfig, DisaggResult,        # noqa: F401
-                                  min_cost_disagg,
+                                  min_cost_disagg, ratio_pool_fn,
                                   simulate_disaggregated)
 from repro.serving.engine import EngineConfig, PagedEngine           # noqa: F401
 from repro.serving.forecast import (EWMAForecaster, ForecastConfig,  # noqa: F401
                                     ForecastPolicy, ReactivePolicy,
                                     ScaleSimConfig, ScaleSimResult,
-                                    SeasonalNaiveForecaster,
+                                    SeasonalNaiveForecaster, SpotMarket,
                                     simulate_autoscaled)
 from repro.serving.length_predictor import LengthPredictor           # noqa: F401
 from repro.serving.simulator import (SimConfig, SimResult,           # noqa: F401
                                      min_workers_for_slo,
                                      run_heartbeat_loop, simulate)
-from repro.serving.workload import (WorkloadConfig, burst_trace,     # noqa: F401
-                                    diurnal_rate_fn, diurnal_trace,
-                                    generate_trace,
-                                    nonhomogeneous_trace,
+from repro.serving.workload import (PreemptionEvent, WorkloadConfig,  # noqa: F401
+                                    burst_trace, diurnal_rate_fn,
+                                    diurnal_trace, generate_trace,
+                                    nonhomogeneous_trace, preemption_trace,
                                     sample_lengths)

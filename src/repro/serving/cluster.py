@@ -27,7 +27,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.perf_model import PerfModel, analytic_perf_model
+from repro.core.perf_model import analytic_perf_model
 from repro.core.placement import (PlacementConfig, WorkerState,
                                   best_fit_place, jsq_place)
 from repro.core.rebalance import ErrorTracker, rebalance

@@ -26,7 +26,9 @@ disaggregated TTFTs are measured under identical admission semantics.
 returns the cheapest configuration meeting the SLO target, directly
 comparable with the colocated ``min_workers_for_slo`` cost on the same
 trace; ``prefill_pool_fn`` / ``decode_pool_fn`` map a worker count to a
-heterogeneous pool mix for the same search.
+heterogeneous pool mix at a fixed ratio, while ``prefill_mix`` /
+``decode_mix`` + ``ratio_grid`` make the pool-type ratio itself a search
+dimension (the cheapest (ratio_p, ratio_d, n_p, n_d) point wins).
 """
 from __future__ import annotations
 
@@ -35,7 +37,6 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.perf_model import PerfModel
 from repro.core.placement import (PlacementConfig, WorkerState,
                                   best_fit_place, jsq_place)
 from repro.core.request import ReqState, Request
@@ -316,6 +317,27 @@ def simulate_disaggregated(trace: Sequence[Request], slo: SLO,
         pool_mix=_mix_label(p_pools, d_pools))
 
 
+def ratio_pool_fn(specs: Sequence[WorkerSpec],
+                  ratio: float) -> Callable[[int], List[Pool]]:
+    """Map a worker count n to a two-type (spec, count) mix at a fixed
+    ratio: ``round(n * ratio)`` workers of ``specs[0]``, the rest of
+    ``specs[1]`` (a single spec ignores the ratio). Rounding keeps both
+    per-type counts — hence the pool cost — monotone in n, which the
+    ``min_cost_disagg`` frontier prune requires."""
+    if len(specs) == 1:
+        return lambda n: [(specs[0], n)]
+    if len(specs) != 2:
+        raise ValueError("ratio mixes support exactly 1 or 2 worker types")
+    a, b = specs
+    r = min(max(ratio, 0.0), 1.0)
+
+    def fn(n: int) -> List[Pool]:
+        na = int(round(n * r))
+        return [(s, k) for s, k in ((a, na), (b, n - na)) if k > 0]
+
+    return fn
+
+
 def min_cost_disagg(trace_fn, slo: SLO, cfg: DisaggConfig,
                     prefill_spec: Optional[WorkerSpec] = None,
                     decode_spec: Optional[WorkerSpec] = None,
@@ -327,46 +349,78 @@ def min_cost_disagg(trace_fn, slo: SLO, cfg: DisaggConfig,
                     = None,
                     decode_pool_fn: Optional[Callable[[int],
                                                       Sequence[Pool]]]
-                    = None) -> Optional[DisaggResult]:
+                    = None,
+                    prefill_mix: Optional[Sequence[WorkerSpec]] = None,
+                    decode_mix: Optional[Sequence[WorkerSpec]] = None,
+                    ratio_grid: Sequence[float] = (0.0, 0.25, 0.5,
+                                                   0.75, 1.0)
+                    ) -> Optional[DisaggResult]:
     """Walk the joint (n_prefill, n_decode) frontier: for each prefill-pool
     size, binary-search the minimum decode pool meeting the target, and keep
     the cheapest feasible point. Returns None if nothing within the bounds
     attains the target.
 
     ``prefill_pool_fn(n)`` / ``decode_pool_fn(n)`` map a worker count to a
-    heterogeneous (spec, count) mix — e.g. a 50/50 A100/V100 split; they must
+    heterogeneous (spec, count) mix at a ratio the caller fixed; they must
     be monotone (cost non-decreasing in n) for the frontier prune to stay
-    exact. The default is n homogeneous workers of the given spec."""
-    pf = prefill_pool_fn or (lambda n: [(prefill_spec, n)])
-    df = decode_pool_fn or (lambda n: [(decode_spec, n)])
+    exact. The default is n homogeneous workers of the given spec.
+
+    ``prefill_mix`` / ``decode_mix`` (each one or two ``WorkerSpec``) search
+    the pool-type *ratio* jointly instead of fixing it: every ratio in
+    ``ratio_grid`` (share of the first spec) is frontier-walked on both
+    sides, sharing one best-so-far cost bound so expensive ratios are pruned
+    before their first simulation where possible."""
     best: Optional[DisaggResult] = None
-    min_decode_cost = pool_cost(df(1))
 
     def attains(res: DisaggResult) -> bool:
         return res.attainment >= attain_target and res.finished == res.total
 
-    def run(n_p: int, n_d: int) -> DisaggResult:
-        return simulate_disaggregated(trace_fn(), slo, cfg,
-                                      predictor=predictor,
-                                      prefill_pools=pf(n_p),
-                                      decode_pools=df(n_d))
+    def frontier(pf: Callable[[int], Sequence[Pool]],
+                 df: Callable[[int], Sequence[Pool]],
+                 best: Optional[DisaggResult]) -> Optional[DisaggResult]:
+        min_decode_cost = pool_cost(df(1))
 
-    for n_p in range(1, max_prefill + 1):
-        if best is not None and \
-                pool_cost(pf(n_p)) + min_decode_cost >= best.gpu_cost:
-            break                      # every remaining point costs more
-        lo, hi = 1, hi_decode
-        res_hi = run(n_p, hi)
-        if not attains(res_hi):
-            continue                   # prefill pool too small at any scale
-        best_np = res_hi
-        while lo < hi:
-            mid = (lo + hi) // 2
-            res = run(n_p, mid)
-            if attains(res):
-                best_np, hi = res, mid
-            else:
-                lo = mid + 1
-        if best is None or best_np.gpu_cost < best.gpu_cost:
-            best = best_np
-    return best
+        def run(n_p: int, n_d: int) -> DisaggResult:
+            return simulate_disaggregated(trace_fn(), slo, cfg,
+                                          predictor=predictor,
+                                          prefill_pools=pf(n_p),
+                                          decode_pools=df(n_d))
+
+        for n_p in range(1, max_prefill + 1):
+            if best is not None and \
+                    pool_cost(pf(n_p)) + min_decode_cost >= best.gpu_cost:
+                break                  # every remaining point costs more
+            lo, hi = 1, hi_decode
+            res_hi = run(n_p, hi)
+            if not attains(res_hi):
+                continue               # prefill pool too small at any scale
+            best_np = res_hi
+            while lo < hi:
+                mid = (lo + hi) // 2
+                res = run(n_p, mid)
+                if attains(res):
+                    best_np, hi = res, mid
+                else:
+                    lo = mid + 1
+            if best is None or best_np.gpu_cost < best.gpu_cost:
+                best = best_np
+        return best
+
+    if prefill_mix is not None or decode_mix is not None:
+        pmix = list(prefill_mix) if prefill_mix is not None \
+            else [prefill_spec]
+        dmix = list(decode_mix) if decode_mix is not None else [decode_spec]
+        if any(s is None for s in pmix + dmix):
+            raise ValueError("mix search needs specs on both sides "
+                             "(a spec list or the legacy spec argument)")
+        p_ratios = tuple(ratio_grid) if len(pmix) == 2 else (1.0,)
+        d_ratios = tuple(ratio_grid) if len(dmix) == 2 else (1.0,)
+        for rp in p_ratios:
+            for rd in d_ratios:
+                best = frontier(ratio_pool_fn(pmix, rp),
+                                ratio_pool_fn(dmix, rd), best)
+        return best
+
+    pf = prefill_pool_fn or (lambda n: [(prefill_spec, n)])
+    df = decode_pool_fn or (lambda n: [(decode_spec, n)])
+    return frontier(pf, df, None)

@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -23,12 +23,23 @@ This module adds the look-ahead half of the paper's §5.2 story:
     lifecycle (boot delay, draining, retirement) driven by a policy, built
     on the same causal-time heartbeat core; reports GPU-seconds actually
     billed, which is what the cost comparison in the benchmarks uses.
+  * ``SpotMarket`` — a preemptible capacity pool next to the on-demand one:
+    a spot ``WorkerSpec`` (discounted price, reclaim hazard) plus a
+    ``workload.preemption_trace`` of market reclaim events. The simulator
+    kills spot workers when an event lands — their in-flight requests lose
+    KV and re-enter the queue, paying a full re-prefill (prompt + generated
+    tokens) plus the stall, both charged against TTFT/ATGT — and bills every
+    worker at its own price class. ``ForecastPolicy`` (given a
+    ``core.scaling.SpotMixConfig``) splits each epoch's capacity target into
+    an (on-demand, spot) mix: the diurnal trough is served from reliable
+    capacity, the swing from discounted-but-mortal spot, inflated by the
+    hazard so expected surviving capacity still covers the target.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -36,10 +47,12 @@ from repro.core.placement import (PlacementConfig, WorkerState,
                                   best_fit_place, jsq_place,
                                   power_of_two_place)
 from repro.core.request import ReqState, Request
-from repro.core.scaling import Autoscaler, AutoscalerConfig
+from repro.core.scaling import (Autoscaler, AutoscalerConfig, SpotMixConfig,
+                                split_spot_mix)
 from repro.core.slo import SLO, slo_attainment
 from repro.core.worker_config import WorkerSpec
 from repro.serving.simulator import SimConfig, SimWorker, run_heartbeat_loop
+from repro.serving.workload import PreemptionEvent
 
 
 # ---- forecasters -------------------------------------------------------------
@@ -146,17 +159,31 @@ class ForecastPolicy:
     """Eq. 7 on the *forecast* rate ``lead`` seconds ahead, plus a per-phase
     floor of the worker count that phase has historically needed.  No
     cooldown: the forecaster itself says when demand is really falling, so
-    the policy sheds workers on the descent instead of holding them."""
+    the policy sheds workers on the descent instead of holding them.
+
+    With a ``SpotMixConfig`` the policy also owns the price-class decision:
+    ``split(t, target)`` carves each epoch's capacity target into an
+    (on-demand, spot) pair — the historical diurnal *trough* (capacity some
+    phase always needs) stays on reliable on-demand workers, the
+    forecast-driven swing above it rides discounted spot, inflated by the
+    reclaim hazard so the expected surviving capacity still covers the
+    target (``core.scaling.split_spot_mix``)."""
 
     name = "forecast"
 
     def __init__(self, scfg: ScaleSimConfig, forecaster,
-                 autoscaler: Optional[Autoscaler] = None):
+                 autoscaler: Optional[Autoscaler] = None,
+                 spot_mix: Optional[SpotMixConfig] = None):
         self.scfg = scfg
         self.forecaster = forecaster
         self.autoscaler = autoscaler or Autoscaler(AutoscalerConfig(
             heartbeat=scfg.interval, min_workers=scfg.min_workers,
             max_workers=scfg.max_workers))
+        # exposure horizon = how long a loss stays unreplaced: one epoch to
+        # notice it plus the boot delay of the replacement (a policy-local
+        # copy — the caller's config object is never mutated)
+        self.spot_mix = None if spot_mix is None else dataclasses.replace(
+            spot_mix, horizon=scfg.provision_delay + scfg.interval)
         # phase bin -> max workers that phase has needed (seasonal floor);
         # a forecaster without phase bins degrades to one global bin
         self._bin: Callable[[float], int] = getattr(forecaster, "_bin",
@@ -192,29 +219,68 @@ class ForecastPolicy:
                     for dl in leads)
         return max(tgt, floor)
 
+    def split(self, t: float, target: int) -> Tuple[int, int]:
+        """Carve ``target`` into (n_on_demand, n_spot) for this epoch.
+
+        The always-on base — the smallest worker count any observed phase
+        has needed (the diurnal trough) — is pinned to on-demand capacity;
+        only the swing above it is eligible for spot. Within that bound the
+        economics of ``split_spot_mix`` decide, so a hazard spike or a thin
+        discount degrades gracefully to all-on-demand."""
+        mix = self.spot_mix
+        if mix is None:
+            return target, 0
+        n_od, n_spot = split_spot_mix(target, mix)
+        if mix.spot_frac is None and self._season_needed:
+            trough = min(self._season_needed.values())
+            base = min(trough, target)
+            if base > n_od and n_spot > 0:
+                n_od = base
+                n_spot = int(math.ceil(max(target - base, 0)
+                                       / max(mix.survival(), 1e-9)))
+        return n_od, n_spot
+
 
 # ---- autoscaled simulation ---------------------------------------------------
+
+@dataclasses.dataclass
+class SpotMarket:
+    """A preemptible capacity pool the autoscaled simulator may buy from:
+    the spot worker type (same hardware as the on-demand spec, discounted
+    ``price``, non-zero ``preempt_hazard``) plus the market's reclaim-event
+    trace (``workload.preemption_trace``). Each event kills a slice of the
+    spot workers alive at that instant — on-demand workers are never
+    touched."""
+    spec: WorkerSpec
+    events: Sequence[PreemptionEvent] = dataclasses.field(
+        default_factory=list)
+
 
 @dataclasses.dataclass
 class EpochStat:
     t: float                 # epoch start time
     rate: float              # observed arrivals / interval
     needed: int              # peak busy workers (+1 if a backlog remained)
-    target: int              # policy decision for the next epoch
+    target: int              # policy decision for the next epoch (total)
     online: int              # workers online after applying the decision
+    target_spot: int = 0     # spot share of the target
+    online_spot: int = 0     # spot workers online after the decision
 
 
 @dataclasses.dataclass
 class ScaleSimResult:
     policy: str
-    gpu_seconds: float       # Σ accelerators billed (online+boot+drain) * dt
-    attainment: float
+    gpu_seconds: float       # Σ billed cost (gpu_cost * dt over the fleet,
+    attainment: float        # in on-demand accelerator-second equivalents)
     p99_ttft: float
     p99_atgt: float
     mean_atgt: float
     finished: int
     total: int
     peak_workers: int
+    spot_gpu_seconds: float = 0.0    # billed share from the spot pool
+    preempted_workers: int = 0       # spot workers reclaimed mid-flight
+    requeued: int = 0                # requests that lost KV and re-entered
     epochs: List[EpochStat] = dataclasses.field(default_factory=list)
 
     def row(self) -> Dict:
@@ -225,7 +291,8 @@ class ScaleSimResult:
 
 def simulate_autoscaled(trace: Sequence[Request], spec: WorkerSpec, slo: SLO,
                         cfg: SimConfig, scfg: ScaleSimConfig, policy,
-                        predictor=None) -> ScaleSimResult:
+                        predictor=None,
+                        spot: Optional[SpotMarket] = None) -> ScaleSimResult:
     """Colocated serving with a policy-driven worker lifecycle.
 
     Same causal-time heartbeat core and placement as ``simulate``, but the
@@ -234,8 +301,21 @@ def simulate_autoscaled(trace: Sequence[Request], spec: WorkerSpec, slo: SLO,
     seconds to boot (billed while booting), surplus workers drain (no new
     placements; billed until their last request finishes) and a scale-up
     reclaims draining workers before booting cold ones.  ``gpu_seconds`` is
-    the billed accelerator time — the cost metric the reactive-vs-forecast
-    benchmark compares."""
+    the billed accelerator time, each worker at its own price class — the
+    cost metric the reactive-vs-forecast(-vs-spot) benchmarks compare.
+
+    With a ``SpotMarket``, the policy's ``split(t, target)`` (all-on-demand
+    for policies without one) decides each epoch's price-class mix; booted
+    workers fill the spot deficit first (it is the cheaper capacity). When a
+    market reclaim event lands — delivered by the heartbeat core under the
+    same causal rule as arrivals — a slice of the live spot workers dies:
+    every in-flight request on them loses its KV, re-enters the queue (its
+    generated-token count is retained), and pays a full context re-prefill
+    plus the stall, charged against its TTFT/ATGT clocks by the simulator
+    core. Scale-down stays price-class-blind (drain the emptiest worker
+    wherever it is); the boot composition re-converges the realized mix to
+    the split at the next epoch, so a zero-hazard, undiscounted spot pool
+    reproduces the on-demand simulation exactly."""
     rng = np.random.default_rng(cfg.seed)
     beats_per_epoch = max(int(round(scfg.interval / cfg.heartbeat)), 1)
 
@@ -247,21 +327,21 @@ def simulate_autoscaled(trace: Sequence[Request], spec: WorkerSpec, slo: SLO,
     queued: List[Request] = []
     epochs: List[EpochStat] = []
     wid = [0]
-    acc = {"gpu_s": 0.0, "beat": 0, "arrivals": 0, "busy_peak": 0,
-           "peak": 0}
+    acc = {"gpu_s": 0.0, "spot_gpu_s": 0.0, "beat": 0, "arrivals": 0,
+           "busy_peak": 0, "peak": 0, "killed": 0, "requeued": 0}
 
-    def new_worker() -> WorkerState:
+    def new_worker(wspec: WorkerSpec) -> WorkerState:
         wid[0] += 1
         pcfg = PlacementConfig(gamma=cfg.gamma, theta=cfg.theta,
-                               kv_capacity=spec.kv_capacity,
-                               max_batch=spec.max_batch,
+                               kv_capacity=wspec.kv_capacity,
+                               max_batch=wspec.max_batch,
                                split_phase=cfg.split_phase)
-        w = WorkerState(wid[0], pcfg, spec.perf, slo)
-        w.spec = spec
+        w = WorkerState(wid[0], pcfg, wspec.perf, slo)
+        w.spec = wspec
         return w
 
     for _ in range(max(scfg.initial_workers, scfg.min_workers)):
-        w = new_worker()
+        w = new_worker(spec)
         online.append(w)
         sims[w.id] = SimWorker(w, w.perf, 0.0, cfg.split_phase)
 
@@ -284,7 +364,43 @@ def simulate_autoscaled(trace: Sequence[Request], spec: WorkerSpec, slo: SLO,
             sims[w.id] = SimWorker(w, w.perf, t, cfg.split_phase)
         return True
 
-    def apply_target(t: float, target: int) -> None:
+    def on_reclaim(t: float, ev: PreemptionEvent) -> None:
+        """A market reclaim: kill ceil(frac * spot pool) spot workers —
+        online, draining or still booting — and requeue their in-flight
+        work with the KV-loss recovery cost armed (t_preempted)."""
+        pool = [w for w in online if w.spec.is_spot] \
+            + [w for w in draining if w.spec.is_spot]
+        boots = [b for b in booting if b[1].spec.is_spot]
+        alive = len(pool) + len(boots)
+        if alive == 0:
+            return
+        n_kill = min(max(int(math.ceil(ev.frac * alive)), 1), alive)
+        victims = rng.choice(alive, size=n_kill, replace=False)
+        for vi in victims:
+            if vi < len(pool):
+                w = pool[vi]
+                (online if w in online else draining).remove(w)
+                sim = sims.pop(w.id)
+                lost = w.ongoing + w.new_batch + sim.preempted
+                for r in lost:
+                    r.state = ReqState.QUEUED
+                    r.worker = None
+                    r.t_preempted = t
+                    r.preempt_count += 1
+                    queued.append(r)
+                acc["requeued"] += len(lost)
+                w.ongoing.clear()
+                w.new_batch.clear()
+                w.mark_dirty()
+                # only serving-capable workers count as mid-flight reclaims;
+                # a cancelled boot never held requests (it was billed, which
+                # gpu_seconds already reflects)
+                acc["killed"] += 1
+            else:
+                booting.remove(boots[vi - len(pool)])
+
+    def apply_target(t: float, tgt_od: int, tgt_spot: int) -> None:
+        target = tgt_od + tgt_spot
         cur = len(online) + len(booting)
         if target > cur:
             want = target - cur
@@ -293,8 +409,15 @@ def simulate_autoscaled(trace: Sequence[Request], spec: WorkerSpec, slo: SLO,
                 w = draining.pop()
                 online.append(w)
                 want -= 1
-            for _ in range(want):
-                booting.append([t + scfg.provision_delay, new_worker()])
+            # boot composition: fill the spot deficit first (it is the
+            # cheaper capacity), the remainder on-demand
+            n_spot_cur = sum(1 for w in online if w.spec.is_spot) \
+                + sum(1 for b in booting if b[1].spec.is_spot)
+            want_spot = min(max(tgt_spot - n_spot_cur, 0), max(want, 0))
+            for i in range(want):
+                wspec = spot.spec if spot is not None and i < want_spot \
+                    else spec
+                booting.append([t + scfg.provision_delay, new_worker(wspec)])
         elif target < cur:
             excess = cur - target
             # cancel pending boots first (nothing running on them yet)
@@ -333,8 +456,12 @@ def simulate_autoscaled(trace: Sequence[Request], spec: WorkerSpec, slo: SLO,
         busy = sum(1 for w in online if w.batch_size > 0)
         acc["busy_peak"] = max(acc["busy_peak"], busy)
         acc["peak"] = max(acc["peak"], len(online))
-        acc["gpu_s"] += (len(online) + len(draining) + len(booting)) \
-            * spec.n_accelerators * (t_next - t)
+        dt = t_next - t
+        billed = [w.spec for w in online] + [w.spec for w in draining] \
+            + [b[1].spec for b in booting]
+        acc["gpu_s"] += sum(s.gpu_cost for s in billed) * dt
+        acc["spot_gpu_s"] += sum(s.gpu_cost for s in billed if s.is_spot) \
+            * dt
         acc["beat"] += 1
         if acc["beat"] % beats_per_epoch == 0:
             rate = acc["arrivals"] / scfg.interval
@@ -351,9 +478,19 @@ def simulate_autoscaled(trace: Sequence[Request], spec: WorkerSpec, slo: SLO,
             tgt = policy.target(t_epoch, rate, needed, len(queued))
             tgt = max(tgt, busy, scfg.min_workers)
             tgt = min(tgt, scfg.max_workers)
-            apply_target(t_next, tgt)
-            epochs.append(EpochStat(t=t_epoch, rate=rate, needed=needed,
-                                    target=tgt, online=len(online)))
+            # price-class split: policies without one (or no spot market
+            # to buy from) run all-on-demand
+            split = getattr(policy, "split", None)
+            if spot is not None and split is not None:
+                tgt_od, tgt_spot = split(t_epoch, tgt)
+                tgt_spot = min(tgt_spot, scfg.max_workers - tgt_od)
+            else:
+                tgt_od, tgt_spot = tgt, 0
+            apply_target(t_next, tgt_od, tgt_spot)
+            epochs.append(EpochStat(
+                t=t_epoch, rate=rate, needed=needed, target=tgt_od + tgt_spot,
+                online=len(online), target_spot=tgt_spot,
+                online_spot=sum(1 for w in online if w.spec.is_spot)))
             acc["arrivals"] = 0
             acc["busy_peak"] = 0
 
@@ -363,7 +500,10 @@ def simulate_autoscaled(trace: Sequence[Request], spec: WorkerSpec, slo: SLO,
                         for w in online + draining)
                 and all(not s.preempted for s in sims.values()))
 
-    trace = run_heartbeat_loop(trace, cfg.heartbeat, admit, step, drained)
+    trace = run_heartbeat_loop(
+        trace, cfg.heartbeat, admit, step, drained,
+        events=spot.events if spot is not None else None,
+        fire=on_reclaim)
 
     atgts = [r.atgt() for r in finished if r.atgt() is not None]
     ttfts = [r.ttft() for r in finished if r.ttft() is not None]
@@ -376,4 +516,6 @@ def simulate_autoscaled(trace: Sequence[Request], spec: WorkerSpec, slo: SLO,
         p99_atgt=float(np.percentile(atgts, 99)) if atgts else float("nan"),
         mean_atgt=float(np.mean(atgts)) if atgts else float("nan"),
         finished=len(finished), total=total,
-        peak_workers=acc["peak"], epochs=epochs)
+        peak_workers=acc["peak"], spot_gpu_seconds=acc["spot_gpu_s"],
+        preempted_workers=acc["killed"], requeued=acc["requeued"],
+        epochs=epochs)

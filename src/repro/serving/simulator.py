@@ -14,7 +14,6 @@ homogeneous fleet and remain the default."""
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -25,7 +24,6 @@ from repro.core.placement import (PlacementConfig, WorkerState,
                                   power_of_two_place)
 from repro.core.rebalance import ErrorTracker, rebalance
 from repro.core.request import ReqState, Request
-from repro.core.scaling import Autoscaler
 from repro.core.slo import SLO, slo_attainment
 from repro.core.worker_config import WorkerSpec
 from repro.serving.length_predictor import LengthPredictor
@@ -35,7 +33,10 @@ def run_heartbeat_loop(trace: Sequence[Request], heartbeat: float,
                        admit: Callable[[Request], None],
                        step: Callable[[float, float, int], None],
                        drained: Callable[[], bool],
-                       tail: float = 240.0) -> List[Request]:
+                       tail: float = 240.0,
+                       events: Optional[Sequence] = None,
+                       fire: Optional[Callable[[float, object], None]]
+                       = None) -> List[Request]:
     """Causal-time heartbeat event core shared by every cluster simulator
     (colocated, disaggregated, autoscaled).
 
@@ -45,17 +46,33 @@ def run_heartbeat_loop(trace: Sequence[Request], heartbeat: float,
     request in timestamp order, ``step(t, t_next, arrived)`` runs one
     heartbeat over [t, t_next), and the loop ends when the trace is exhausted
     and ``drained()`` reports every queue empty (or at the horizon = last
-    arrival + ``tail``).  Returns the time-sorted trace."""
+    arrival + ``tail``).  Returns the time-sorted trace.
+
+    ``events`` is an optional stream of external cluster events — objects
+    with a ``t`` timestamp (e.g. ``workload.PreemptionEvent`` spot reclaims)
+    — delivered via ``fire(t, event)`` under the same causal rule as
+    arrivals: at the first boundary at-or-after the event time, before the
+    heartbeat's ``step``, so a worker death is visible to placement in the
+    beat it lands on and never earlier. Events past the drain point of an
+    exhausted trace are dropped (there is nothing left for them to kill)."""
     trace = sorted(trace, key=lambda r: r.arrival)
     horizon = (trace[-1].arrival if trace else 0.0) + tail
+    evs = sorted(events, key=lambda e: e.t) if events else []
+    if evs and fire is None:
+        raise ValueError("run_heartbeat_loop: events supplied without a "
+                         "fire callback to deliver them")
     n = len(trace)
     idx = 0
+    eidx = 0
     t = 0.0
     while t < horizon:
         t_next = t + heartbeat
         while idx < n and trace[idx].arrival <= t:
             admit(trace[idx])
             idx += 1
+        while eidx < len(evs) and evs[eidx].t <= t:
+            fire(t, evs[eidx])
+            eidx += 1
         step(t, t_next, idx)
         t = t_next
         if idx >= n and drained():
@@ -119,9 +136,13 @@ class SimWorker:
             while self.preempted and self._kv_now() + \
                     kv.h * self.preempted[0].context + kv.j <= 0.9 * M:
                 resume.append(self.preempted.pop(0))
-            # start any newly placed requests (prefill)
+            # start any newly placed requests (prefill). A spot-preemption
+            # re-entrant (l_out > 0: its worker was reclaimed mid-decode and
+            # its KV lost) re-prefills prompt AND generated tokens — context,
+            # not l_in — which is the recovery cost the spot mix planner must
+            # out-save; for fresh requests context == l_in.
             if (w.new_batch or resume) and not self.split_phase:
-                total_in = sum(r.l_in for r in w.new_batch) \
+                total_in = sum(r.context for r in w.new_batch) \
                     + sum(r.context for r in resume)
                 dur = float(self.perf.prefill(total_in))
                 self.t += dur
@@ -131,8 +152,15 @@ class SimWorker:
                 for r in w.ongoing + self.preempted:
                     r.t_decode_spent += dur
                 for r in w.new_batch:
-                    r.t_first_token = self.t
-                    r.l_out = 1
+                    if r.t_first_token is None:
+                        r.t_first_token = self.t
+                        r.l_out = 1
+                    elif r.t_preempted is not None:
+                        # token stream stalled from the reclaim instant until
+                        # this re-prefill finished: queue wait + re-prefill
+                        # both burn the ATGT budget (no token was generated)
+                        r.t_decode_spent += max(self.t - r.t_preempted, 0.0)
+                    r.t_preempted = None
                     r.state = ReqState.DECODING
                     self._admit(r)
                 for r in resume:
@@ -148,11 +176,17 @@ class SimWorker:
                 for r in w.new_batch:
                     if r.t_first_token is None:
                         r.t_first_token = self.t
+                    elif r.t_preempted is not None:
+                        # spot-preemption re-entrant: only the stall since
+                        # the reclaim burns budget (decode time before it is
+                        # already on the clock)
+                        r.t_decode_spent += max(self.t - r.t_preempted, 0.0)
                     else:
                         # disaggregated handoff: KV transfer + decode-queue
                         # wait stalls the token stream after the first token,
                         # so it burns ATGT budget like a prefill stall does
                         r.t_decode_spent += max(self.t - r.t_first_token, 0.0)
+                    r.t_preempted = None
                     r.l_out = max(r.l_out, 1)
                     r.state = ReqState.DECODING
                     self._admit(r)

@@ -8,7 +8,7 @@ CDFs shift only slightly across prompt-length bins)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterator, List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -124,3 +124,41 @@ def diurnal_trace(cfg: WorkloadConfig, amplitude: float = 0.5,
     a = min(max(amplitude, 0.0), 1.0)
     rate_fn = diurnal_rate_fn(cfg, amplitude, period, phase)
     return nonhomogeneous_trace(cfg, rate_fn, cfg.mean_rate * (1.0 + a))
+
+
+# ---- spot-market preemption events -------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionEvent:
+    """One market-level spot reclaim: at time ``t`` the provider takes back
+    ``frac`` of the *current* spot pool (at least one worker if any are up).
+    A fractional reclaim models the correlated nature of real spot markets —
+    a capacity crunch reclaims a slice of the pool at once, not independent
+    single instances."""
+    t: float
+    frac: float = 0.25
+
+
+def preemption_trace(duration: float, event_rate: float,
+                     frac: float = 0.25, frac_jitter: float = 0.0,
+                     seed: int = 0) -> List[PreemptionEvent]:
+    """Poisson stream of market reclaim events over ``[0, duration)``.
+
+    Events arrive at ``event_rate`` per second; each reclaims ``frac`` of the
+    spot pool alive at that instant (± uniform ``frac_jitter``, clipped to
+    (0, 1]). The effective per-worker hazard — what
+    ``core.scaling.SpotMixConfig`` should be fed — is approximately
+    ``event_rate * frac``. A pre-generated trace (rather than per-worker
+    lifetime draws inside the simulator) keeps preemptions replayable and
+    independent of how many workers the policy happens to buy."""
+    rng = np.random.default_rng(seed)
+    events: List[PreemptionEvent] = []
+    t = float(rng.exponential(1.0 / max(event_rate, 1e-12)))
+    while t < duration:
+        f = frac
+        if frac_jitter > 0:
+            f += float(rng.uniform(-frac_jitter, frac_jitter))
+        f = float(np.clip(f, 1e-6, 1.0))
+        events.append(PreemptionEvent(t=t, frac=f))
+        t += float(rng.exponential(1.0 / max(event_rate, 1e-12)))
+    return events

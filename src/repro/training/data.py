@@ -6,9 +6,8 @@ its own shard without coordination (host-sharded loading at scale)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -4,7 +4,7 @@ bracketing the cross-pod all-reduce."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

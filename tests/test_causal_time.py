@@ -1,7 +1,6 @@
 """Causal-time regressions shared by both simulators: no request may be
 admitted — let alone prefilled — before its arrival timestamp, and every
 result reports the one canonical attainment definition (ok / total)."""
-import numpy as np
 import pytest
 
 from repro.configs import get_arch

@@ -1,10 +1,9 @@
 """Cluster control plane: simulation end-to-end, fault tolerance, straggler
 drain, checkpoint/restart, autoscaling fit."""
 import numpy as np
-import pytest
 
 from repro.core import (Autoscaler, DecodeModel, KVModel, PerfModel,
-                        PrefillModel, Request, SLO)
+                        PrefillModel, SLO)
 from repro.serving import (SimConfig, WorkloadConfig, generate_trace,
                            min_workers_for_slo, simulate)
 from repro.serving.length_predictor import LengthPredictor
@@ -44,7 +43,6 @@ def test_simulator_completes_and_attains():
 def test_aladdin_needs_fewer_workers_than_jsq():
     perf = paper_like_perf()
     slo = SLO(ttft=1.5, atgt=0.05)
-    pred = fitted_predictor()
 
     def tf(seed=3):
         return lambda: make_trace(rate=6.0, seed=seed, duration=30.0)

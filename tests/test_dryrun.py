@@ -7,9 +7,8 @@ import sys
 
 import pytest
 
-from repro.configs import DECODE_32K, TRAIN_4K, LONG_500K, get_arch, \
-    shape_applicable
-from repro.distributed.sharding import Policy, make_policy
+from repro.configs import LONG_500K, get_arch, shape_applicable
+from repro.distributed.sharding import Policy
 from jax.sharding import PartitionSpec as P
 
 

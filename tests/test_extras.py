@@ -156,8 +156,7 @@ def test_chunked_prefill_matches_full():
 
 
 def test_kv_quantization_roundtrip_and_eq6_effect():
-    from repro.serving.kv_quant import (dequantize_kv, kv_quant_error,
-                                        quantize_kv)
+    from repro.serving.kv_quant import kv_quant_error, quantize_kv
     from repro.configs import get_arch
     from repro.core.slo import PAPER_SLOS
     from repro.core.worker_config import A100_80G, optimal_worker_config

@@ -2,7 +2,6 @@
 driver's invariants, the ramp-peak provisioning property, and the
 reactive-vs-forecast cost acceptance on the default diurnal trace."""
 import dataclasses
-import math
 
 import numpy as np
 import pytest

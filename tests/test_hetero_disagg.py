@@ -4,7 +4,6 @@ respected, the prefill/decode pipeline conserves requests and reports a
 joint (n_prefill, n_decode) cost."""
 import dataclasses
 
-import numpy as np
 import pytest
 
 from repro.configs import get_arch
@@ -12,7 +11,6 @@ from repro.core import (A100_80G, DecodeModel, KVModel, PAPER_SLOS,
                         PerfModel, PlacementConfig, PrefillModel, Request,
                         SLO, V100_32G, WorkerState, best_fit_place,
                         make_worker_spec)
-from repro.core.worker_config import WorkerSpec
 from repro.serving import (DisaggConfig, SimConfig, WorkloadConfig,
                            generate_trace, min_cost_disagg,
                            min_workers_for_slo, simulate,

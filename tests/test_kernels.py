@@ -1,6 +1,5 @@
 """Per-kernel validation: sweep shapes/dtypes, assert_allclose against the
 pure-jnp oracle (pallas kernels run in interpret mode on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

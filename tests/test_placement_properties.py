@@ -2,8 +2,6 @@
 no hypothesis dependency): constraint (e) dominates naive admission, best-fit
 never violates per-worker budgets, cached aggregates match brute force, and
 Algorithm 1 stays within the MIP oracle's bound on small instances."""
-import math
-
 import numpy as np
 import pytest
 

@@ -1,6 +1,4 @@
 """Property-based tests (hypothesis) on system invariants."""
-import math
-
 import numpy as np
 import pytest
 

@@ -3,11 +3,10 @@ same seed => identical SimResult; every request is accounted for at every
 heartbeat; finished requests have a consistent timeline."""
 import dataclasses
 
-import numpy as np
 import pytest
 
 from repro.core import (DecodeModel, KVModel, PerfModel, PrefillModel,
-                        Request, SLO)
+                        SLO)
 from repro.serving import SimConfig, WorkloadConfig, generate_trace, simulate
 from repro.serving.length_predictor import LengthPredictor
 from repro.serving.workload import sample_lengths

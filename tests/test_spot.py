@@ -1,0 +1,283 @@
+"""Spot-market layer invariants: mix-planner economics, causal reclaim-event
+delivery, no double counting of preempted requests, token conservation across
+requeues, zero-hazard bit-for-bit equivalence with on-demand, the spot-vs-
+on-demand cost acceptance, and the disaggregated pool-ratio search."""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (A100_80G, PAPER_SLOS, SpotMixConfig, V100_32G,
+                        make_worker_spec, split_spot_mix, spot_variant)
+from repro.core.request import Request
+from repro.serving import (DisaggConfig, ForecastConfig, ForecastPolicy,
+                           PreemptionEvent, ScaleSimConfig,
+                           SeasonalNaiveForecaster, SimConfig, SpotMarket,
+                           WorkloadConfig, diurnal_trace, min_cost_disagg,
+                           preemption_trace, simulate_autoscaled)
+from repro.serving.disagg import pool_cost, ratio_pool_fn
+from repro.serving.simulator import run_heartbeat_loop
+
+ARCH = get_arch("llama2-70b")
+SLO_70B = PAPER_SLOS["llama2-70b"]
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return make_worker_spec(ARCH, A100_80G, SLO_70B, mean_context=450.0)
+
+
+# ---- mix planner economics ---------------------------------------------------
+
+def test_split_spot_mix_uneconomical_hazard_stays_on_demand():
+    # survival so low the attrition premium eats the discount
+    mix = SpotMixConfig(discount=0.5, hazard=1.0, horizon=15.0)
+    assert split_spot_mix(10, mix) == (10, 0)
+    assert split_spot_mix(0, mix) == (0, 0)
+
+
+def test_split_spot_mix_expected_cost_beats_on_demand():
+    mix = SpotMixConfig(discount=0.35, hazard=1.0 / 1800.0, horizon=15.0,
+                        max_spot_frac=0.7)
+    for target in (1, 3, 10, 57):
+        n_od, n_spot = split_spot_mix(target, mix)
+        # expected surviving capacity covers the target...
+        assert n_od + n_spot * mix.survival() >= target - 1e-9
+        # ...and the billed cost is never above all-on-demand
+        assert n_od + n_spot * mix.discount <= target + 1e-9
+
+
+def test_split_spot_mix_forced_fraction_is_exact_at_zero_hazard():
+    mix = SpotMixConfig(discount=1.0, hazard=0.0, spot_frac=0.5)
+    assert split_spot_mix(10, mix) == (5, 5)
+    assert split_spot_mix(1, mix) == (1, 0)  # round(0.5) banks to even
+
+
+def test_split_spot_mix_forced_fraction_respects_survival_guard():
+    # a forced share must not inflate to absurdity when nothing survives
+    mix = SpotMixConfig(spot_frac=0.5, hazard=1.0, horizon=100.0)
+    assert split_spot_mix(10, mix) == (10, 0)
+
+
+def test_split_spot_mix_break_even_ceil_inflation_falls_back():
+    # discount/survival = 0.946 < 1 marginally, but ceil() inflation makes
+    # the realized bill (3 + 8*0.9 = 10.2) worse than all-on-demand
+    mix = SpotMixConfig(discount=0.9, hazard=0.01, horizon=5.0,
+                        max_spot_frac=0.7)
+    assert split_spot_mix(10, mix) == (10, 0)
+
+
+def test_forecast_policy_does_not_mutate_callers_mix_config(spec):
+    mix = SpotMixConfig(hazard=1.0 / 600.0, horizon=60.0)
+    scfg = ScaleSimConfig(interval=5.0, provision_delay=10.0)
+    fc = SeasonalNaiveForecaster(ForecastConfig())
+    pol = ForecastPolicy(scfg, fc, spot_mix=mix)
+    assert mix.horizon == 60.0                      # caller's copy untouched
+    assert pol.spot_mix.horizon == 15.0             # policy derives its own
+
+
+# ---- market-event plumbing ---------------------------------------------------
+
+def test_preemption_trace_deterministic_and_in_horizon():
+    a = preemption_trace(300.0, event_rate=1.0 / 30.0, frac=0.3, seed=5)
+    b = preemption_trace(300.0, event_rate=1.0 / 30.0, frac=0.3, seed=5)
+    assert a == b and len(a) > 0
+    assert all(0.0 < e.t < 300.0 and 0.0 < e.frac <= 1.0 for e in a)
+
+
+def test_heartbeat_loop_delivers_events_at_first_boundary_at_or_after():
+    fired = []
+    trace = [Request(l_in=8, l_pred=8, l_real=8, arrival=t)
+             for t in (0.0, 3.0)]
+    done = [False]
+
+    def admit(r):
+        pass
+
+    def step(t, t_next, arrived):
+        done[0] = t >= 4.0
+
+    events = [PreemptionEvent(t=1.3), PreemptionEvent(t=2.0)]
+    run_heartbeat_loop(trace, 0.5, admit, step, lambda: done[0],
+                       events=events, fire=lambda t, e: fired.append((t, e)))
+    assert [e.t for _, e in fired] == [1.3, 2.0]
+    for t_fire, e in fired:
+        assert t_fire >= e.t            # never delivered early...
+        assert t_fire - e.t < 0.5       # ...and at the very next boundary
+    with pytest.raises(ValueError):     # events without a deliverer is a bug
+        run_heartbeat_loop(trace, 0.5, admit, step, lambda: done[0],
+                           events=events)
+
+
+# ---- preemption invariants in the autoscaled simulator -----------------------
+
+def _wcfg(rate=4.0, duration=240.0, seed=21):
+    return WorkloadConfig(mean_rate=rate, duration=duration, seed=seed,
+                          in_mu=5.0, in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+
+
+def _spot_run(spec, events, price=0.35, hazard=1.0 / 600.0, spot_frac=None,
+              duration=240.0, period=120.0):
+    scfg = ScaleSimConfig(interval=5.0, provision_delay=10.0,
+                          initial_workers=3)
+    fc = SeasonalNaiveForecaster(ForecastConfig(period=period, bin_width=5.0))
+    mix = SpotMixConfig(discount=price, hazard=hazard, spot_frac=spot_frac)
+    pol = ForecastPolicy(scfg, fc, spot_mix=mix)
+    market = SpotMarket(spot_variant(spec, price=price, preempt_hazard=hazard),
+                        events)
+    trace = diurnal_trace(_wcfg(duration=duration), amplitude=0.6,
+                          period=period)
+    return simulate_autoscaled(trace, spec, SLO_70B, SimConfig(), scfg, pol,
+                               spot=market), trace
+
+
+# reclaim half the spot pool twice, mid-ramp, where in-flight work is dense
+EVENTS = [PreemptionEvent(t=35.0, frac=0.5), PreemptionEvent(t=160.0,
+                                                             frac=0.5)]
+
+
+def test_preempted_requests_never_double_counted(spec):
+    res, trace = _spot_run(spec, EVENTS, spot_frac=0.6)
+    assert res.preempted_workers > 0, "events must actually kill workers"
+    assert res.requeued > 0, "kills must catch in-flight requests"
+    assert res.finished == res.total == len(trace)
+    # attainment's denominator is the offered trace: a preempted request
+    # appears exactly once no matter how many times it was requeued
+    assert 0.0 <= res.attainment <= 1.0
+
+
+def test_requeued_work_conserves_token_counts(spec):
+    res, trace = _spot_run(spec, EVENTS, spot_frac=0.6)
+    preempted = [r for r in trace if r.preempt_count > 0]
+    assert preempted, "at least one in-flight request must be reclaimed"
+    for r in trace:
+        assert r.l_out == r.l_real      # no token lost, none generated twice
+        assert r.t_preempted is None    # every reclaim stall was settled
+    # recovery is not free: a reclaimed request's decode clock includes the
+    # stall, so its effective ATGT can exceed an undisturbed request's
+    assert all(r.t_finish is not None for r in preempted)
+
+
+def test_split_phase_requeue_settles_stall_without_double_charge(spec):
+    """Decode-pool-only (split_phase) fleets requeue reclaimed work too: the
+    stall is charged from the reclaim instant — not from t_first_token,
+    which would re-bill decode time already on the clock — and t_preempted
+    is always settled."""
+    scfg = ScaleSimConfig(interval=5.0, provision_delay=10.0,
+                          initial_workers=3)
+    fc = SeasonalNaiveForecaster(ForecastConfig(period=120.0, bin_width=5.0))
+    mix = SpotMixConfig(discount=0.35, hazard=1.0 / 600.0, spot_frac=0.6)
+    pol = ForecastPolicy(scfg, fc, spot_mix=mix)
+    # wipe the whole spot pool every 25 s: split-phase decode drains fast
+    # and best-fit concentrates load on the senior on-demand workers, so
+    # only a sustained full-pool reclaim reliably catches in-flight work
+    events = [PreemptionEvent(t=25.0 * k, frac=1.0) for k in range(1, 10)]
+    market = SpotMarket(spot_variant(spec, price=0.35,
+                                     preempt_hazard=1.0 / 600.0), events)
+    trace = diurnal_trace(_wcfg(), amplitude=0.6, period=120.0)
+    res = simulate_autoscaled(trace, spec, SLO_70B,
+                              SimConfig(split_phase=True), scfg, pol,
+                              spot=market)
+    assert res.preempted_workers > 0 and res.requeued > 0
+    assert res.finished == res.total
+    for r in trace:
+        assert r.t_preempted is None
+        assert r.l_out == r.l_real
+        # ATGT = t_decode_spent / (l_real - 1) must stay physical: a
+        # double-charged stall would make it exceed total wall time
+        if r.t_finish is not None and r.l_real > 1:
+            assert r.t_decode_spent <= (r.t_finish - r.arrival) + 1e-9
+
+
+def test_spot_epochs_report_the_mix(spec):
+    res, _ = _spot_run(spec, EVENTS, spot_frac=0.6)
+    assert any(e.target_spot > 0 for e in res.epochs)
+    assert any(e.online_spot > 0 for e in res.epochs)
+    assert res.spot_gpu_seconds > 0.0
+    assert res.spot_gpu_seconds < res.gpu_seconds
+
+
+def test_zero_hazard_spot_pool_reproduces_on_demand_bit_for_bit(spec):
+    """An undiscounted, never-reclaimed spot pool is on-demand capacity by
+    another name: the spot machinery (split, class-aware booting, priced
+    billing) must change nothing at all."""
+    period, duration = 120.0, 240.0
+    scfg = ScaleSimConfig(interval=5.0, provision_delay=10.0,
+                          initial_workers=3)
+
+    def run(spot, mix):
+        fc = SeasonalNaiveForecaster(ForecastConfig(period=period,
+                                                    bin_width=5.0))
+        pol = ForecastPolicy(scfg, fc, spot_mix=mix)
+        trace = diurnal_trace(_wcfg(), amplitude=0.6, period=period)
+        return simulate_autoscaled(trace, spec, SLO_70B, SimConfig(), scfg,
+                                   pol, spot=spot)
+
+    base = run(None, None)
+    twin_spec = dataclasses.replace(spec, name=f"{spec.name}-spot")
+    twin = run(SpotMarket(twin_spec, events=[]),
+               SpotMixConfig(discount=1.0, hazard=0.0, spot_frac=0.5))
+    assert twin.row() == base.row()
+
+
+def test_spot_mix_cheaper_than_on_demand_at_target(spec):
+    """The PR's claim in miniature: on a diurnal trace with a live spot
+    market, the mix attains the target at strictly lower billed cost."""
+    duration, period = 300.0, 150.0
+    hazard = 1.0 / 600.0
+    events = preemption_trace(duration, event_rate=hazard / 0.25, frac=0.25,
+                              seed=13)
+    spot_res, _ = _spot_run(spec, events, hazard=hazard, duration=duration,
+                            period=period)
+    scfg = ScaleSimConfig(interval=5.0, provision_delay=10.0,
+                          initial_workers=3)
+    fc = SeasonalNaiveForecaster(ForecastConfig(period=period, bin_width=5.0))
+    od_res = simulate_autoscaled(
+        diurnal_trace(_wcfg(duration=duration), amplitude=0.6, period=period),
+        spec, SLO_70B, SimConfig(), scfg, ForecastPolicy(scfg, fc))
+    assert spot_res.attainment >= 0.99
+    assert spot_res.gpu_seconds < od_res.gpu_seconds
+    assert spot_res.finished == spot_res.total
+
+
+# ---- disaggregated pool-ratio search -----------------------------------------
+
+def test_ratio_pool_fn_counts_and_cost_are_monotone():
+    a = make_worker_spec(ARCH, A100_80G, SLO_70B, mean_context=450.0)
+    v = make_worker_spec(ARCH, V100_32G, SLO_70B, n_g=8, mean_context=450.0)
+    for ratio in (0.0, 0.3, 0.5, 0.75, 1.0):
+        fn = ratio_pool_fn([a, v], ratio)
+        prev_cost = 0.0
+        for n in range(1, 12):
+            pools = fn(n)
+            assert sum(k for _, k in pools) == n
+            cost = pool_cost(pools)
+            assert cost >= prev_cost
+            prev_cost = cost
+
+
+def test_ratio_pool_fn_single_spec_ignores_ratio():
+    a = make_worker_spec(ARCH, A100_80G, SLO_70B, mean_context=450.0)
+    assert ratio_pool_fn([a], 0.3)(4) == [(a, 4)]
+    with pytest.raises(ValueError):
+        ratio_pool_fn([a, a, a], 0.5)
+
+
+def test_min_cost_disagg_ratio_search_never_worse_than_fixed_ratio():
+    a = make_worker_spec(ARCH, A100_80G, SLO_70B, mean_context=450.0)
+    v = make_worker_spec(ARCH, V100_32G, SLO_70B, n_g=8, mean_context=450.0)
+    wcfg = WorkloadConfig(mean_rate=1.5, duration=8.0, seed=3, in_mu=5.0,
+                          in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+
+    from repro.serving import generate_trace
+    trace_fn = lambda: generate_trace(wcfg)   # noqa: E731
+    kw = dict(attain_target=0.95, max_prefill=2, hi_decode=8)
+    fixed = min_cost_disagg(trace_fn, SLO_70B, DisaggConfig(),
+                            prefill_pool_fn=ratio_pool_fn([a, v], 0.5),
+                            decode_pool_fn=ratio_pool_fn([a, v], 0.5), **kw)
+    searched = min_cost_disagg(trace_fn, SLO_70B, DisaggConfig(),
+                               prefill_mix=[a, v], decode_mix=[a, v],
+                               ratio_grid=(0.5, 1.0), **kw)
+    assert searched is not None
+    if fixed is not None:
+        assert searched.gpu_cost <= fixed.gpu_cost

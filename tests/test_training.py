@@ -1,7 +1,5 @@
 """Training substrate: loss decreases, microbatch equivalence, checkpoint
 round-trip + restart determinism, grad compression error feedback."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,7 +11,7 @@ from repro.training import (AdamWConfig, DataConfig, TrainConfig,
                             load, make_train_step, save)
 from repro.training.optimizer import (compress_int8,
                                       compressed_grads_with_ef,
-                                      decompress_int8, init_opt_state)
+                                      decompress_int8)
 from repro.training.train_step import loss_and_grads
 
 
