@@ -21,9 +21,10 @@ GPU cost = workers x accelerators-per-worker. Latency models per worker
 config come from Eqs. 5-6 (core.worker_config)."""
 from __future__ import annotations
 
+import dataclasses
 import json
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -33,17 +34,20 @@ from repro.core.scaling import SpotMixConfig
 from repro.core.slo import PAPER_SLOS
 from repro.core.worker_config import (A100_80G, V100_32G, make_worker_spec,
                                       optimal_worker_config, spot_variant)
+from repro.serving.api import (Colocated, Disaggregated, FleetSpec, Forecast,
+                               PolicyScale, PoolSpec, RunReport, Scenario,
+                               run as run_scenario)
 from repro.serving.disagg import DisaggConfig, min_cost_disagg
 from repro.serving.forecast import (ForecastConfig, ForecastPolicy,
                                     ReactivePolicy, ScaleSimConfig,
-                                    SeasonalNaiveForecaster, SpotMarket,
-                                    simulate_autoscaled)
+                                    SeasonalNaiveForecaster, SpotMarket)
 from repro.serving.length_predictor import LengthPredictor
 from repro.serving.simulator import (SimConfig, min_workers_for_slo,
                                      simulate)
-from repro.serving.workload import (WorkloadConfig, burst_trace,
-                                    diurnal_trace, generate_trace,
-                                    preemption_trace, sample_lengths)
+from repro.serving.workload import (PreemptionEvent, WorkloadConfig,
+                                    burst_trace, diurnal_trace,
+                                    generate_trace, preemption_trace,
+                                    sample_lengths)
 
 MODEL = "llama2-70b"
 ATTAIN = 0.98
@@ -311,6 +315,60 @@ def run_burst(verbose: bool = True, duration: float = 30.0) -> List[Dict]:
     return [row]
 
 
+def _scaled_row(scenario: str, label: str, rep: RunReport) -> Dict:
+    """One bench row from a RunReport — the single row schema every scaled
+    scenario (forecast / spot / disagg_spot) shares."""
+    return {
+        "name": f"{scenario}_{label}", "us_per_call": 0.0,
+        "scenario": scenario, "policy": label,
+        "gpu_cost": rep.gpu_seconds, "gpu_seconds": rep.gpu_seconds,
+        "spot_gpu_seconds": rep.spot_gpu_seconds,
+        "attainment": rep.attainment, "p99_ttft": rep.p99_ttft,
+        "p99_atgt": rep.p99_atgt, "peak_workers": rep.peak_workers,
+        "preempted_workers": rep.preempted_workers,
+        "drained_ok": rep.drained_ok, "requeued": rep.requeued,
+        "kv_retransfers": rep.kv_retransfers,
+        "derived": (f"gpu_s={rep.gpu_seconds:.0f};"
+                    f"spot_s={rep.spot_gpu_seconds:.0f};"
+                    f"attain={rep.attainment:.4f};"
+                    f"killed={rep.preempted_workers};"
+                    f"drained_ok={rep.drained_ok};"
+                    f"requeued={rep.requeued};"
+                    f"kv_retx={rep.kv_retransfers};"
+                    f"peak={rep.peak_workers}")}
+
+
+def _saving_row(scenario: str, base_label: str, base: RunReport,
+                cand: RunReport, extra: str = "") -> Dict:
+    saving = 1.0 - cand.gpu_seconds / base.gpu_seconds \
+        if base.gpu_seconds else 0.0
+    return {"name": f"{scenario}_saving", "us_per_call": 0.0,
+            "scenario": scenario, "gpu_cost": cand.gpu_seconds,
+            "attainment": cand.attainment,
+            "derived": (f"save_vs_{base_label}={saving:.3f};"
+                        f"cand_attain={cand.attainment:.4f};"
+                        f"{base_label}_attain={base.attainment:.4f}"
+                        + (f";{extra}" if extra else ""))}
+
+
+def _run_scaled(scenario: str, scenarios: Dict[str, Scenario],
+                base_label: str, verbose: bool, extra: str = "",
+                cand_label: Optional[str] = None) -> List[Dict]:
+    """Dispatch a dict of named Scenario constructions through api.run and
+    write the bench file — the one code path every scaled scenario shares
+    (no per-scenario result plumbing)."""
+    reps = {label: run_scenario(sc) for label, sc in scenarios.items()}
+    rows = [_scaled_row(scenario, label, rep) for label, rep in reps.items()]
+    cand = cand_label or [lab for lab in reps if lab != base_label][-1]
+    rows.append(_saving_row(scenario, base_label, reps[base_label],
+                            reps[cand], extra))
+    if verbose:
+        for row in rows:
+            print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    _write_bench(scenario, rows)
+    return rows
+
+
 def run_forecast(verbose: bool = True, duration: float = 600.0,
                  period: float = 300.0, rate: float = 6.0,
                  amplitude: float = 0.6, seed: int = 21) -> List[Dict]:
@@ -339,43 +397,26 @@ def run_forecast(verbose: bool = True, duration: float = 600.0,
                           initial_workers=warm.n_workers_peak)
     fc = SeasonalNaiveForecaster(ForecastConfig(period=period,
                                                 bin_width=scfg.interval))
-    rows: List[Dict] = []
-    results = {}
-    for policy in (ReactivePolicy(scfg), ForecastPolicy(scfg, fc)):
-        res = simulate_autoscaled(trace_fn(), spec, slo, SimConfig(), scfg,
-                                  policy)
-        results[res.policy] = res
-        rows.append({
-            "name": f"forecast_{res.policy}", "us_per_call": 0.0,
-            "scenario": "forecast", "policy": res.policy,
-            "gpu_cost": res.gpu_seconds, "gpu_seconds": res.gpu_seconds,
-            "attainment": res.attainment, "p99_ttft": res.p99_ttft,
-            "p99_atgt": res.p99_atgt, "peak_workers": res.peak_workers,
-            "derived": (f"gpu_s={res.gpu_seconds:.0f};"
-                        f"attain={res.attainment:.4f};"
-                        f"p99_ttft={res.p99_ttft:.3f};"
-                        f"p99_atgt={res.p99_atgt:.4f};"
-                        f"peak={res.peak_workers}")})
-    r, f = results["reactive"], results["forecast"]
-    saving = 1.0 - f.gpu_seconds / r.gpu_seconds if r.gpu_seconds else 0.0
-    rows.append({"name": "forecast_saving", "us_per_call": 0.0,
-                 "scenario": "forecast", "gpu_cost": f.gpu_seconds,
-                 "attainment": f.attainment,
-                 "derived": (f"save_vs_reactive={saving:.3f};"
-                             f"forecast_attain={f.attainment:.4f};"
-                             f"reactive_attain={r.attainment:.4f}")})
-    if verbose:
-        for row in rows:
-            print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
-    _write_bench("forecast", rows)
-    return rows
+
+    def scaled(policy) -> Scenario:
+        return Scenario(workload=trace_fn,
+                        fleet=FleetSpec([PoolSpec(spec,
+                                                  scfg.initial_workers)]),
+                        slo=slo, topology=Colocated(),
+                        scaling=PolicyScale(policy, scfg))
+
+    return _run_scaled("forecast",
+                       {"reactive": scaled(ReactivePolicy(scfg)),
+                        "forecast": scaled(ForecastPolicy(scfg, fc))},
+                       base_label="reactive", verbose=verbose)
 
 
 def run_spot(verbose: bool = True, duration: float = 600.0,
              period: float = 300.0, rate: float = 6.0,
              amplitude: float = 0.6, seed: int = 21,
              hazard: float = 1.0 / 600.0, discount: float = 0.35,
-             event_frac: float = 0.25, event_seed: int = 13) -> List[Dict]:
+             event_frac: float = 0.25, event_seed: int = 13,
+             notice_s: float = 60.0) -> List[Dict]:
     """Spot-aware vs all-on-demand forecast scaling on the default diurnal
     trace. The spot pool bills at ``discount`` of on-demand but is reclaimed
     by a ``preemption_trace`` market (per-worker hazard ~ event_rate * frac);
@@ -383,7 +424,12 @@ def run_spot(verbose: bool = True, duration: float = 600.0,
     the full KV re-prefill recovery cost. The mix policy serves the diurnal
     trough on-demand and the swing on hazard-inflated spot capacity; billed
     GPU-seconds are price-weighted, so the row pair is the paper-style
-    claim: same attainment target, lower serving cost."""
+    claim: same attainment target, lower serving cost.
+
+    The third row replays the spot run with a ``notice_s`` preemption
+    notice (real clouds give 30-120 s): reclaimed workers drain instead of
+    dying, so most recoveries become ``drained_ok`` instead of KV-loss
+    requeues."""
     arch = get_arch(MODEL)
     slo = PAPER_SLOS[MODEL]
     spec = make_worker_spec(arch, A100_80G, slo, mean_context=450.0)
@@ -405,49 +451,87 @@ def run_spot(verbose: bool = True, duration: float = 600.0,
         return ForecastPolicy(scfg, fc, spot_mix=mix)
 
     mix = SpotMixConfig(discount=discount, hazard=hazard, max_spot_frac=0.7)
-    runs = {
-        "on_demand": simulate_autoscaled(trace_fn(), spec, slo, SimConfig(),
-                                         scfg, policy(None)),
-        "spot_mix": simulate_autoscaled(trace_fn(), spec, slo, SimConfig(),
-                                        scfg, policy(mix),
-                                        spot=SpotMarket(spot_spec, events)),
-    }
-    rows: List[Dict] = []
-    for label, res in runs.items():
-        rows.append({
-            "name": f"spot_{label}", "us_per_call": 0.0,
-            "scenario": "spot", "policy": label,
-            "gpu_cost": res.gpu_seconds, "gpu_seconds": res.gpu_seconds,
-            "spot_gpu_seconds": res.spot_gpu_seconds,
-            "attainment": res.attainment, "p99_ttft": res.p99_ttft,
-            "p99_atgt": res.p99_atgt, "peak_workers": res.peak_workers,
-            "preempted_workers": res.preempted_workers,
-            "requeued": res.requeued,
-            "derived": (f"gpu_s={res.gpu_seconds:.0f};"
-                        f"spot_s={res.spot_gpu_seconds:.0f};"
-                        f"attain={res.attainment:.4f};"
-                        f"killed={res.preempted_workers};"
-                        f"requeued={res.requeued};"
-                        f"peak={res.peak_workers}")})
-    od, sp = runs["on_demand"], runs["spot_mix"]
-    saving = 1.0 - sp.gpu_seconds / od.gpu_seconds if od.gpu_seconds else 0.0
-    rows.append({"name": "spot_saving", "us_per_call": 0.0,
-                 "scenario": "spot", "gpu_cost": sp.gpu_seconds,
-                 "attainment": sp.attainment,
-                 "derived": (f"save_vs_on_demand={saving:.3f};"
-                             f"spot_attain={sp.attainment:.4f};"
-                             f"od_attain={od.attainment:.4f};"
-                             f"events={len(events)}")})
-    if verbose:
-        for row in rows:
-            print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
-    _write_bench("spot", rows)
-    return rows
+
+    def scaled(policy, market=None) -> Scenario:
+        return Scenario(workload=trace_fn,
+                        fleet=FleetSpec([PoolSpec(spec,
+                                                  scfg.initial_workers)]),
+                        slo=slo, topology=Colocated(),
+                        scaling=PolicyScale(policy, scfg), market=market)
+
+    return _run_scaled(
+        "spot",
+        {"on_demand": scaled(policy(None)),
+         "spot_mix": scaled(policy(mix), SpotMarket(spot_spec, events)),
+         "spot_notice": scaled(policy(mix),
+                               SpotMarket(spot_spec, events,
+                                          notice_s=notice_s))},
+        base_label="on_demand", verbose=verbose,
+        extra=f"events={len(events)}", cand_label="spot_mix")
+
+
+def run_disagg_spot(verbose: bool = True, duration: float = 600.0,
+                    period: float = 300.0, rate: float = 6.0,
+                    amplitude: float = 0.6, seed: int = 21,
+                    hazard: float = 1.0 / 600.0, discount: float = 0.35,
+                    event_seed: int = 13) -> List[Dict]:
+    """The combination matrix cell none of the legacy entry points could
+    express: autoscaled disaggregated pools under asymmetric spot hazards.
+
+    Both sides (prefill, decode) scale with their own forecast policy; the
+    spot market reclaims decode workers at ``hazard`` (each reclaim loses
+    the victims' KV — requests re-prefill their full context and pay the KV
+    *re-transfer* across the interconnect) and prefill workers at a quarter
+    of it (reclaims there only re-queue prompts, so the market prices the
+    two sides' risk asymmetrically). Two correlated capacity crunches land
+    at the diurnal peaks. The decode pool caps batches at 24 (iteration
+    cost c3 dominates the tight ATGT budget, so deep batches would burn the
+    whole per-token budget before any stall), and prefill routing is the
+    wait-aware 'earliest' router — the legacy packed order piles every tie
+    on one bin and its TTFT tail is scale-invariant."""
+    arch = get_arch(MODEL)
+    slo = PAPER_SLOS[MODEL]
+    spec = make_worker_spec(arch, A100_80G, slo, mean_context=450.0)
+    dspec = dataclasses.replace(spec, max_batch=24)
+    spot_d = spot_variant(dspec, price=discount, preempt_hazard=hazard)
+    spot_p = spot_variant(spec, price=discount, preempt_hazard=hazard / 4)
+    wcfg = WorkloadConfig(mean_rate=rate, duration=duration, seed=seed,
+                          in_mu=5.0, in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+
+    def trace_fn():
+        return diurnal_trace(wcfg, amplitude=amplitude, period=period)
+
+    ev_d = list(preemption_trace(duration, event_rate=hazard / 0.25,
+                                 frac=0.25, seed=event_seed)) \
+        + [PreemptionEvent(t=period / 4.0, frac=0.6),
+           PreemptionEvent(t=period * 5.0 / 4.0, frac=0.6)]
+    ev_p = preemption_trace(duration, event_rate=hazard / 4 / 0.25,
+                            frac=0.25, seed=event_seed + 1)
+    market = SpotMarket(spot_d, ev_d, prefill_spec=spot_p,
+                        prefill_events=ev_p)
+
+    def scenario(mkt) -> Scenario:
+        return Scenario(
+            workload=trace_fn,
+            fleet=FleetSpec([PoolSpec(spec, 3, role="prefill"),
+                             PoolSpec(dspec, 6, role="decode")]),
+            slo=slo,
+            topology=Disaggregated(heartbeat=0.02, theta=0.7,
+                                   prefill_router="earliest"),
+            scaling=Forecast(period=period, min_workers=3, headroom=1.2),
+            market=mkt)
+
+    return _run_scaled("disagg_spot",
+                       {"on_demand": scenario(None),
+                        "spot_mix": scenario(market)},
+                       base_label="on_demand", verbose=verbose,
+                       extra=f"decode_events={len(ev_d)}")
 
 
 SCENARIOS = {"fig": run, "hetero": run_hetero, "disagg": run_disagg,
              "hot_loop": run_hot_loop, "burst": run_burst,
-             "forecast": run_forecast, "spot": run_spot}
+             "forecast": run_forecast, "spot": run_spot,
+             "disagg_spot": run_disagg_spot}
 
 # shrunken per-scenario parameters for the CI canary (--smoke)
 SMOKE_PARAMS = {
@@ -459,6 +543,8 @@ SMOKE_PARAMS = {
     "forecast": dict(duration=150.0, period=75.0, rate=4.0),
     "spot": dict(duration=150.0, period=75.0, rate=4.0,
                  hazard=1.0 / 150.0, event_seed=2),
+    "disagg_spot": dict(duration=150.0, period=75.0, rate=4.0,
+                        hazard=1.0 / 150.0, event_seed=2),
 }
 
 

@@ -5,6 +5,8 @@ and an end-to-end prefill/decode disaggregated cluster.
 
   PYTHONPATH=src:. python examples/cluster_sim.py
 """
+import dataclasses
+
 import numpy as np
 
 from benchmarks.bench_cluster_sim import (_kv_cap_tokens, _perf_for,
@@ -14,6 +16,8 @@ from repro.core.scaling import Autoscaler, SpotMixConfig
 from repro.core.slo import PAPER_SLOS
 from repro.core.worker_config import (A100_80G, V100_32G, make_worker_spec,
                                       optimal_worker_config, spot_variant)
+from repro.serving.api import (Disaggregated, FleetSpec, Forecast, PoolSpec,
+                               Scenario, run)
 from repro.serving.disagg import DisaggConfig, min_cost_disagg
 from repro.serving.forecast import (ForecastConfig, ForecastPolicy,
                                     ReactivePolicy, ScaleSimConfig,
@@ -151,6 +155,35 @@ def main() -> None:
           f"(spot share {r.spot_gpu_seconds:.0f}) "
           f"attain={r.attainment:.3f} reclaimed={r.preempted_workers} "
           f"requeued={r.requeued}")
+
+    # the Scenario API's genuinely new cell: autoscaled disaggregated pools
+    # under asymmetric spot hazards — decode reclaims pay a full context
+    # re-prefill + KV re-transfer, prefill reclaims only re-queue prompts.
+    # One declarative Scenario, one run(), one RunReport.
+    print("\nautoscaled disaggregated pools + asymmetric spot (Scenario "
+          "API):")
+    dspec = dataclasses.replace(a100, max_batch=24)
+    dmarket = SpotMarket(
+        spot_variant(dspec, price=0.35, preempt_hazard=hazard),
+        preemption_trace(dur, event_rate=hazard / 0.25, frac=0.25, seed=13),
+        prefill_spec=spot_variant(a100, price=0.35,
+                                  preempt_hazard=hazard / 4),
+        prefill_events=preemption_trace(dur, event_rate=hazard / 4 / 0.25,
+                                        frac=0.25, seed=14))
+    rep = run(Scenario(
+        workload=lambda: diurnal_trace(fcfg, amplitude=0.6, period=period),
+        fleet=FleetSpec([PoolSpec(a100, 2, role="prefill"),
+                         PoolSpec(dspec, 5, role="decode")]),
+        slo=slo,
+        topology=Disaggregated(heartbeat=0.02, theta=0.7,
+                               prefill_router="earliest"),
+        scaling=Forecast(period=period, min_workers=2, headroom=1.2),
+        market=dmarket))
+    print(f"  gpu_seconds={rep.gpu_seconds:8.0f} (spot share "
+          f"{rep.spot_gpu_seconds:.0f}) attain={rep.attainment:.3f} "
+          f"killed={rep.preempted_workers} requeued={rep.requeued} "
+          f"kv_retransfers={rep.kv_retransfers} "
+          f"peak=p{rep.n_prefill}/d{rep.n_decode}")
 
     # diurnal trace through the elastic simulator
     wcfg = WorkloadConfig(mean_rate=4.0, duration=30.0, seed=17, in_mu=5.0,

@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Capture pre-refactor simulator metrics on fixed seeds.
+
+Run once on the pre-refactor tree to produce the golden dicts pinned by
+tests/test_shim_goldens.py; the shim layer introduced by the Scenario API
+must reproduce these numbers bit-for-bit."""
+from __future__ import annotations
+
+import json
+
+from repro.configs import get_arch
+from repro.core import A100_80G, PAPER_SLOS, SpotMixConfig, make_worker_spec
+from repro.core.worker_config import spot_variant
+from repro.serving import (DisaggConfig, ForecastConfig, ForecastPolicy,
+                           PreemptionEvent, ReactivePolicy, ScaleSimConfig,
+                           SeasonalNaiveForecaster, SimConfig, SpotMarket,
+                           WorkloadConfig, diurnal_trace, generate_trace,
+                           simulate, simulate_autoscaled,
+                           simulate_disaggregated)
+
+ARCH = get_arch("llama2-70b")
+SLO = PAPER_SLOS["llama2-70b"]
+WCFG = WorkloadConfig(mean_rate=3.0, duration=15.0, seed=9, in_mu=5.0,
+                      in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+
+
+def main() -> None:
+    spec = make_worker_spec(ARCH, A100_80G, SLO, mean_context=450.0)
+    out = {}
+
+    res = simulate(generate_trace(WCFG), spec.perf, SLO, spec.kv_capacity,
+                   SimConfig(), n_workers=4)
+    out["colocated_fixed"] = res.row()
+
+    res = simulate(generate_trace(WCFG), spec.perf, SLO, spec.kv_capacity,
+                   SimConfig(policy="po2", seed=4), n_workers=None)
+    out["colocated_elastic_po2"] = res.row()
+
+    res = simulate_disaggregated(generate_trace(WCFG), SLO, DisaggConfig(),
+                                 spec, spec, n_prefill=2, n_decode=4)
+    out["disagg_fixed"] = res.row()
+
+    dcfg = WorkloadConfig(mean_rate=4.0, duration=240.0, seed=21, in_mu=5.0,
+                          in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+    scfg = ScaleSimConfig(interval=5.0, provision_delay=10.0,
+                          initial_workers=3)
+    res = simulate_autoscaled(
+        diurnal_trace(dcfg, amplitude=0.6, period=120.0), spec, SLO,
+        SimConfig(), scfg, ReactivePolicy(scfg))
+    out["autoscaled_reactive"] = res.row()
+
+    fc = SeasonalNaiveForecaster(ForecastConfig(period=120.0, bin_width=5.0))
+    res = simulate_autoscaled(
+        diurnal_trace(dcfg, amplitude=0.6, period=120.0), spec, SLO,
+        SimConfig(), scfg, ForecastPolicy(scfg, fc))
+    out["autoscaled_forecast"] = res.row()
+
+    fc = SeasonalNaiveForecaster(ForecastConfig(period=120.0, bin_width=5.0))
+    mix = SpotMixConfig(discount=0.35, hazard=1.0 / 600.0, spot_frac=0.6)
+    pol = ForecastPolicy(scfg, fc, spot_mix=mix)
+    market = SpotMarket(
+        spot_variant(spec, price=0.35, preempt_hazard=1.0 / 600.0),
+        [PreemptionEvent(t=35.0, frac=0.5), PreemptionEvent(t=160.0,
+                                                            frac=0.5)])
+    res = simulate_autoscaled(
+        diurnal_trace(dcfg, amplitude=0.6, period=120.0), spec, SLO,
+        SimConfig(), scfg, pol, spot=market)
+    out["autoscaled_spot"] = res.row()
+
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

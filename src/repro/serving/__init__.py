@@ -1,5 +1,12 @@
-"""Serving substrate: paged continuous-batching engine, cluster control
-plane, discrete-event simulator, workload + length prediction."""
+"""Serving substrate: the declarative Scenario API (``api.run`` /
+``api.optimize``) over one simulation engine, plus the paged
+continuous-batching engine, cluster control plane, workload generators and
+length prediction. ``__all__`` is the supported public surface — guarded by
+tests/test_scenario_api.py against drifting from the documented names."""
+from repro.serving.api import (Colocated, Disaggregated,             # noqa: F401
+                               FixedScale, FleetSpec, Forecast, Plan,
+                               PolicyScale, PoolSpec, Reactive, RunReport,
+                               Scenario, optimize, run)
 from repro.serving.cluster import ClusterConfig, ServingCluster      # noqa: F401
 from repro.serving.disagg import (DisaggConfig, DisaggResult,        # noqa: F401
                                   min_cost_disagg, ratio_pool_fn,
@@ -15,7 +22,31 @@ from repro.serving.simulator import (SimConfig, SimResult,           # noqa: F40
                                      min_workers_for_slo,
                                      run_heartbeat_loop, simulate)
 from repro.serving.workload import (PreemptionEvent, WorkloadConfig,  # noqa: F401
-                                    burst_trace, diurnal_rate_fn,
-                                    diurnal_trace, generate_trace,
-                                    nonhomogeneous_trace, preemption_trace,
-                                    sample_lengths)
+                                    burst_trace, clone_trace,
+                                    diurnal_rate_fn, diurnal_trace,
+                                    generate_trace, nonhomogeneous_trace,
+                                    preemption_trace, sample_lengths)
+
+# The documented public surface (README "Scenario API" + ROADMAP PR-4).
+__all__ = [
+    # declarative Scenario API (repro.serving.api)
+    "Scenario", "FleetSpec", "PoolSpec", "Colocated", "Disaggregated",
+    "FixedScale", "Reactive", "Forecast", "PolicyScale", "RunReport",
+    "Plan", "run", "optimize",
+    # markets + scaling policies
+    "SpotMarket", "ScaleSimConfig", "ScaleSimResult", "ReactivePolicy",
+    "ForecastPolicy", "SeasonalNaiveForecaster", "EWMAForecaster",
+    "ForecastConfig",
+    # legacy simulators (deprecation shims over run()/optimize())
+    "SimConfig", "SimResult", "simulate", "min_workers_for_slo",
+    "DisaggConfig", "DisaggResult", "simulate_disaggregated",
+    "min_cost_disagg", "ratio_pool_fn", "simulate_autoscaled",
+    "run_heartbeat_loop",
+    # workload generation
+    "WorkloadConfig", "generate_trace", "nonhomogeneous_trace",
+    "burst_trace", "diurnal_trace", "diurnal_rate_fn", "preemption_trace",
+    "PreemptionEvent", "sample_lengths", "clone_trace",
+    # engine + cluster + prediction
+    "EngineConfig", "PagedEngine", "ClusterConfig", "ServingCluster",
+    "LengthPredictor",
+]

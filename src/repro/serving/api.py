@@ -1,0 +1,802 @@
+"""One declarative Scenario API over every cluster simulator.
+
+The repo's simulators grew as three disjoint entry points — ``simulate``
+(colocated), ``simulate_disaggregated`` and ``simulate_autoscaled`` — which
+made the paper's most interesting regime (autoscaled, SLO-aware
+*disaggregated* pools under spot pricing) inexpressible. This module gives
+the codebase exactly two verbs over one declarative description:
+
+    report = run(Scenario(workload=..., fleet=FleetSpec(...), slo=...,
+                          topology=Colocated() | Disaggregated(),
+                          scaling=FixedScale(n) | Reactive() | Forecast(),
+                          market=SpotMarket(...) | None))
+    plan   = optimize(scenario, objective="cost")
+
+Internally every combination runs one engine path: the existing causal
+heartbeat loop (``simulator.run_heartbeat_loop``) drives a *topology*
+(``ColocatedTopology`` or ``DisaggTopology``) whose worker containers are
+either static (``FixedPool`` / fixed sides) or policy-scaled
+(``forecast.ManagedPool``), with the spot market's reclaim events delivered
+causally to whichever container owns the victims. That is what makes the
+2 topologies x 3 scaling modes x {on-demand, spot} matrix composable —
+including the cell none of the legacy entry points could express:
+autoscaled disaggregated pools with asymmetric spot hazards, where a
+decode-pool reclaim pays a full context re-prefill plus KV re-transfer
+while a prefill-pool reclaim merely re-queues prompts.
+
+The legacy entry points remain as thin deprecation shims that build the
+equivalent ``Scenario`` and reproduce their pre-refactor metrics
+bit-for-bit (tests/test_shim_goldens.py pins them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.scaling import SpotMixConfig
+from repro.core.slo import SLO, slo_attainment
+from repro.core.worker_config import WorkerSpec
+from repro.serving.disagg import (DisaggConfig, DisaggResult, DisaggTopology,
+                                  FixedDecodeSide, FixedPrefillSide,
+                                  ManagedSide, PrefillSimWorker, pool_cost,
+                                  ratio_pool_fn)
+from repro.serving.forecast import (EpochStat, ForecastConfig, ForecastPolicy,
+                                    ManagedPool, ReactivePolicy,
+                                    ScaleSimConfig, ScaleSimResult,
+                                    SeasonalNaiveForecaster, SpotMarket,
+                                    mark_requeue)
+from repro.serving.length_predictor import LengthPredictor
+from repro.serving.simulator import (ColocatedTopology, FixedPool, SimConfig,
+                                     SimResult, SimWorker,
+                                     make_worker_state, run_heartbeat_loop)
+from repro.serving.workload import clone_trace
+
+# ---- scenario vocabulary -----------------------------------------------------
+
+
+@dataclasses.dataclass
+class PoolSpec:
+    """One worker type in the fleet: its spec, how many to start with, and
+    which tier it serves (``serve`` for colocated, ``prefill``/``decode``
+    for a disaggregated topology). Under ``FixedScale`` the count IS the
+    pool size; under ``Reactive``/``Forecast`` it seeds ``initial_workers``
+    and the policy owns the count from there."""
+    spec: WorkerSpec
+    count: int = 0
+    role: str = "serve"
+
+
+@dataclasses.dataclass
+class FleetSpec:
+    """The worker types a scenario may buy, grouped by role."""
+    pools: Sequence[PoolSpec] = dataclasses.field(default_factory=list)
+
+    def for_role(self, role: str) -> List[PoolSpec]:
+        sel = [p for p in self.pools if p.role == role]
+        if not sel and role == "serve":
+            # a role-less fleet serves the colocated tier
+            sel = [p for p in self.pools if p.role not in ("prefill",
+                                                           "decode")]
+        return sel
+
+
+@dataclasses.dataclass
+class Colocated:
+    """Single-tier topology: prefill and decode share every worker
+    (the classic ``simulate`` world, including split_phase decode-only
+    fleets for Fig. 12)."""
+    heartbeat: float = 0.25
+    policy: str = "aladdin"            # aladdin | jsq | po2
+    split_phase: bool = False
+    rebalance: bool = True
+    gamma: float = 0.5
+    theta: float = 0.9
+    max_batch: int = 128
+
+
+@dataclasses.dataclass
+class Disaggregated:
+    """Two-tier topology: prefill pools hand KV to decode pools over a
+    modeled interconnect (the ``simulate_disaggregated`` world)."""
+    heartbeat: float = 0.05
+    policy: str = "aladdin"            # decode placement: aladdin | jsq
+    gamma: float = 0.5
+    theta: float = 0.9
+    kv_transfer_bw: float = 64e9
+    kv_transfer_lat: float = 2e-3
+    prefill_router: str = "packed"     # packed (legacy) | earliest
+
+
+@dataclasses.dataclass
+class FixedScale:
+    """No autoscaling. ``n`` workers of the first pool type, or the fleet's
+    explicit per-pool counts when ``n`` is None; a colocated fleet with
+    neither runs *elastic* (open a worker whenever placement fails — the
+    min-cost oracle)."""
+    n: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Reactive:
+    """Eq. 7 scaling on the last observed rate, with a scale-down cooldown
+    (``forecast.ReactivePolicy``)."""
+    interval: float = 5.0
+    provision_delay: float = 10.0
+    cooldown: float = 60.0
+    min_workers: int = 1
+    max_workers: int = 512
+    initial_workers: Optional[int] = None     # None: the fleet pool counts
+    headroom: float = 1.0                     # SLO head-room on targets
+
+
+@dataclasses.dataclass
+class Forecast:
+    """Eq. 7 scaling on a seasonal-naive + EWMA-residual forecast
+    ``provision_delay + interval`` ahead (``forecast.ForecastPolicy``).
+    ``spot_mix`` overrides the economics derived from the market's spot
+    spec (discount = spot price, hazard = its reclaim rate)."""
+    interval: float = 5.0
+    provision_delay: float = 10.0
+    lead: Optional[float] = None
+    period: float = 300.0
+    bin_width: Optional[float] = None         # None: one bin per interval
+    min_workers: int = 1
+    max_workers: int = 512
+    initial_workers: Optional[int] = None
+    headroom: float = 1.0                     # SLO head-room on targets
+    spot_mix: Optional[SpotMixConfig] = None
+
+
+@dataclasses.dataclass
+class PolicyScale:
+    """Escape hatch wrapping a prebuilt policy instance + ScaleSimConfig —
+    the legacy ``simulate_autoscaled`` calling convention. Colocated only
+    (a disaggregated scenario needs one independent policy per side, which
+    only the declarative forms can build)."""
+    policy: object
+    scfg: ScaleSimConfig
+
+
+ScalingLike = Union[FixedScale, Reactive, Forecast, PolicyScale]
+TopologyLike = Union[Colocated, Disaggregated]
+
+
+@dataclasses.dataclass
+class Scenario:
+    """A complete, declarative description of one serving experiment:
+    what arrives (``workload``: a concrete trace or a zero-arg trace
+    factory), what it runs on (``fleet``), how the tiers are arranged
+    (``topology``), who owns the worker counts (``scaling``), whether a
+    preemptible market exists (``market``), and the SLO it is judged by."""
+    workload: object                   # Sequence[Request] | () -> Sequence
+    fleet: FleetSpec
+    slo: SLO
+    topology: TopologyLike = dataclasses.field(default_factory=Colocated)
+    scaling: ScalingLike = dataclasses.field(default_factory=FixedScale)
+    market: Optional[SpotMarket] = None
+    predictor: Optional[LengthPredictor] = None
+    observer: Optional[Callable] = None
+    seed: int = 0
+
+    def materialize(self) -> List:
+        """The workload as a concrete request list (evaluating a trace
+        factory once); use ``workload.clone_trace`` to replay it."""
+        w = self.workload
+        return list(w() if callable(w) else w)
+
+
+# ---- the unified run record --------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunReport:
+    """The one versioned result record every ``run()`` returns — the union
+    of the three legacy ``*Result.row()`` schemas. ``row()`` is the flat
+    dict the benchmarks write; the ``to_*_result`` adapters feed the
+    deprecation shims bit-for-bit."""
+    schema: str = "runreport/2"
+    topology: str = "colocated"        # colocated | disaggregated
+    scaling: str = "fixed"             # fixed | elastic | policy name
+    attainment: float = 0.0
+    p99_ttft: float = float("nan")
+    p99_atgt: float = float("nan")
+    mean_atgt: float = float("nan")
+    finished: int = 0
+    total: int = 0
+    peak_workers: int = 0
+    gpu_cost: float = 0.0              # fleet cost (fixed) / billed (scaled)
+    gpu_seconds: float = 0.0           # billed accelerator-seconds (scaled)
+    spot_gpu_seconds: float = 0.0
+    moves: int = 0
+    n_prefill: int = 0
+    n_decode: int = 0
+    pool_mix: str = ""
+    mean_transfer: float = 0.0
+    kv_retransfers: int = 0
+    preempted_workers: int = 0         # instant/deadline kills with loss
+    drained_ok: int = 0                # reclaims that drained in the notice
+    requeued: int = 0
+    epochs: Dict[str, List[EpochStat]] = dataclasses.field(
+        default_factory=dict)
+
+    def row(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.pop("epochs")
+        return d
+
+    # ---- legacy adapters (deprecation shims) --------------------------------
+    def to_sim_result(self) -> SimResult:
+        return SimResult(n_workers_peak=self.peak_workers,
+                         attainment=self.attainment, p99_atgt=self.p99_atgt,
+                         p99_ttft=self.p99_ttft, mean_atgt=self.mean_atgt,
+                         finished=self.finished, total=self.total,
+                         moves=self.moves, gpu_cost=self.gpu_cost)
+
+    def to_disagg_result(self) -> DisaggResult:
+        return DisaggResult(n_prefill=self.n_prefill,
+                            n_decode=self.n_decode, gpu_cost=self.gpu_cost,
+                            attainment=self.attainment,
+                            p99_ttft=self.p99_ttft, p99_atgt=self.p99_atgt,
+                            mean_transfer=self.mean_transfer,
+                            finished=self.finished, total=self.total,
+                            pool_mix=self.pool_mix)
+
+    def to_scale_result(self) -> ScaleSimResult:
+        return ScaleSimResult(policy=self.scaling,
+                              gpu_seconds=self.gpu_seconds,
+                              attainment=self.attainment,
+                              p99_ttft=self.p99_ttft,
+                              p99_atgt=self.p99_atgt,
+                              mean_atgt=self.mean_atgt,
+                              finished=self.finished, total=self.total,
+                              peak_workers=self.peak_workers,
+                              spot_gpu_seconds=self.spot_gpu_seconds,
+                              preempted_workers=self.preempted_workers,
+                              requeued=self.requeued,
+                              epochs=self.epochs.get("serve", []))
+
+
+@dataclasses.dataclass
+class Plan:
+    """What ``optimize`` found: the winning concrete scenario (None when
+    nothing within the search bounds attains the target), its report, and
+    the search account."""
+    objective: str
+    scenario: Optional[Scenario]
+    report: Optional[RunReport]
+    n_workers: int = 0
+    cost: float = float("nan")
+    evals: int = 0
+
+    @property
+    def feasible(self) -> bool:
+        return self.report is not None
+
+    @property
+    def disagg_result(self) -> Optional[DisaggResult]:
+        return self.report.to_disagg_result() if self.report else None
+
+
+# ---- metric assembly ---------------------------------------------------------
+
+
+def _percentiles(finished, total, slo) -> Dict:
+    atgts = [r.atgt() for r in finished if r.atgt() is not None]
+    ttfts = [r.ttft() for r in finished if r.ttft() is not None]
+    return dict(
+        attainment=slo_attainment(finished, total, slo),
+        p99_atgt=float(np.percentile(atgts, 99)) if atgts else float("nan"),
+        p99_ttft=float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
+        mean_atgt=float(np.mean(atgts)) if atgts else float("nan"),
+        finished=len(finished), total=total)
+
+
+# ---- scaling builders --------------------------------------------------------
+
+
+def _scale_cfg(s: ScalingLike, initial: int) -> ScaleSimConfig:
+    return ScaleSimConfig(
+        interval=s.interval, provision_delay=s.provision_delay,
+        cooldown=getattr(s, "cooldown", 60.0), lead=getattr(s, "lead", None),
+        min_workers=s.min_workers, max_workers=s.max_workers,
+        initial_workers=s.initial_workers
+        if s.initial_workers is not None else max(initial, 1),
+        headroom=s.headroom)
+
+
+def _build_policy(s: ScalingLike, scfg: ScaleSimConfig,
+                  spot_spec: Optional[WorkerSpec]):
+    mix = getattr(s, "spot_mix", None)
+    if mix is None and spot_spec is not None and spot_spec.is_spot:
+        mix = SpotMixConfig(discount=spot_spec.price,
+                            hazard=spot_spec.preempt_hazard)
+    if isinstance(s, Forecast):
+        fc = SeasonalNaiveForecaster(ForecastConfig(
+            period=s.period, bin_width=s.bin_width or s.interval))
+        return ForecastPolicy(scfg, fc, spot_mix=mix)
+    return ReactivePolicy(scfg, spot_mix=mix)
+
+
+# ---- the engine: colocated ---------------------------------------------------
+
+
+def _run_colocated(sc: Scenario, seed: int) -> RunReport:
+    topo_cfg: Colocated = sc.topology
+    cfg = SimConfig(heartbeat=topo_cfg.heartbeat, policy=topo_cfg.policy,
+                    split_phase=topo_cfg.split_phase,
+                    rebalance=topo_cfg.rebalance, gamma=topo_cfg.gamma,
+                    theta=topo_cfg.theta, max_batch=topo_cfg.max_batch,
+                    seed=seed)
+    rng = np.random.default_rng(seed)
+    pools = sc.fleet.for_role("serve")
+    if not pools:
+        raise ValueError("colocated scenario needs at least one fleet pool "
+                         "(role='serve')")
+    sims: Dict[int, SimWorker] = {}
+    wid = [0]
+
+    def new_worker(wspec: WorkerSpec):
+        wid[0] += 1
+        return make_worker_state(wid[0], wspec, cfg, sc.slo)
+
+    market = sc.market
+    if market is not None and (market.prefill_spec is not None
+                               or len(market.prefill_events) > 0):
+        raise ValueError("SpotMarket.prefill_spec/prefill_events describe "
+                         "the prefill side of a Disaggregated topology; a "
+                         "Colocated scenario would silently ignore them")
+    notice = market.notice_s if market is not None else 0.0
+    scaling = sc.scaling
+    if isinstance(scaling, FixedScale):
+        if scaling.n is not None:
+            specs = [pools[0].spec] * int(scaling.n)
+        else:
+            specs = [p.spec for p in pools for _ in range(p.count)]
+        workers = []
+        for s in specs:
+            w = new_worker(s)
+            workers.append(w)
+            sims[w.id] = SimWorker(w, w.perf, 0.0, cfg.split_phase)
+        factory = None
+        if not workers:                # elastic: the min-cost oracle mode
+            def factory():
+                return new_worker(pools[0].spec)
+        pool = FixedPool(workers, sims, rng, factory=factory,
+                         notice_s=notice)
+        scaling_label = "elastic" if factory is not None else "fixed"
+    else:
+        if isinstance(scaling, PolicyScale):
+            policy, scfg = scaling.policy, scaling.scfg
+        else:
+            scfg = _scale_cfg(scaling, sum(p.count for p in pools))
+            policy = _build_policy(
+                scaling, scfg, market.spec if market is not None else None)
+
+        def on_spawn(w, t):
+            sims[w.id] = SimWorker(w, w.perf, t, cfg.split_phase)
+
+        def on_kill(w):
+            sim = sims.pop(w.id)
+            lost = w.ongoing + w.new_batch + sim.preempted
+            w.ongoing.clear()
+            w.new_batch.clear()
+            w.mark_dirty()
+            return lost
+
+        pool = ManagedPool(
+            pools[0].spec, scfg, policy, cfg.heartbeat, rng,
+            new_worker=new_worker, on_spawn=on_spawn, on_kill=on_kill,
+            load=lambda w: w.batch_size,
+            idle=lambda w: (not w.ongoing and not w.new_batch
+                            and not sims[w.id].preempted),
+            sims=sims, spot_spec=market.spec if market is not None else None,
+            notice_s=notice, name="serve")
+        scaling_label = getattr(policy, "name", type(policy).__name__)
+
+    managed = isinstance(pool, ManagedPool)
+    topo = ColocatedTopology(sc.slo, cfg, pool, rng, predictor=sc.predictor,
+                             observer=sc.observer, tracking=not managed)
+    trace = sc.materialize()
+    trace = run_heartbeat_loop(
+        trace, cfg.heartbeat, topo.admit, topo.step, topo.drained,
+        events=market.events if market is not None else None, fire=topo.fire)
+
+    rep = RunReport(topology="colocated", scaling=scaling_label,
+                    **_percentiles(topo.finished, len(trace), sc.slo))
+    rep.moves = topo.moves
+    if managed:
+        rep.peak_workers = pool.peak
+        rep.gpu_seconds = pool.gpu_s
+        rep.gpu_cost = pool.gpu_s
+        rep.spot_gpu_seconds = pool.spot_gpu_s
+        rep.epochs = {"serve": pool.epochs}
+    else:
+        rep.peak_workers = topo.peak_workers
+        # every worker that served counts, including market-reclaimed ones
+        # the pool removed mid-run (matches the disagg fixed path, which
+        # reports declared pool counts)
+        rep.gpu_cost = sum(w.spec.n_accelerators for w in pool.workers) \
+            + pool.retired_cost
+    rep.preempted_workers = pool.killed
+    rep.drained_ok = pool.drained_ok
+    rep.requeued = pool.requeued
+    return rep
+
+
+# ---- the engine: disaggregated -----------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _SideEvent:
+    """A market reclaim event routed to one side of a disaggregated
+    cluster (the heartbeat loop only needs the ``t`` attribute)."""
+    t: float
+    ev: object
+    side: str
+
+
+def _merge_side_events(market: Optional[SpotMarket]):
+    if market is None:
+        return None
+    evs = [_SideEvent(e.t, e, "decode") for e in market.events] \
+        + [_SideEvent(e.t, e, "prefill") for e in market.prefill_events]
+    return evs or None
+
+
+def _run_disagg(sc: Scenario, seed: int) -> RunReport:
+    topo_cfg: Disaggregated = sc.topology
+    cfg = DisaggConfig(heartbeat=topo_cfg.heartbeat, policy=topo_cfg.policy,
+                       gamma=topo_cfg.gamma, theta=topo_cfg.theta,
+                       kv_transfer_bw=topo_cfg.kv_transfer_bw,
+                       kv_transfer_lat=topo_cfg.kv_transfer_lat, seed=seed,
+                       prefill_router=topo_cfg.prefill_router)
+    rng = np.random.default_rng(seed)
+    p_pools = [(p.spec, p.count) for p in sc.fleet.for_role("prefill")]
+    d_pools = [(p.spec, p.count) for p in sc.fleet.for_role("decode")]
+    if not p_pools or not d_pools:
+        raise ValueError("disaggregated scenario needs fleet pools with "
+                         "role='prefill' and role='decode'")
+    if isinstance(sc.scaling, FixedScale):
+        # legacy _as_pools semantics: zero-count pool types do not exist
+        # (they would pollute worker ids and the pool_mix label)
+        p_pools = [(s, k) for s, k in p_pools if k > 0]
+        d_pools = [(s, k) for s, k in d_pools if k > 0]
+        if not p_pools or not d_pools:
+            raise ValueError("fixed disaggregated scenario has an empty "
+                             "prefill or decode pool (all counts are 0)")
+    market = sc.market
+    notice = market.notice_s if market is not None else 0.0
+    scaling = sc.scaling
+
+    if isinstance(scaling, FixedScale):
+        if scaling.n is not None:
+            raise ValueError("FixedScale.n is ambiguous for a disaggregated "
+                             "fleet; set per-pool counts instead")
+        # prefill groups: ids dense from 1; decode groups: ids from 1000
+        pools_p: List[Tuple[WorkerSpec, List[PrefillSimWorker]]] = []
+        wid = 0
+        for spec, k in p_pools:
+            group = []
+            for _ in range(k):
+                wid += 1
+                group.append(PrefillSimWorker(wid, spec, sc.slo))
+            pools_p.append((spec, group))
+        dcfg = SimConfig(gamma=cfg.gamma, theta=cfg.theta, split_phase=True)
+        pools_d: List[Tuple[WorkerSpec, List]] = []
+        sims_d: Dict[int, SimWorker] = {}
+        wid = 1000
+        for spec, k in d_pools:
+            group = []
+            for _ in range(k):
+                w = make_worker_state(wid, spec, dcfg, sc.slo)
+                group.append(w)
+                sims_d[w.id] = SimWorker(w, w.perf, 0.0, split_phase=True)
+                wid += 1
+            pools_d.append((spec, group))
+        prefill = FixedPrefillSide(pools_p, rng=rng, notice_s=notice)
+        decode = FixedDecodeSide(pools_d, sims_d, rng=rng, notice_s=notice)
+        scaling_label = "fixed"
+    else:
+        if isinstance(scaling, PolicyScale):
+            raise ValueError("PolicyScale wraps one policy instance; a "
+                             "disaggregated scenario scales each side with "
+                             "its own — use Reactive(...) or Forecast(...)")
+        if len(p_pools) != 1 or len(d_pools) != 1:
+            raise ValueError("autoscaled disaggregation supports one worker "
+                             "type per side (plus its spot twin)")
+        p_spec, p_n = p_pools[0]
+        d_spec, d_n = d_pools[0]
+        spot_d = market.spec if market is not None else None
+        spot_p = market.prefill_spec if market is not None else None
+        scfg_p = _scale_cfg(scaling, p_n)
+        scfg_d = _scale_cfg(scaling, d_n)
+        pol_p = _build_policy(scaling, scfg_p, spot_p)
+        pol_d = _build_policy(scaling, scfg_d, spot_d)
+        wid_p = [0]
+
+        def new_prefill(wspec: WorkerSpec) -> PrefillSimWorker:
+            wid_p[0] += 1
+            return PrefillSimWorker(wid_p[0], wspec, sc.slo)
+
+        def spawn_prefill(w, t):
+            w.t = t
+
+        def kill_prefill(w):
+            lost = list(w.queue)
+            w.queue.clear()
+            w.pending_tokens = 0
+            return lost
+
+        pool_p = ManagedPool(
+            p_spec, scfg_p, pol_p, cfg.heartbeat, rng,
+            new_worker=new_prefill, on_spawn=spawn_prefill,
+            on_kill=kill_prefill, load=lambda w: len(w.queue),
+            idle=lambda w: not w.queue, mark=mark_requeue,
+            spot_spec=spot_p, notice_s=notice, name="prefill")
+
+        dcfg = SimConfig(gamma=cfg.gamma, theta=cfg.theta, split_phase=True)
+        sims_d = {}
+        wid_d = [100000]
+
+        def new_decode(wspec: WorkerSpec):
+            wid_d[0] += 1
+            return make_worker_state(wid_d[0], wspec, dcfg, sc.slo)
+
+        def spawn_decode(w, t):
+            sims_d[w.id] = SimWorker(w, w.perf, t, split_phase=True)
+
+        def kill_decode(w):
+            sim = sims_d.pop(w.id)
+            lost = w.ongoing + w.new_batch + sim.preempted
+            w.ongoing.clear()
+            w.new_batch.clear()
+            w.mark_dirty()
+            return lost
+
+        pool_d = ManagedPool(
+            d_spec, scfg_d, pol_d, cfg.heartbeat, rng,
+            new_worker=new_decode, on_spawn=spawn_decode,
+            on_kill=kill_decode, load=lambda w: w.batch_size,
+            idle=lambda w: (not w.ongoing and not w.new_batch
+                            and not sims_d[w.id].preempted),
+            sims=sims_d, spot_spec=spot_d, notice_s=notice, name="decode")
+        prefill = ManagedSide(pool_p, p_spec)
+        decode = ManagedSide(pool_d, d_spec)
+        scaling_label = getattr(pol_d, "name", type(pol_d).__name__)
+
+    topo = DisaggTopology(sc.slo, cfg, prefill, decode, rng,
+                          predictor=sc.predictor, observer=sc.observer)
+    trace = sc.materialize()
+    trace = run_heartbeat_loop(
+        trace, cfg.heartbeat, topo.admit, topo.step, topo.drained,
+        events=_merge_side_events(market), fire=topo.fire)
+
+    rep = RunReport(topology="disaggregated", scaling=scaling_label,
+                    **_percentiles(topo.finished, len(trace), sc.slo))
+    rep.mean_transfer = float(np.mean(topo.transfers)) if topo.transfers \
+        else 0.0
+    rep.kv_retransfers = topo.kv_retransfers
+    if isinstance(scaling, FixedScale):
+        rep.n_prefill = sum(k for _, k in p_pools)
+        rep.n_decode = sum(k for _, k in d_pools)
+        rep.peak_workers = rep.n_prefill + rep.n_decode
+        rep.gpu_cost = pool_cost(p_pools) + pool_cost(d_pools)
+        p_label = ",".join(f"{s.name}x{k}" for s, k in p_pools)
+        d_label = ",".join(f"{s.name}x{k}" for s, k in d_pools)
+        rep.pool_mix = f"p:{p_label}|d:{d_label}"
+    else:
+        rep.n_prefill = prefill.pool.peak
+        rep.n_decode = decode.pool.peak
+        rep.peak_workers = rep.n_prefill + rep.n_decode
+        rep.gpu_seconds = prefill.gpu_s + decode.gpu_s
+        rep.gpu_cost = rep.gpu_seconds
+        rep.spot_gpu_seconds = prefill.spot_gpu_s + decode.spot_gpu_s
+        rep.pool_mix = (f"p:{p_pools[0][0].name}~auto|"
+                        f"d:{d_pools[0][0].name}~auto")
+        rep.epochs = {"prefill": prefill.epochs, "decode": decode.epochs}
+    rep.preempted_workers = prefill.killed + decode.killed
+    rep.drained_ok = prefill.drained_ok + decode.drained_ok
+    rep.requeued = prefill.requeued + decode.requeued
+    return rep
+
+
+# ---- the two verbs -----------------------------------------------------------
+
+
+def run(scenario: Scenario, seed: Optional[int] = None) -> RunReport:
+    """Execute one scenario and return its :class:`RunReport`.
+
+    ``seed`` overrides ``scenario.seed`` (placement tie-breaking and reclaim
+    victim choice). A callable workload is materialized fresh per call; a
+    concrete trace is simulated in place (its requests carry the outcome),
+    exactly like the legacy entry points."""
+    s = seed if seed is not None else scenario.seed
+    if isinstance(scenario.topology, Colocated):
+        return _run_colocated(scenario, s)
+    if isinstance(scenario.topology, Disaggregated):
+        return _run_disagg(scenario, s)
+    raise TypeError(f"unknown topology {type(scenario.topology).__name__}")
+
+
+def optimize(scenario: Scenario, objective: str = "cost", *,
+             attain_target: float = 0.99, lo: int = 1, hi: int = 512,
+             fleet_fn: Optional[Callable[[int], Sequence[WorkerSpec]]] = None,
+             max_prefill: int = 8, hi_decode: int = 64,
+             prefill_pool_fn: Optional[Callable] = None,
+             decode_pool_fn: Optional[Callable] = None,
+             prefill_mix: Optional[Sequence[WorkerSpec]] = None,
+             decode_mix: Optional[Sequence[WorkerSpec]] = None,
+             ratio_grid: Sequence[float] = (0.0, 0.25, 0.5, 0.75, 1.0)
+             ) -> Plan:
+    """Search the cheapest fleet meeting ``attain_target`` for a FixedScale
+    scenario — one verb subsuming the legacy ``min_workers_for_slo`` (binary
+    search over the colocated worker count, with the plateau-infeasibility
+    diagnosis) and ``min_cost_disagg`` (the joint (n_prefill, n_decode)
+    frontier walk, including heterogeneous pool fns and the ratio search).
+
+    The workload is materialized ONCE — a trace factory is evaluated a
+    single time and every candidate replays a clone of the same request
+    list (``workload.clone_trace``), so the search compares fleets on the
+    same arrivals instead of implicitly re-sampling per candidate.
+
+    ``fleet_fn(n)`` (colocated) maps a worker count to a heterogeneous
+    fleet; ``prefill_pool_fn``/``decode_pool_fn``/``prefill_mix``/
+    ``decode_mix``/``ratio_grid`` (disaggregated) are the pool-mix hooks of
+    the legacy frontier."""
+    if objective != "cost":
+        raise ValueError(f"unsupported objective {objective!r} (only 'cost')")
+    if not isinstance(scenario.scaling, FixedScale):
+        raise ValueError("optimize() sizes FixedScale scenarios; an "
+                         "autoscaled scenario already owns its worker count "
+                         "— run() it instead")
+    template = scenario.materialize()
+    if isinstance(scenario.topology, Colocated):
+        return _optimize_colocated(scenario, template, attain_target, lo, hi,
+                                   fleet_fn)
+    return _optimize_disagg(scenario, template, attain_target, max_prefill,
+                            hi_decode, prefill_pool_fn, decode_pool_fn,
+                            prefill_mix, decode_mix, ratio_grid)
+
+
+def _optimize_colocated(scenario: Scenario, template, attain_target: float,
+                        lo: int, hi: int, fleet_fn) -> Plan:
+    pools = scenario.fleet.for_role("serve")
+    if not pools:
+        raise ValueError("optimize needs a fleet pool to size")
+    base_spec = pools[0].spec
+    reports: Dict[int, RunReport] = {}
+    evals = [0]
+    attain_hist: List[Tuple[int, float]] = []
+
+    def scenario_for(n: int) -> Scenario:
+        if fleet_fn is not None:
+            fleet = FleetSpec([PoolSpec(s, 1) for s in fleet_fn(n)])
+        else:
+            fleet = FleetSpec([PoolSpec(base_spec, n)])
+        return dataclasses.replace(scenario, workload=clone_trace(template),
+                                   fleet=fleet, scaling=FixedScale())
+
+    def ok(n: int) -> bool:
+        rep = run(scenario_for(n))
+        evals[0] += 1
+        reports[n] = rep
+        attain_hist.append((n, rep.attainment))
+        return rep.attainment >= attain_target and rep.finished == rep.total
+
+    escalations = 0
+    while not ok(hi):
+        # plateau detection: if doubling workers stops improving attainment,
+        # the residual violations are scale-invariant (e.g. prediction-error
+        # preemption tails) — the target is infeasible, not under-provisioned
+        if len(attain_hist) >= 2 and \
+                attain_hist[-1][1] <= attain_hist[-2][1] + 1e-3:
+            raise RuntimeError(
+                f"attainment plateaus at {attain_hist[-1][1]:.3f} < "
+                f"{attain_target} (scale-invariant violations)")
+        hi *= 2
+        escalations += 1
+        if hi > 8192 or escalations > 6:
+            raise RuntimeError("workload cannot meet SLO at any scale")
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if ok(mid):
+            hi = mid
+        else:
+            lo = mid + 1
+    rep = reports.get(lo)
+    if rep is None:                     # lo was proven by its neighbors only
+        rep = run(scenario_for(lo))
+        evals[0] += 1
+    return Plan(objective="cost", scenario=scenario_for(lo), report=rep,
+                n_workers=lo, cost=rep.gpu_cost, evals=evals[0])
+
+
+def _optimize_disagg(scenario: Scenario, template, attain_target: float,
+                     max_prefill: int, hi_decode: int, prefill_pool_fn,
+                     decode_pool_fn, prefill_mix, decode_mix,
+                     ratio_grid) -> Plan:
+    p_specs = scenario.fleet.for_role("prefill")
+    d_specs = scenario.fleet.for_role("decode")
+    prefill_spec = p_specs[0].spec if p_specs else None
+    decode_spec = d_specs[0].spec if d_specs else None
+    evals = [0]
+    # id(report) -> (report, pools): the stored report reference keeps the
+    # object alive, so the id key can never be recycled by a later eval
+    winners: Dict[int, Tuple] = {}
+
+    def run_pools(pp, dp) -> RunReport:
+        fleet = FleetSpec([PoolSpec(s, k, role="prefill") for s, k in pp]
+                          + [PoolSpec(s, k, role="decode") for s, k in dp])
+        sc = dataclasses.replace(scenario, workload=clone_trace(template),
+                                 fleet=fleet, scaling=FixedScale())
+        evals[0] += 1
+        rep = run(sc)
+        winners[id(rep)] = (rep, pp, dp)
+        return rep
+
+    def attains(rep: RunReport) -> bool:
+        return rep.attainment >= attain_target and rep.finished == rep.total
+
+    def frontier(pf, df, best: Optional[RunReport]) -> Optional[RunReport]:
+        min_decode_cost = pool_cost(df(1))
+        for n_p in range(1, max_prefill + 1):
+            if best is not None and \
+                    pool_cost(pf(n_p)) + min_decode_cost >= best.gpu_cost:
+                break                  # every remaining point costs more
+            lo, hi = 1, hi_decode
+            res_hi = run_pools(pf(n_p), df(hi))
+            if not attains(res_hi):
+                continue               # prefill pool too small at any scale
+            best_np = res_hi
+            while lo < hi:
+                mid = (lo + hi) // 2
+                res = run_pools(pf(n_p), df(mid))
+                if attains(res):
+                    best_np, hi = res, mid
+                else:
+                    lo = mid + 1
+            if best is None or best_np.gpu_cost < best.gpu_cost:
+                best = best_np
+        return best
+
+    best: Optional[RunReport] = None
+    if prefill_mix is not None or decode_mix is not None:
+        pmix = list(prefill_mix) if prefill_mix is not None \
+            else [prefill_spec]
+        dmix = list(decode_mix) if decode_mix is not None else [decode_spec]
+        if any(s is None for s in pmix + dmix):
+            raise ValueError("mix search needs specs on both sides "
+                             "(a spec list or a fleet pool per role)")
+        p_ratios = tuple(ratio_grid) if len(pmix) == 2 else (1.0,)
+        d_ratios = tuple(ratio_grid) if len(dmix) == 2 else (1.0,)
+        for rp in p_ratios:
+            for rd in d_ratios:
+                best = frontier(ratio_pool_fn(pmix, rp),
+                                ratio_pool_fn(dmix, rd), best)
+    else:
+        if prefill_pool_fn is None and prefill_spec is None:
+            raise ValueError("optimize needs prefill/decode fleet pools or "
+                             "pool fns")
+        pf = prefill_pool_fn or (lambda n: [(prefill_spec, n)])
+        df = decode_pool_fn or (lambda n: [(decode_spec, n)])
+        best = frontier(pf, df, None)
+
+    if best is None:
+        return Plan(objective="cost", scenario=None, report=None,
+                    evals=evals[0])
+    _, pp, dp = winners[id(best)]
+    fleet = FleetSpec([PoolSpec(s, k, role="prefill") for s, k in pp]
+                      + [PoolSpec(s, k, role="decode") for s, k in dp])
+    win = dataclasses.replace(scenario, fleet=fleet, scaling=FixedScale())
+    return Plan(objective="cost", scenario=win, report=best,
+                n_workers=best.n_prefill + best.n_decode,
+                cost=best.gpu_cost, evals=evals[0])
+
+
+__all__ = [
+    "Colocated", "Disaggregated", "FixedScale", "FleetSpec", "Forecast",
+    "Plan", "PolicyScale", "PoolSpec", "Reactive", "RunReport", "Scenario",
+    "SpotMarket", "optimize", "run",
+]

@@ -33,16 +33,13 @@ dimension (the cheapest (ratio_p, ratio_d, n_p, n_d) point wins).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
-from repro.core.placement import (PlacementConfig, WorkerState,
-                                  best_fit_place, jsq_place)
+from repro.core.placement import WorkerState, best_fit_place, jsq_place
 from repro.core.request import ReqState, Request
-from repro.core.slo import SLO, slo_attainment
+from repro.core.slo import SLO
 from repro.core.worker_config import WorkerSpec
-from repro.serving.simulator import SimWorker, run_heartbeat_loop
 
 # One pool type: (worker spec, number of workers of that type).
 Pool = Tuple[WorkerSpec, int]
@@ -63,6 +60,16 @@ class DisaggConfig:
     kv_transfer_bw: float = 64e9       # bytes/s prefill->decode interconnect
     kv_transfer_lat: float = 2e-3      # fixed per-handoff latency, s
     seed: int = 0
+    # Prefill-pool routing. "packed" is the legacy Algorithm-1 bin order
+    # (fullest feasible worker first) — it ignores the worker's *clock*, so
+    # at high rates every tie routes to the first worker whose just-run
+    # batch left pending_tokens == 0 while its clock sits a whole batch
+    # ahead, a scale-invariant TTFT tail the deprecation shims must keep
+    # reproducing. "earliest" ranks by estimated completion (clock backlog
+    # + queued + candidate prefill) and admits only when that estimate
+    # meets the TTFT budget — what the autoscaled disaggregated scenarios
+    # use, since it makes added capacity actually absorb the tail.
+    prefill_router: str = "packed"     # packed | earliest
 
 
 def prefill_affinity(spec: WorkerSpec, l_in: int) -> float:
@@ -86,7 +93,13 @@ class PrefillSimWorker:
     Admission is constraint (c) alone — the pending prompt tokens plus the
     candidate must prefill within the TTFT budget (Eq. 2). Queued prompts are
     batched once per heartbeat, exactly like the colocated simulator's
-    prefill iterations."""
+    prefill iterations.
+
+    All token accounting is in ``r.context`` (= l_in + l_out) rather than
+    ``l_in``: identical for a fresh request (l_out == 0 until prefill stamps
+    its first token), but a spot-reclaim re-entrant from a dead decode
+    worker re-prefills its prompt AND the tokens generated so far — the
+    KV-loss recovery cost the asymmetric-hazard scenarios measure."""
 
     def __init__(self, wid: int, spec: WorkerSpec, slo: SLO):
         self.id = wid
@@ -97,31 +110,39 @@ class PrefillSimWorker:
         self.queue: List[Request] = []
         self.pending_tokens = 0
         self.iters = 0
+        self.draining = False          # notice window / scale-down drain
 
     def feasible(self, r: Request) -> bool:
-        return float(self.perf.prefill(self.pending_tokens + r.l_in)) \
+        return float(self.perf.prefill(self.pending_tokens + r.context)) \
             <= self.slo.ttft
 
     def place(self, r: Request) -> None:
         r.worker = self.id
         r.state = ReqState.PLACED
         self.queue.append(r)
-        self.pending_tokens += r.l_in
+        self.pending_tokens += r.context
 
     def advance_to(self, t_end: float, t_start: float,
-                   done: List[Request]) -> None:
+                   done: List[Tuple[Request, float]]) -> None:
+        """Run whole-queue prefill batches until the clock passes ``t_end``;
+        ``done`` collects ``(request, completion_time)`` pairs. The explicit
+        completion time matters for decode-reclaim re-entrants: their
+        ``t_first_token`` is the *original* pre-reclaim stamp, so the KV
+        re-transfer must be anchored to when this re-prefill actually
+        finished (for fresh requests the two are the same instant)."""
         if self.queue:
             self.t = max(self.t, t_start)
         while self.queue and self.t < t_end:
             batch, self.queue = self.queue, []
-            dur = float(self.perf.prefill(sum(r.l_in for r in batch)))
+            dur = float(self.perf.prefill(sum(r.context for r in batch)))
             self.t += dur
             self.iters += 1
             for r in batch:
-                self.pending_tokens -= r.l_in
-                r.t_first_token = self.t     # first token comes from prefill
-                r.l_out = 1
-                done.append(r)
+                self.pending_tokens -= r.context
+                if r.t_first_token is None:
+                    r.t_first_token = self.t   # first token is prefill's
+                    r.l_out = 1
+                done.append((r, self.t))
         if not self.queue:
             self.t = max(self.t, t_end)
 
@@ -168,6 +189,443 @@ def _mix_label(prefill_pools: Sequence[Pool],
     return f"p:{p}|d:{d}"
 
 
+# ---- topology sides ----------------------------------------------------------
+# A "side" is one half of the disaggregated pipeline: its worker groups (for
+# the affine router), a lifecycle (static or ManagedPool-scaled), and the
+# market-reclaim handler. The topology below drives either kind through the
+# same step sequence.
+
+class FixedPrefillSide:
+    """Static prefill pool groups. A spot market may reclaim spot workers
+    out of the fixed pool (not replaced): instant kill requeues the queued
+    prompts (nearly free — no KV existed), a notice window drains first."""
+
+    def __init__(self, pools: List[Tuple[WorkerSpec, List[PrefillSimWorker]]],
+                 rng=None, notice_s: float = 0.0):
+        self.pools = pools
+        self.rng = rng
+        self.notice_s = notice_s
+        self.condemned: Dict[int, float] = {}
+        self.killed = 0
+        self.drained_ok = 0
+        self.requeued = 0
+        self.gpu_s = 0.0
+        self.spot_gpu_s = 0.0
+        self.epochs: List = []
+
+    def groups(self):
+        return self.pools
+
+    def active(self) -> List[PrefillSimWorker]:
+        return [w for _, g in self.pools for w in g]
+
+    def note_arrival(self) -> None:
+        pass
+
+    def begin_beat(self, topo, t: float) -> None:
+        if self.condemned:
+            topo.requeue(self._reap(t), side="prefill")
+
+    def end_beat(self, topo, t: float, t_next: float) -> None:
+        pass
+
+    def on_reclaim(self, t: float, ev) -> List[Request]:
+        from repro.serving.forecast import mark_requeue
+        pool = [w for w in self.active() if w.spec.is_spot
+                and w.id not in self.condemned]
+        if not pool:
+            return []
+        n_kill = min(max(int(math.ceil(ev.frac * len(pool))), 1), len(pool))
+        victims = self.rng.choice(len(pool), size=n_kill, replace=False)
+        lost_all: List[Request] = []
+        for vi in victims:
+            w = pool[vi]
+            if self.notice_s > 0.0:
+                w.draining = True
+                self.condemned[w.id] = t + self.notice_s
+            else:
+                lost_all += self._kill(w, t, mark_requeue)
+        return lost_all
+
+    def _kill(self, w: PrefillSimWorker, t: float, mark) -> List[Request]:
+        for _, g in self.pools:
+            if w in g:
+                g.remove(w)
+                break
+        self.condemned.pop(w.id, None)
+        lost = list(w.queue)
+        w.queue.clear()
+        w.pending_tokens = 0
+        for r in lost:
+            mark(r, t)
+        self.killed += 1
+        self.requeued += len(lost)
+        return lost
+
+    def _reap(self, t: float) -> List[Request]:
+        from repro.serving.forecast import mark_requeue
+        lost: List[Request] = []
+        for wid, deadline in list(self.condemned.items()):
+            w = next((x for x in self.active() if x.id == wid), None)
+            if w is None:
+                self.condemned.pop(wid)
+                continue
+            if not w.queue:              # drained inside the notice window
+                for _, g in self.pools:
+                    if w in g:
+                        g.remove(w)
+                        break
+                self.condemned.pop(wid)
+                self.drained_ok += 1
+            elif t >= deadline:
+                lost += self._kill(w, t, mark_requeue)
+        return lost
+
+
+class FixedDecodeSide:
+    """Static decode pool groups (split-phase WorkerStates + SimWorkers).
+    Market reclaims lose the victims' KV: requests requeue to the *prefill*
+    queue and pay a full context re-prefill plus the KV re-transfer."""
+
+    def __init__(self, pools: List[Tuple[WorkerSpec, List]],
+                 sims: Dict, rng=None, notice_s: float = 0.0):
+        self.pools = pools
+        self.sims = sims
+        self.rng = rng
+        self.notice_s = notice_s
+        self.condemned: Dict[int, float] = {}
+        self.killed = 0
+        self.drained_ok = 0
+        self.requeued = 0
+        self.gpu_s = 0.0
+        self.spot_gpu_s = 0.0
+        self.epochs: List = []
+
+    def groups(self):
+        return self.pools
+
+    def active(self) -> List:
+        return [w for _, g in self.pools for w in g]
+
+    def note_arrival(self) -> None:
+        pass
+
+    def begin_beat(self, topo, t: float) -> None:
+        if self.condemned:
+            topo.requeue(self._reap(t), side="decode")
+
+    def end_beat(self, topo, t: float, t_next: float) -> None:
+        pass
+
+    def on_reclaim(self, t: float, ev) -> List[Request]:
+        pool = [w for w in self.active() if w.spec.is_spot
+                and w.id not in self.condemned]
+        if not pool:
+            return []
+        n_kill = min(max(int(math.ceil(ev.frac * len(pool))), 1), len(pool))
+        victims = self.rng.choice(len(pool), size=n_kill, replace=False)
+        lost_all: List[Request] = []
+        for vi in victims:
+            w = pool[vi]
+            if self.notice_s > 0.0:
+                w.draining = True       # best-fit/JSQ skip draining workers
+                self.condemned[w.id] = t + self.notice_s
+            else:
+                lost_all += self._kill(w, t)
+        return lost_all
+
+    def _kill(self, w, t: float) -> List[Request]:
+        from repro.serving.forecast import mark_kv_loss
+        for _, g in self.pools:
+            if w in g:
+                g.remove(w)
+                break
+        self.condemned.pop(w.id, None)
+        sim = self.sims.pop(w.id, None)
+        lost = w.ongoing + w.new_batch + (sim.preempted if sim else [])
+        for r in lost:
+            mark_kv_loss(r, t)
+        w.ongoing.clear()
+        w.new_batch.clear()
+        w.mark_dirty()
+        self.killed += 1
+        self.requeued += len(lost)
+        return lost
+
+    def _reap(self, t: float) -> List[Request]:
+        lost: List[Request] = []
+        for wid, deadline in list(self.condemned.items()):
+            w = next((x for x in self.active() if x.id == wid), None)
+            if w is None:
+                self.condemned.pop(wid)
+                continue
+            sim = self.sims.get(wid)
+            idle = not w.ongoing and not w.new_batch \
+                and not (sim and sim.preempted)
+            if idle:
+                for _, g in self.pools:
+                    if w in g:
+                        g.remove(w)
+                        break
+                self.sims.pop(wid, None)
+                self.condemned.pop(wid)
+                self.drained_ok += 1
+            elif t >= deadline:
+                lost += self._kill(w, t)
+        return lost
+
+
+class ManagedSide:
+    """Adapter presenting a ``forecast.ManagedPool`` as one routed pool
+    group of a disaggregated side — the autoscaled half of the disagg x
+    scaling x spot matrix."""
+
+    def __init__(self, pool, spec: WorkerSpec):
+        self.pool = pool
+        self.spec = spec
+        self.sims = pool.sims
+
+    def groups(self):
+        return [(self.spec, self.pool.online)]
+
+    def active(self) -> List:
+        return self.pool.active()
+
+    def note_arrival(self) -> None:
+        self.pool.note_arrival()
+
+    def begin_beat(self, topo, t: float) -> None:
+        self.pool.begin_beat(topo, t)
+
+    def end_beat(self, topo, t: float, t_next: float) -> None:
+        self.pool.end_beat(topo, t, t_next)
+
+    def on_reclaim(self, t: float, ev) -> List[Request]:
+        return self.pool.on_reclaim(t, ev)
+
+    @property
+    def killed(self):
+        return self.pool.killed
+
+    @property
+    def drained_ok(self):
+        return self.pool.drained_ok
+
+    @property
+    def requeued(self):
+        return self.pool.requeued
+
+    @property
+    def gpu_s(self):
+        return self.pool.gpu_s
+
+    @property
+    def spot_gpu_s(self):
+        return self.pool.spot_gpu_s
+
+    @property
+    def epochs(self):
+        return self.pool.epochs
+
+
+class DisaggTopology:
+    """Prefill pools -> modeled KV transfer -> decode pools, over pluggable
+    sides (static groups or ManagedPool-scaled), driven beat-by-beat by the
+    shared causal heartbeat loop."""
+
+    def __init__(self, slo: SLO, cfg: DisaggConfig, prefill, decode, rng,
+                 predictor=None, observer: Optional[Callable] = None):
+        self.slo = slo
+        self.cfg = cfg
+        self.prefill = prefill
+        self.decode = decode
+        self.rng = rng
+        self.predictor = predictor
+        self.observer = observer
+        self.queued_p: List[Request] = []    # waiting for prefill admission
+        self.in_transfer: List[Tuple[float, Request]] = []
+        self.queued_d: List[Request] = []    # KV arrived, awaiting decode
+        self.finished: List[Request] = []
+        self.transfers: List[float] = []
+        self.kv_retransfers = 0              # re-entrant KV re-transfers
+        self._now = 0.0                      # beat start (earliest router)
+
+    def admit(self, r: Request) -> None:
+        r.l_pred = self.predictor.predict(r.l_in) if self.predictor \
+            else r.l_real
+        self.queued_p.append(r)
+        self.prefill.note_arrival()
+        self.decode.note_arrival()
+
+    def requeue(self, reqs: List[Request], side: str = "prefill") -> None:
+        # both sides' reclaim victims re-enter at the prefill queue: a
+        # decode victim lost its KV (full re-prefill + re-transfer), a
+        # prefill victim simply waits for another slot
+        self.queued_p.extend(reqs)
+
+    def backlog_len(self, side: str) -> int:
+        return len(self.queued_p) if side == "prefill" \
+            else len(self.queued_d)
+
+    def fire(self, t: float, ev) -> None:
+        side = self.decode if getattr(ev, "side", "decode") == "decode" \
+            else self.prefill
+        self.requeue(side.on_reclaim(t, getattr(ev, "ev", ev)))
+
+    def place_prefill(self, r: Request) -> Optional[PrefillSimWorker]:
+        if self.cfg.prefill_router == "earliest":
+            w = self._place_prefill_earliest(r)
+        else:
+            w = self._place_prefill_packed(r)
+        if w is None and r.l_out > 0:
+            # decode-reclaim re-entrant: its TTFT is already history, so the
+            # fresh-arrival admission budget cannot apply — a grown context
+            # that no longer prefills inside slo.ttft would otherwise be
+            # stranded in queued_p until the horizon. Recovery is
+            # best-effort: take the least-loaded worker and bill the stall
+            # against ATGT like every other recovery cost.
+            w = self._place_prefill_fallback(r)
+        return w
+
+    def _place_prefill_packed(self, r: Request) -> \
+            Optional[PrefillSimWorker]:
+        # rank pool types by the affine routing score, then best-fit within
+        # the pool (fullest feasible worker first, Algorithm 1's bin order);
+        # fall through to the next pool when nothing in this one is feasible
+        for spec, group in sorted(self.prefill.groups(),
+                                  key=lambda p: prefill_affinity(p[0],
+                                                                 r.l_in)):
+            ranked = sorted((w for w in group if not w.draining),
+                            key=lambda w: w.pending_tokens, reverse=True)
+            for w in ranked:
+                if w.feasible(r):
+                    w.place(r)
+                    return w
+        return None
+
+    def _place_prefill_fallback(self, r: Request) -> \
+            Optional[PrefillSimWorker]:
+        best, _ = self._earliest_scan(r)
+        if best is not None:
+            best.place(r)
+        return best
+
+    def _earliest_scan(self, r: Request) -> \
+            Tuple[Optional[PrefillSimWorker], float]:
+        """The worker with the earliest estimated completion for this
+        prompt — clock backlog past 'now' plus the prefill of
+        (pending + candidate) tokens — and that estimate."""
+        now = self._now
+        best = None
+        best_done = float("inf")
+        for spec, group in self.prefill.groups():
+            for w in group:
+                if w.draining:
+                    continue
+                backlog = max(w.t - now, 0.0)
+                done = backlog + float(w.perf.prefill(w.pending_tokens
+                                                      + r.context))
+                if done < best_done:
+                    best, best_done = w, done
+        return best, best_done
+
+    def _place_prefill_earliest(self, r: Request) -> \
+            Optional[PrefillSimWorker]:
+        """Wait-aware prefill routing: admit on the earliest-completion
+        worker if its estimate still meets the TTFT budget. Unlike the
+        legacy packed order this sees a worker whose just-run batch left
+        it 'empty' but whose clock overshot the beat, so ties spread
+        instead of piling onto one bin."""
+        best, best_done = self._earliest_scan(r)
+        if best is not None and best_done <= self.slo.ttft:
+            best.place(r)
+            return best
+        return None
+
+    def place_decode(self, r: Request) -> Optional[WorkerState]:
+        for spec, group in sorted(self.decode.groups(),
+                                  key=lambda p: decode_affinity(
+                                      p[0], r, self.cfg.gamma)):
+            if self.cfg.policy == "aladdin":
+                w = best_fit_place(group, r, allow_new=False)
+            else:
+                w = jsq_place(group, r, allow_new=False)
+            if w is not None:
+                return w
+        return None
+
+    def step(self, t: float, t_next: float, arrived: int) -> None:
+        cfg = self.cfg
+        self._now = t
+        self.prefill.begin_beat(self, t)
+        self.decode.begin_beat(self, t)
+        # prefill placement: constraint (c) only, router picks the pool
+        still: List[Request] = []
+        for r in self.queued_p:
+            if self.place_prefill(r) is None:
+                still.append(r)
+        self.queued_p = still
+        # advance the prefill pools; completed prefills enter KV transfer.
+        # A re-entrant (t_preempted armed: its decode worker was reclaimed)
+        # moves its whole context — prompt plus generated tokens — through
+        # the interconnect again; that is the KV re-transfer the asymmetric
+        # spot hazards price in.
+        for w in self.prefill.active():
+            done: List[Tuple[Request, float]] = []
+            w.advance_to(t_next, t, done)
+            for r, t_done in done:
+                retransfer = r.t_preempted is not None
+                tok = r.l_in + r.l_out if retransfer else r.l_in
+                dt = cfg.kv_transfer_lat \
+                    + tok * w.spec.kv_bytes_per_token \
+                    / max(cfg.kv_transfer_bw, 1.0)
+                self.transfers.append(dt)
+                if retransfer:
+                    self.kv_retransfers += 1
+                # anchor the transfer to the actual prefill completion: for
+                # a fresh request t_done == t_first_token (bit-for-bit with
+                # the legacy max(t_first_token, t)), for a re-entrant the
+                # stale first-token stamp would let the re-transfer start a
+                # whole re-prefill early
+                self.in_transfer.append((max(t_done, t) + dt, r))
+        # KV handoffs completed by this boundary join the decode queue —
+        # causally: a handoff ready inside (t, t_next) must wait for the
+        # next boundary, else its decode would start before the KV arrived
+        self.in_transfer.sort(key=lambda e: e[0])
+        while self.in_transfer and self.in_transfer[0][0] <= t:
+            self.queued_d.append(self.in_transfer.pop(0)[1])
+        # decode placement: split-phase constraints (b)/(e), router-ordered
+        still = []
+        for r in self.queued_d:
+            w = self.place_decode(r)
+            if w is None:
+                still.append(r)
+            else:
+                r.state = ReqState.PLACED
+        self.queued_d = still
+        for w in self.decode.active():
+            self.decode.sims[w.id].advance_to(t_next, self.finished,
+                                              t_start=t)
+        self.prefill.end_beat(self, t, t_next)
+        self.decode.end_beat(self, t, t_next)
+        if self.observer is not None:
+            self.observer(t=t_next, pool_p=self.prefill.active(),
+                          states_d=self.decode.active(),
+                          queued_p=self.queued_p,
+                          in_transfer=self.in_transfer,
+                          queued_d=self.queued_d, finished=self.finished,
+                          arrived=arrived)
+
+    def drained(self) -> bool:
+        return (not self.queued_p and not self.queued_d
+                and not self.in_transfer
+                and all(not w.queue for w in self.prefill.active())
+                and all(not w.ongoing and not w.new_batch
+                        for w in self.decode.active())
+                and all(not s.preempted
+                        for s in self.decode.sims.values()))
+
+
 def simulate_disaggregated(trace: Sequence[Request], slo: SLO,
                            cfg: DisaggConfig,
                            prefill_spec: Optional[WorkerSpec] = None,
@@ -183,138 +641,28 @@ def simulate_disaggregated(trace: Sequence[Request], slo: SLO,
     Homogeneous form: ``(prefill_spec, decode_spec, n_prefill, n_decode)``.
     Heterogeneous form: ``prefill_pools`` / ``decode_pools`` as lists of
     ``(WorkerSpec, count)``; the affine router picks the pool per request,
-    falling through to the next-ranked pool when no worker is feasible."""
+    falling through to the next-ranked pool when no worker is feasible.
+
+    .. deprecated:: delegate to :func:`repro.serving.api.run` — this shim
+       builds the equivalent declarative ``Scenario`` and reproduces the
+       pre-Scenario metrics bit-for-bit (pinned by tests/test_shim_goldens).
+    """
+    from repro.serving import api
+
     p_pools = _as_pools(prefill_spec, n_prefill, prefill_pools)
     d_pools = _as_pools(decode_spec, n_decode, decode_pools)
-
-    # prefill pools: one worker group per type, ids dense from 1
-    pools_p: List[Tuple[WorkerSpec, List[PrefillSimWorker]]] = []
-    wid = 0
-    for spec, k in p_pools:
-        group = []
-        for _ in range(k):
-            wid += 1
-            group.append(PrefillSimWorker(wid, spec, slo))
-        pools_p.append((spec, group))
-    pool_p = [w for _, group in pools_p for w in group]
-
-    # decode pools: split-phase WorkerStates per type, ids from 1000
-    pools_d: List[Tuple[WorkerSpec, List[WorkerState]]] = []
-    sims_d: Dict[int, SimWorker] = {}
-    wid = 1000
-    for spec, k in d_pools:
-        dcfg = PlacementConfig(gamma=cfg.gamma, theta=cfg.theta,
-                               kv_capacity=spec.kv_capacity,
-                               max_batch=spec.max_batch, split_phase=True)
-        group = []
-        for _ in range(k):
-            w = WorkerState(wid, dcfg, spec.perf, slo)
-            w.spec = spec
-            group.append(w)
-            sims_d[w.id] = SimWorker(w, w.perf, 0.0, split_phase=True)
-            wid += 1
-        pools_d.append((spec, group))
-    states_d = [w for _, group in pools_d for w in group]
-
-    queued_p: List[Request] = []       # waiting for prefill-pool admission
-    in_transfer: List[Tuple[float, Request]] = []   # (ready time, request)
-    queued_d: List[Request] = []       # KV arrived, waiting for decode slot
-    finished: List[Request] = []
-    transfers: List[float] = []
-
-    def admit(r: Request) -> None:
-        r.l_pred = predictor.predict(r.l_in) if predictor else r.l_real
-        queued_p.append(r)
-
-    def place_prefill(r: Request) -> Optional[PrefillSimWorker]:
-        # rank pool types by the affine routing score, then best-fit within
-        # the pool (fullest feasible worker first, Algorithm 1's bin order);
-        # fall through to the next pool when nothing in this one is feasible
-        for spec, group in sorted(pools_p,
-                                  key=lambda p: prefill_affinity(p[0],
-                                                                 r.l_in)):
-            ranked = sorted(group, key=lambda w: w.pending_tokens,
-                            reverse=True)
-            for w in ranked:
-                if w.feasible(r):
-                    w.place(r)
-                    return w
-        return None
-
-    def place_decode(r: Request) -> Optional[WorkerState]:
-        for spec, group in sorted(pools_d,
-                                  key=lambda p: decode_affinity(p[0], r,
-                                                                cfg.gamma)):
-            if cfg.policy == "aladdin":
-                w = best_fit_place(group, r, allow_new=False)
-            else:
-                w = jsq_place(group, r, allow_new=False)
-            if w is not None:
-                return w
-        return None
-
-    def step(t: float, t_next: float, arrived: int) -> None:
-        nonlocal queued_p, queued_d
-        # prefill placement: constraint (c) only, router picks the pool
-        still: List[Request] = []
-        for r in queued_p:
-            if place_prefill(r) is None:
-                still.append(r)
-        queued_p = still
-        # advance the prefill pools; completed prefills enter KV transfer
-        for spec, group in pools_p:
-            done: List[Request] = []
-            for w in group:
-                w.advance_to(t_next, t, done)
-            for r in done:
-                dt = cfg.kv_transfer_lat \
-                    + r.l_in * spec.kv_bytes_per_token \
-                    / max(cfg.kv_transfer_bw, 1.0)
-                transfers.append(dt)
-                in_transfer.append((max(r.t_first_token, t) + dt, r))
-        # KV handoffs completed by this boundary join the decode queue —
-        # causally: a handoff ready inside (t, t_next) must wait for the
-        # next boundary, else its decode would start before the KV arrived
-        in_transfer.sort(key=lambda e: e[0])
-        while in_transfer and in_transfer[0][0] <= t:
-            queued_d.append(in_transfer.pop(0)[1])
-        # decode placement: split-phase constraints (b)/(e), router-ordered
-        still = []
-        for r in queued_d:
-            w = place_decode(r)
-            if w is None:
-                still.append(r)
-            else:
-                r.state = ReqState.PLACED
-        queued_d = still
-        for w in states_d:
-            sims_d[w.id].advance_to(t_next, finished, t_start=t)
-        if observer is not None:
-            observer(t=t_next, pool_p=pool_p, states_d=states_d,
-                     queued_p=queued_p, in_transfer=in_transfer,
-                     queued_d=queued_d, finished=finished, arrived=arrived)
-
-    def drained() -> bool:
-        return (not queued_p and not queued_d and not in_transfer
-                and all(not w.queue for w in pool_p)
-                and all(not w.ongoing and not w.new_batch for w in states_d)
-                and all(not s.preempted for s in sims_d.values()))
-
-    trace = run_heartbeat_loop(trace, cfg.heartbeat, admit, step, drained)
-
-    atgts = [r.atgt() for r in finished if r.atgt() is not None]
-    ttfts = [r.ttft() for r in finished if r.ttft() is not None]
-    total = len(trace)
-    return DisaggResult(
-        n_prefill=sum(k for _, k in p_pools),
-        n_decode=sum(k for _, k in d_pools),
-        gpu_cost=pool_cost(p_pools) + pool_cost(d_pools),
-        attainment=slo_attainment(finished, total, slo),
-        p99_ttft=float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
-        p99_atgt=float(np.percentile(atgts, 99)) if atgts else float("nan"),
-        mean_transfer=float(np.mean(transfers)) if transfers else 0.0,
-        finished=len(finished), total=total,
-        pool_mix=_mix_label(p_pools, d_pools))
+    pools = [api.PoolSpec(s, k, role="prefill") for s, k in p_pools] \
+        + [api.PoolSpec(s, k, role="decode") for s, k in d_pools]
+    scenario = api.Scenario(
+        workload=trace, fleet=api.FleetSpec(pools), slo=slo,
+        topology=api.Disaggregated(heartbeat=cfg.heartbeat, policy=cfg.policy,
+                                   gamma=cfg.gamma, theta=cfg.theta,
+                                   kv_transfer_bw=cfg.kv_transfer_bw,
+                                   kv_transfer_lat=cfg.kv_transfer_lat,
+                                   prefill_router=cfg.prefill_router),
+        scaling=api.FixedScale(), predictor=predictor, observer=observer,
+        seed=cfg.seed)
+    return api.run(scenario).to_disagg_result()
 
 
 def ratio_pool_fn(specs: Sequence[WorkerSpec],
@@ -369,58 +717,31 @@ def min_cost_disagg(trace_fn, slo: SLO, cfg: DisaggConfig,
     the pool-type *ratio* jointly instead of fixing it: every ratio in
     ``ratio_grid`` (share of the first spec) is frontier-walked on both
     sides, sharing one best-so-far cost bound so expensive ratios are pruned
-    before their first simulation where possible."""
-    best: Optional[DisaggResult] = None
+    before their first simulation where possible.
 
-    def attains(res: DisaggResult) -> bool:
-        return res.attainment >= attain_target and res.finished == res.total
+    .. deprecated:: delegate to :func:`repro.serving.api.optimize`, which
+       subsumes this frontier walk (objective="cost" on a disaggregated
+       scenario)."""
+    from repro.serving import api
 
-    def frontier(pf: Callable[[int], Sequence[Pool]],
-                 df: Callable[[int], Sequence[Pool]],
-                 best: Optional[DisaggResult]) -> Optional[DisaggResult]:
-        min_decode_cost = pool_cost(df(1))
-
-        def run(n_p: int, n_d: int) -> DisaggResult:
-            return simulate_disaggregated(trace_fn(), slo, cfg,
-                                          predictor=predictor,
-                                          prefill_pools=pf(n_p),
-                                          decode_pools=df(n_d))
-
-        for n_p in range(1, max_prefill + 1):
-            if best is not None and \
-                    pool_cost(pf(n_p)) + min_decode_cost >= best.gpu_cost:
-                break                  # every remaining point costs more
-            lo, hi = 1, hi_decode
-            res_hi = run(n_p, hi)
-            if not attains(res_hi):
-                continue               # prefill pool too small at any scale
-            best_np = res_hi
-            while lo < hi:
-                mid = (lo + hi) // 2
-                res = run(n_p, mid)
-                if attains(res):
-                    best_np, hi = res, mid
-                else:
-                    lo = mid + 1
-            if best is None or best_np.gpu_cost < best.gpu_cost:
-                best = best_np
-        return best
-
-    if prefill_mix is not None or decode_mix is not None:
-        pmix = list(prefill_mix) if prefill_mix is not None \
-            else [prefill_spec]
-        dmix = list(decode_mix) if decode_mix is not None else [decode_spec]
-        if any(s is None for s in pmix + dmix):
-            raise ValueError("mix search needs specs on both sides "
-                             "(a spec list or the legacy spec argument)")
-        p_ratios = tuple(ratio_grid) if len(pmix) == 2 else (1.0,)
-        d_ratios = tuple(ratio_grid) if len(dmix) == 2 else (1.0,)
-        for rp in p_ratios:
-            for rd in d_ratios:
-                best = frontier(ratio_pool_fn(pmix, rp),
-                                ratio_pool_fn(dmix, rd), best)
-        return best
-
-    pf = prefill_pool_fn or (lambda n: [(prefill_spec, n)])
-    df = decode_pool_fn or (lambda n: [(decode_spec, n)])
-    return frontier(pf, df, None)
+    scenario = api.Scenario(
+        workload=trace_fn,
+        fleet=api.FleetSpec(
+            [api.PoolSpec(prefill_spec, 0, role="prefill"),
+             api.PoolSpec(decode_spec, 0, role="decode")]
+            if prefill_spec is not None and decode_spec is not None else []),
+        slo=slo,
+        topology=api.Disaggregated(heartbeat=cfg.heartbeat, policy=cfg.policy,
+                                   gamma=cfg.gamma, theta=cfg.theta,
+                                   kv_transfer_bw=cfg.kv_transfer_bw,
+                                   kv_transfer_lat=cfg.kv_transfer_lat,
+                                   prefill_router=cfg.prefill_router),
+        scaling=api.FixedScale(), predictor=predictor, seed=cfg.seed)
+    plan = api.optimize(scenario, objective="cost",
+                        attain_target=attain_target,
+                        max_prefill=max_prefill, hi_decode=hi_decode,
+                        prefill_pool_fn=prefill_pool_fn,
+                        decode_pool_fn=decode_pool_fn,
+                        prefill_mix=prefill_mix, decode_mix=decode_mix,
+                        ratio_grid=ratio_grid)
+    return plan.disagg_result

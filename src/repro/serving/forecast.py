@@ -41,17 +41,12 @@ import dataclasses
 import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
-from repro.core.placement import (PlacementConfig, WorkerState,
-                                  best_fit_place, jsq_place,
-                                  power_of_two_place)
 from repro.core.request import ReqState, Request
 from repro.core.scaling import (Autoscaler, AutoscalerConfig, SpotMixConfig,
                                 split_spot_mix)
-from repro.core.slo import SLO, slo_attainment
+from repro.core.slo import SLO
 from repro.core.worker_config import WorkerSpec
-from repro.serving.simulator import SimConfig, SimWorker, run_heartbeat_loop
+from repro.serving.simulator import SimConfig
 from repro.serving.workload import PreemptionEvent
 
 
@@ -125,6 +120,11 @@ class ScaleSimConfig:
     min_workers: int = 1
     max_workers: int = 512
     initial_workers: int = 1
+    # SLO head-room on every epoch target (kube-HPA-style utilization < 1):
+    # a disaggregated pipeline needs it because per-side queue pressure
+    # under-measures SLO pressure — TTFT burns in the arrival->prefill hop
+    # and ATGT in the handoff->decode hop before any placement fails.
+    headroom: float = 1.0
 
 
 class ReactivePolicy:
@@ -135,12 +135,17 @@ class ReactivePolicy:
     name = "reactive"
 
     def __init__(self, scfg: ScaleSimConfig,
-                 autoscaler: Optional[Autoscaler] = None):
+                 autoscaler: Optional[Autoscaler] = None,
+                 spot_mix: Optional[SpotMixConfig] = None):
         self.scfg = scfg
         self.autoscaler = autoscaler or Autoscaler(AutoscalerConfig(
             heartbeat=scfg.interval, min_workers=scfg.min_workers,
             max_workers=scfg.max_workers))
         self._recent: List[tuple] = []      # (t, raw target) inside cooldown
+        # same exposure-horizon derivation as ForecastPolicy (policy-local
+        # copy; the caller's config object is never mutated)
+        self.spot_mix = None if spot_mix is None else dataclasses.replace(
+            spot_mix, horizon=scfg.provision_delay + scfg.interval)
 
     def target(self, t: float, rate: float, needed: int,
                queued: int) -> int:
@@ -153,6 +158,14 @@ class ReactivePolicy:
         self._recent = [x for x in self._recent
                         if x[0] >= t - self.scfg.cooldown]
         return max(tg for _, tg in self._recent)
+
+    def split(self, t: float, target: int) -> Tuple[int, int]:
+        """Price-class split: pure ``split_spot_mix`` economics (a reactive
+        policy has no seasonal trough to pin on-demand). Without a mix the
+        split is all-on-demand, which keeps the pre-spot behavior."""
+        if self.spot_mix is None:
+            return target, 0
+        return split_spot_mix(target, self.spot_mix)
 
 
 class ForecastPolicy:
@@ -245,14 +258,31 @@ class ForecastPolicy:
 
 @dataclasses.dataclass
 class SpotMarket:
-    """A preemptible capacity pool the autoscaled simulator may buy from:
-    the spot worker type (same hardware as the on-demand spec, discounted
-    ``price``, non-zero ``preempt_hazard``) plus the market's reclaim-event
-    trace (``workload.preemption_trace``). Each event kills a slice of the
-    spot workers alive at that instant — on-demand workers are never
-    touched."""
+    """A preemptible capacity pool the engine may buy from: the spot worker
+    type (same hardware as the on-demand spec, discounted ``price``, non-zero
+    ``preempt_hazard``) plus the market's reclaim-event trace
+    (``workload.preemption_trace``). Each event kills a slice of the spot
+    workers alive at that instant — on-demand workers are never touched.
+
+    ``notice_s`` models the preemption notice real clouds give (30-120 s):
+    a reclaimed worker drains — no new admissions, in-flight decode may
+    finish until the deadline — instead of dying instantly; whatever is
+    still running at the deadline is killed and requeued with the usual
+    KV-loss recovery cost. ``RunReport`` records ``drained_ok`` vs
+    ``killed``. ``notice_s=0`` (default) is the instant-kill behavior.
+
+    On a disaggregated topology ``spec``/``events`` drive the *decode* side
+    (a decode reclaim loses KV and pays a full re-prefill plus KV
+    re-transfer); ``prefill_spec``/``prefill_events`` describe the
+    prefill-side market, whose reclaims are nearly free (queued prompts just
+    re-queue) — which is why asymmetric hazards/discounts between the two
+    sides are worth modeling at all."""
     spec: WorkerSpec
     events: Sequence[PreemptionEvent] = dataclasses.field(
+        default_factory=list)
+    notice_s: float = 0.0
+    prefill_spec: Optional[WorkerSpec] = None
+    prefill_events: Sequence[PreemptionEvent] = dataclasses.field(
         default_factory=list)
 
 
@@ -289,6 +319,286 @@ class ScaleSimResult:
         return d
 
 
+def mark_kv_loss(r: Request, t: float) -> None:
+    """Default reclaim marking: the victim's KV is gone — the request
+    requeues keeping ``l_out`` and pays a full context re-prefill plus the
+    stall from the reclaim instant (settled by the simulator core)."""
+    r.state = ReqState.QUEUED
+    r.worker = None
+    r.t_preempted = t
+    r.preempt_count += 1
+
+
+def mark_requeue(r: Request, t: float) -> None:
+    """Prefill-side reclaim marking: no KV existed yet, so the only cost is
+    the extra queue wait — which TTFT already measures (no ``t_preempted``
+    stall is armed; the token stream has not started)."""
+    r.state = ReqState.QUEUED
+    r.worker = None
+    r.preempt_count += 1
+
+
+class ManagedPool:
+    """Policy-driven worker lifecycle extracted from the pre-Scenario
+    ``simulate_autoscaled``: boot delay (billed while booting), voluntary
+    draining on scale-down, retirement, price-class-aware booting, per-price
+    billing, market reclaims and the preemption-notice drain window.
+
+    Generic over the worker kind via adapter callables — ``new_worker(spec)``
+    builds one, ``on_spawn(w, t)`` arms its execution model, ``on_kill(w)``
+    strips and returns its in-flight requests, ``load(w)``/``idle(w)`` rank
+    drain victims and detect retirement, ``mark(r, t)`` stamps the recovery
+    cost class on reclaimed work — so the colocated tier and either side of
+    a disaggregated cluster scale through one state machine."""
+
+    def __init__(self, spec: WorkerSpec, scfg: ScaleSimConfig, policy,
+                 heartbeat: float, rng, *, new_worker, on_spawn, on_kill,
+                 load, idle, mark=mark_kv_loss, sims=None,
+                 spot_spec: Optional[WorkerSpec] = None,
+                 notice_s: float = 0.0, name: str = "serve"):
+        self.spec = spec
+        self.scfg = scfg
+        self.policy = policy
+        self.rng = rng
+        self.spot_spec = spot_spec
+        self.notice_s = notice_s
+        self.name = name
+        self._new_worker = new_worker
+        self._on_spawn = on_spawn
+        self._on_kill = on_kill
+        self._load = load
+        self._idle = idle
+        self._mark = mark
+        self.sims = sims if sims is not None else {}
+        self.factory = None                # managed pools never place-to-open
+        self.beats_per_epoch = max(int(round(scfg.interval / heartbeat)), 1)
+        self.online: List = []
+        self.draining: List = []
+        self.booting: List[List] = []      # [online_at, worker]
+        self.condemned: Dict[int, float] = {}    # wid -> notice deadline
+        self.epochs: List[EpochStat] = []
+        self.acc = {"gpu_s": 0.0, "spot_gpu_s": 0.0, "beat": 0,
+                    "arrivals": 0, "busy_peak": 0, "peak": 0, "killed": 0,
+                    "requeued": 0, "drained_ok": 0}
+        for _ in range(max(scfg.initial_workers, scfg.min_workers)):
+            w = self._new_worker(self.spec)
+            self.online.append(w)
+            self._on_spawn(w, 0.0)
+
+    # ---- accessors the topologies use ---------------------------------------
+    @property
+    def gpu_s(self) -> float:
+        return self.acc["gpu_s"]
+
+    @property
+    def spot_gpu_s(self) -> float:
+        return self.acc["spot_gpu_s"]
+
+    @property
+    def killed(self) -> int:
+        return self.acc["killed"]
+
+    @property
+    def drained_ok(self) -> int:
+        return self.acc["drained_ok"]
+
+    @property
+    def requeued(self) -> int:
+        return self.acc["requeued"]
+
+    @property
+    def peak(self) -> int:
+        return self.acc["peak"]
+
+    def note_arrival(self) -> None:
+        self.acc["arrivals"] += 1
+
+    def serving(self) -> List:
+        return self.online
+
+    def active(self) -> List:
+        return self.online + self.draining
+
+    # ---- per-beat lifecycle --------------------------------------------------
+    def begin_beat(self, topo, t: float) -> None:
+        # workers whose boot completed join the serving set
+        ready = [b for b in self.booting if b[0] <= t]
+        for b in ready:
+            self.booting.remove(b)
+            w = b[1]
+            self.online.append(w)
+            self._on_spawn(w, t)
+        if self.condemned:
+            topo.requeue(self.reap_condemned(t), side=self.name)
+
+    def end_beat(self, topo, t: float, t_next: float) -> None:
+        # retire drained workers (billing stops with this heartbeat); a
+        # condemned worker that got here finished inside its notice window
+        for w in list(self.draining):
+            if self._idle(w):
+                self.draining.remove(w)
+                if self.condemned.pop(w.id, None) is not None:
+                    self.acc["drained_ok"] += 1
+        busy = sum(1 for w in self.online if self._load(w) > 0)
+        self.acc["busy_peak"] = max(self.acc["busy_peak"], busy)
+        self.acc["peak"] = max(self.acc["peak"], len(self.online))
+        dt = t_next - t
+        billed = [w.spec for w in self.online] \
+            + [w.spec for w in self.draining] \
+            + [b[1].spec for b in self.booting]
+        self.acc["gpu_s"] += sum(s.gpu_cost for s in billed) * dt
+        self.acc["spot_gpu_s"] += sum(s.gpu_cost for s in billed
+                                      if s.is_spot) * dt
+        self.acc["beat"] += 1
+        if self.acc["beat"] % self.beats_per_epoch == 0:
+            n_queued = topo.backlog_len(self.name)
+            self._scale_epoch(t_next, busy, n_queued)
+
+    def _scale_epoch(self, t_next: float, busy: int, n_queued: int) -> None:
+        scfg = self.scfg
+        rate = self.acc["arrivals"] / scfg.interval
+        # workers needed = peak busy set, plus enough extra workers to
+        # absorb any placement backlog at the typical per-worker batch
+        if n_queued:
+            per_w = sum(self._load(w) for w in self.online) / max(busy, 1)
+            backlog = max(int(math.ceil(n_queued / max(per_w, 1.0))), 1)
+        else:
+            backlog = 0
+        needed = self.acc["busy_peak"] + backlog
+        t_epoch = t_next - scfg.interval
+        tgt = self.policy.target(t_epoch, rate, needed, n_queued)
+        if scfg.headroom != 1.0:
+            tgt = int(math.ceil(tgt * scfg.headroom))
+        tgt = max(tgt, busy, scfg.min_workers)
+        tgt = min(tgt, scfg.max_workers)
+        # price-class split: policies without one (or no spot market to buy
+        # from) run all-on-demand
+        split = getattr(self.policy, "split", None)
+        if self.spot_spec is not None and split is not None:
+            tgt_od, tgt_spot = split(t_epoch, tgt)
+            tgt_spot = min(tgt_spot, scfg.max_workers - tgt_od)
+        else:
+            tgt_od, tgt_spot = tgt, 0
+        self.apply_target(t_next, tgt_od, tgt_spot, bool(n_queued))
+        self.epochs.append(EpochStat(
+            t=t_epoch, rate=rate, needed=needed, target=tgt_od + tgt_spot,
+            online=len(self.online), target_spot=tgt_spot,
+            online_spot=sum(1 for w in self.online if w.spec.is_spot)))
+        self.acc["arrivals"] = 0
+        self.acc["busy_peak"] = 0
+
+    def apply_target(self, t: float, tgt_od: int, tgt_spot: int,
+                     has_backlog: bool) -> None:
+        target = tgt_od + tgt_spot
+        cur = len(self.online) + len(self.booting)
+        if target > cur:
+            want = target - cur
+            # reclaim draining workers first: they are warm, boot is free —
+            # but never one inside a preemption notice (the provider is
+            # taking it back regardless)
+            while want > 0 and self.draining:
+                cand = [w for w in self.draining
+                        if w.id not in self.condemned]
+                if not cand:
+                    break
+                w = cand[-1]
+                self.draining.remove(w)
+                self.online.append(w)
+                want -= 1
+            # boot composition: fill the spot deficit first (it is the
+            # cheaper capacity), the remainder on-demand
+            n_spot_cur = sum(1 for w in self.online if w.spec.is_spot) \
+                + sum(1 for b in self.booting if b[1].spec.is_spot)
+            want_spot = min(max(tgt_spot - n_spot_cur, 0), max(want, 0))
+            for i in range(want):
+                wspec = self.spot_spec \
+                    if self.spot_spec is not None and i < want_spot \
+                    else self.spec
+                self.booting.append([t + self.scfg.provision_delay,
+                                     self._new_worker(wspec)])
+        elif target < cur:
+            excess = cur - target
+            # cancel pending boots first (nothing running on them yet)
+            while excess > 0 and self.booting:
+                self.booting.pop()
+                excess -= 1
+            # then drain the emptiest online workers; never below the busy
+            # set — draining a loaded worker strands its queue time
+            victims = sorted(self.online, key=self._load)
+            for w in victims:
+                if excess <= 0 or len(self.online) <= self.scfg.min_workers:
+                    break
+                if self._load(w) > 0 and has_backlog:
+                    break             # backlog: keep every loaded worker
+                self.online.remove(w)
+                self.draining.append(w)
+                excess -= 1
+
+    # ---- market reclaims -----------------------------------------------------
+    def on_reclaim(self, t: float, ev: PreemptionEvent) -> List[Request]:
+        """A market reclaim: take ceil(frac * spot pool) spot workers —
+        online, draining or still booting. Without a notice window the
+        victims die instantly and their in-flight work requeues with the
+        recovery cost armed; with one they are condemned to drain until
+        ``t + notice_s``. Returns the requests knocked back into the queue."""
+        # workers already condemned by an earlier event are not fresh
+        # capacity the market can take again (the fixed-side pools apply
+        # the same exclusion); with notice_s == 0 nothing is ever
+        # condemned, so the legacy instant-kill path is untouched
+        pool = [w for w in self.online
+                if w.spec.is_spot and w.id not in self.condemned] \
+            + [w for w in self.draining
+               if w.spec.is_spot and w.id not in self.condemned]
+        boots = [b for b in self.booting if b[1].spec.is_spot]
+        alive = len(pool) + len(boots)
+        if alive == 0:
+            return []
+        n_kill = min(max(int(math.ceil(ev.frac * alive)), 1), alive)
+        victims = self.rng.choice(alive, size=n_kill, replace=False)
+        lost_all: List[Request] = []
+        for vi in victims:
+            if vi < len(pool):
+                w = pool[vi]
+                if self.notice_s > 0.0:
+                    if w in self.online:
+                        self.online.remove(w)
+                        self.draining.append(w)
+                    self.condemned[w.id] = t + self.notice_s
+                else:
+                    lost_all += self._kill(w, t)
+            else:
+                # a cancelled boot never held requests (it was billed,
+                # which gpu_seconds already reflects)
+                self.booting.remove(boots[vi - len(pool)])
+        return lost_all
+
+    def reap_condemned(self, t: float) -> List[Request]:
+        """Kill condemned workers whose notice deadline has passed; workers
+        that drained empty first are retired (and counted ``drained_ok``)
+        by the regular end-of-beat retirement."""
+        lost_all: List[Request] = []
+        for wid, deadline in list(self.condemned.items()):
+            if t < deadline:
+                continue
+            w = next((x for x in self.draining if x.id == wid), None)
+            if w is None:                # already retired as drained_ok
+                self.condemned.pop(wid, None)
+                continue
+            lost_all += self._kill(w, t)
+        return lost_all
+
+    def _kill(self, w, t: float) -> List[Request]:
+        (self.online if w in self.online else self.draining).remove(w)
+        self.condemned.pop(w.id, None)
+        lost = self._on_kill(w)
+        for r in lost:
+            self._mark(r, t)
+        # only serving-capable workers count as mid-flight reclaims
+        self.acc["requeued"] += len(lost)
+        self.acc["killed"] += 1
+        return lost
+
+
 def simulate_autoscaled(trace: Sequence[Request], spec: WorkerSpec, slo: SLO,
                         cfg: SimConfig, scfg: ScaleSimConfig, policy,
                         predictor=None,
@@ -316,206 +626,16 @@ def simulate_autoscaled(trace: Sequence[Request], spec: WorkerSpec, slo: SLO,
     wherever it is); the boot composition re-converges the realized mix to
     the split at the next epoch, so a zero-hazard, undiscounted spot pool
     reproduces the on-demand simulation exactly."""
-    rng = np.random.default_rng(cfg.seed)
-    beats_per_epoch = max(int(round(scfg.interval / cfg.heartbeat)), 1)
+    from repro.serving import api
 
-    online: List[WorkerState] = []
-    draining: List[WorkerState] = []
-    booting: List[List] = []           # [online_at, WorkerState]
-    sims: Dict[int, SimWorker] = {}
-    finished: List[Request] = []
-    queued: List[Request] = []
-    epochs: List[EpochStat] = []
-    wid = [0]
-    acc = {"gpu_s": 0.0, "spot_gpu_s": 0.0, "beat": 0, "arrivals": 0,
-           "busy_peak": 0, "peak": 0, "killed": 0, "requeued": 0}
-
-    def new_worker(wspec: WorkerSpec) -> WorkerState:
-        wid[0] += 1
-        pcfg = PlacementConfig(gamma=cfg.gamma, theta=cfg.theta,
-                               kv_capacity=wspec.kv_capacity,
-                               max_batch=wspec.max_batch,
-                               split_phase=cfg.split_phase)
-        w = WorkerState(wid[0], pcfg, wspec.perf, slo)
-        w.spec = wspec
-        return w
-
-    for _ in range(max(scfg.initial_workers, scfg.min_workers)):
-        w = new_worker(spec)
-        online.append(w)
-        sims[w.id] = SimWorker(w, w.perf, 0.0, cfg.split_phase)
-
-    def admit(r: Request) -> None:
-        r.l_pred = predictor.predict(r.l_in) if predictor else r.l_real
-        queued.append(r)
-        acc["arrivals"] += 1
-
-    def place(r: Request, t: float) -> bool:
-        if cfg.policy == "aladdin":
-            w = best_fit_place(online, r, allow_new=False)
-        elif cfg.policy == "jsq":
-            w = jsq_place(online, r, allow_new=False)
-        else:
-            w = power_of_two_place(online, r, rng, allow_new=False)
-        if w is None:
-            return False
-        r.state = ReqState.PLACED
-        if w.id not in sims:
-            sims[w.id] = SimWorker(w, w.perf, t, cfg.split_phase)
-        return True
-
-    def on_reclaim(t: float, ev: PreemptionEvent) -> None:
-        """A market reclaim: kill ceil(frac * spot pool) spot workers —
-        online, draining or still booting — and requeue their in-flight
-        work with the KV-loss recovery cost armed (t_preempted)."""
-        pool = [w for w in online if w.spec.is_spot] \
-            + [w for w in draining if w.spec.is_spot]
-        boots = [b for b in booting if b[1].spec.is_spot]
-        alive = len(pool) + len(boots)
-        if alive == 0:
-            return
-        n_kill = min(max(int(math.ceil(ev.frac * alive)), 1), alive)
-        victims = rng.choice(alive, size=n_kill, replace=False)
-        for vi in victims:
-            if vi < len(pool):
-                w = pool[vi]
-                (online if w in online else draining).remove(w)
-                sim = sims.pop(w.id)
-                lost = w.ongoing + w.new_batch + sim.preempted
-                for r in lost:
-                    r.state = ReqState.QUEUED
-                    r.worker = None
-                    r.t_preempted = t
-                    r.preempt_count += 1
-                    queued.append(r)
-                acc["requeued"] += len(lost)
-                w.ongoing.clear()
-                w.new_batch.clear()
-                w.mark_dirty()
-                # only serving-capable workers count as mid-flight reclaims;
-                # a cancelled boot never held requests (it was billed, which
-                # gpu_seconds already reflects)
-                acc["killed"] += 1
-            else:
-                booting.remove(boots[vi - len(pool)])
-
-    def apply_target(t: float, tgt_od: int, tgt_spot: int) -> None:
-        target = tgt_od + tgt_spot
-        cur = len(online) + len(booting)
-        if target > cur:
-            want = target - cur
-            # reclaim draining workers first: they are warm, boot is free
-            while want > 0 and draining:
-                w = draining.pop()
-                online.append(w)
-                want -= 1
-            # boot composition: fill the spot deficit first (it is the
-            # cheaper capacity), the remainder on-demand
-            n_spot_cur = sum(1 for w in online if w.spec.is_spot) \
-                + sum(1 for b in booting if b[1].spec.is_spot)
-            want_spot = min(max(tgt_spot - n_spot_cur, 0), max(want, 0))
-            for i in range(want):
-                wspec = spot.spec if spot is not None and i < want_spot \
-                    else spec
-                booting.append([t + scfg.provision_delay, new_worker(wspec)])
-        elif target < cur:
-            excess = cur - target
-            # cancel pending boots first (nothing running on them yet)
-            while excess > 0 and booting:
-                booting.pop()
-                excess -= 1
-            # then drain the emptiest online workers; never below the busy
-            # set — draining a loaded worker strands its queue time
-            victims = sorted(online, key=lambda w: w.batch_size)
-            for w in victims:
-                if excess <= 0 or len(online) <= scfg.min_workers:
-                    break
-                if w.batch_size > 0 and queued:
-                    break             # backlog: keep every loaded worker
-                online.remove(w)
-                draining.append(w)
-                excess -= 1
-
-    def step(t: float, t_next: float, arrived: int) -> None:
-        nonlocal queued
-        # workers whose boot completed join the serving set
-        ready = [b for b in booting if b[0] <= t]
-        for b in ready:
-            booting.remove(b)
-            w = b[1]
-            online.append(w)
-            sims[w.id] = SimWorker(w, w.perf, t, cfg.split_phase)
-        queued = [r for r in queued if not place(r, t)]
-        for w in online + draining:
-            sims[w.id].advance_to(t_next, finished, t_start=t)
-        # retire drained workers (billing stops with this heartbeat)
-        for w in list(draining):
-            if not w.ongoing and not w.new_batch \
-                    and not sims[w.id].preempted:
-                draining.remove(w)
-        busy = sum(1 for w in online if w.batch_size > 0)
-        acc["busy_peak"] = max(acc["busy_peak"], busy)
-        acc["peak"] = max(acc["peak"], len(online))
-        dt = t_next - t
-        billed = [w.spec for w in online] + [w.spec for w in draining] \
-            + [b[1].spec for b in booting]
-        acc["gpu_s"] += sum(s.gpu_cost for s in billed) * dt
-        acc["spot_gpu_s"] += sum(s.gpu_cost for s in billed if s.is_spot) \
-            * dt
-        acc["beat"] += 1
-        if acc["beat"] % beats_per_epoch == 0:
-            rate = acc["arrivals"] / scfg.interval
-            # workers needed = peak busy set, plus enough extra workers to
-            # absorb any placement backlog at the typical per-worker batch
-            if queued:
-                per_w = sum(w.batch_size for w in online) / max(busy, 1)
-                backlog = max(int(math.ceil(len(queued) / max(per_w, 1.0))),
-                              1)
-            else:
-                backlog = 0
-            needed = acc["busy_peak"] + backlog
-            t_epoch = t_next - scfg.interval
-            tgt = policy.target(t_epoch, rate, needed, len(queued))
-            tgt = max(tgt, busy, scfg.min_workers)
-            tgt = min(tgt, scfg.max_workers)
-            # price-class split: policies without one (or no spot market
-            # to buy from) run all-on-demand
-            split = getattr(policy, "split", None)
-            if spot is not None and split is not None:
-                tgt_od, tgt_spot = split(t_epoch, tgt)
-                tgt_spot = min(tgt_spot, scfg.max_workers - tgt_od)
-            else:
-                tgt_od, tgt_spot = tgt, 0
-            apply_target(t_next, tgt_od, tgt_spot)
-            epochs.append(EpochStat(
-                t=t_epoch, rate=rate, needed=needed, target=tgt_od + tgt_spot,
-                online=len(online), target_spot=tgt_spot,
-                online_spot=sum(1 for w in online if w.spec.is_spot)))
-            acc["arrivals"] = 0
-            acc["busy_peak"] = 0
-
-    def drained() -> bool:
-        return (not queued
-                and all(not w.ongoing and not w.new_batch
-                        for w in online + draining)
-                and all(not s.preempted for s in sims.values()))
-
-    trace = run_heartbeat_loop(
-        trace, cfg.heartbeat, admit, step, drained,
-        events=spot.events if spot is not None else None,
-        fire=on_reclaim)
-
-    atgts = [r.atgt() for r in finished if r.atgt() is not None]
-    ttfts = [r.ttft() for r in finished if r.ttft() is not None]
-    total = len(trace)
-    return ScaleSimResult(
-        policy=getattr(policy, "name", type(policy).__name__),
-        gpu_seconds=acc["gpu_s"],
-        attainment=slo_attainment(finished, total, slo),
-        p99_ttft=float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
-        p99_atgt=float(np.percentile(atgts, 99)) if atgts else float("nan"),
-        mean_atgt=float(np.mean(atgts)) if atgts else float("nan"),
-        finished=len(finished), total=total,
-        peak_workers=acc["peak"], spot_gpu_seconds=acc["spot_gpu_s"],
-        preempted_workers=acc["killed"], requeued=acc["requeued"],
-        epochs=epochs)
+    scenario = api.Scenario(
+        workload=trace,
+        fleet=api.FleetSpec([api.PoolSpec(spec, scfg.initial_workers)]),
+        slo=slo,
+        topology=api.Colocated(heartbeat=cfg.heartbeat, policy=cfg.policy,
+                               split_phase=cfg.split_phase,
+                               rebalance=cfg.rebalance, gamma=cfg.gamma,
+                               theta=cfg.theta, max_batch=cfg.max_batch),
+        scaling=api.PolicyScale(policy=policy, scfg=scfg),
+        market=spot, predictor=predictor, seed=cfg.seed)
+    return api.run(scenario).to_scale_result()

@@ -14,9 +14,8 @@ homogeneous fleet and remain the default."""
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, List, Optional, Sequence
-
-import numpy as np
 
 from repro.core.perf_model import PerfModel
 from repro.core.placement import (PlacementConfig, WorkerState,
@@ -24,7 +23,7 @@ from repro.core.placement import (PlacementConfig, WorkerState,
                                   power_of_two_place)
 from repro.core.rebalance import ErrorTracker, rebalance
 from repro.core.request import ReqState, Request
-from repro.core.slo import SLO, slo_attainment
+from repro.core.slo import SLO
 from repro.core.worker_config import WorkerSpec
 from repro.serving.length_predictor import LengthPredictor
 
@@ -259,6 +258,222 @@ class SimResult:
         return dataclasses.asdict(self)
 
 
+def make_worker_state(wid: int, spec: WorkerSpec, cfg: SimConfig,
+                      slo: SLO) -> WorkerState:
+    """Scheduler-side worker for ``spec`` under the simulation's placement
+    knobs — the one construction path every topology and pool kind shares."""
+    pcfg = PlacementConfig(gamma=cfg.gamma, theta=cfg.theta,
+                           kv_capacity=spec.kv_capacity,
+                           max_batch=spec.max_batch,
+                           split_phase=cfg.split_phase)
+    w = WorkerState(wid, pcfg, spec.perf, slo)
+    w.spec = spec
+    return w
+
+
+class FixedPool:
+    """Static worker container: the fleet of the classic ``simulate`` path.
+
+    ``factory`` (elastic mode) lets placement open a worker whenever nothing
+    fits — the min-cost oracle. A spot market may still reclaim workers out
+    of a fixed fleet (they are simply not replaced): with a notice window the
+    victim drains (``WorkerState.draining`` keeps placement away) and is
+    killed at the deadline if work remains."""
+
+    def __init__(self, workers: List[WorkerState], sims: Dict[int, SimWorker],
+                 rng, factory: Optional[Callable[[], WorkerState]] = None,
+                 notice_s: float = 0.0):
+        self.workers = workers
+        self.sims = sims
+        self.rng = rng
+        self.factory = factory
+        self.notice_s = notice_s
+        self.condemned: Dict[int, float] = {}     # wid -> kill deadline
+        self.killed = 0
+        self.drained_ok = 0
+        self.requeued = 0
+        self.retired_cost = 0.0     # accelerators of reclaimed/drained
+        self.gpu_s = 0.0            # workers; fixed fleets bill no seconds
+        self.spot_gpu_s = 0.0
+        self.epochs: List = []
+
+    # ---- lifecycle hooks (static fleet: only the notice reaper) -------------
+    def note_arrival(self) -> None:
+        pass
+
+    def serving(self) -> List[WorkerState]:
+        return self.workers
+
+    def active(self) -> List[WorkerState]:
+        return self.workers
+
+    def begin_beat(self, topo, t: float) -> None:
+        if self.condemned:
+            topo.requeue(self._reap(t))
+
+    def end_beat(self, topo, t: float, t_next: float) -> None:
+        pass
+
+    # ---- market reclaims ----------------------------------------------------
+    def on_reclaim(self, t: float, ev) -> List[Request]:
+        pool = [w for w in self.workers if w.spec.is_spot
+                and w.id not in self.condemned]
+        if not pool:
+            return []
+        n_kill = min(max(int(math.ceil(ev.frac * len(pool))), 1), len(pool))
+        victims = self.rng.choice(len(pool), size=n_kill, replace=False)
+        lost_all: List[Request] = []
+        for vi in victims:
+            w = pool[vi]
+            if self.notice_s > 0.0:
+                w.draining = True      # no new admissions inside the notice
+                self.condemned[w.id] = t + self.notice_s
+            else:
+                lost_all += self._kill(w, t)
+        return lost_all
+
+    def _kill(self, w: WorkerState, t: float) -> List[Request]:
+        self.workers.remove(w)
+        self.retired_cost += w.spec.n_accelerators
+        self.condemned.pop(w.id, None)
+        sim = self.sims.pop(w.id, None)
+        lost = w.ongoing + w.new_batch + (sim.preempted if sim else [])
+        for r in lost:
+            r.state = ReqState.QUEUED
+            r.worker = None
+            r.t_preempted = t
+            r.preempt_count += 1
+        w.ongoing.clear()
+        w.new_batch.clear()
+        w.mark_dirty()
+        self.killed += 1
+        self.requeued += len(lost)
+        return lost
+
+    def _reap(self, t: float) -> List[Request]:
+        lost: List[Request] = []
+        for wid, deadline in list(self.condemned.items()):
+            w = next((x for x in self.workers if x.id == wid), None)
+            if w is None:
+                self.condemned.pop(wid)
+                continue
+            sim = self.sims.get(wid)
+            idle = not w.ongoing and not w.new_batch \
+                and not (sim and sim.preempted)
+            if idle:                     # finished inside the notice window
+                self.workers.remove(w)
+                self.retired_cost += w.spec.n_accelerators
+                self.sims.pop(wid, None)
+                self.condemned.pop(wid)
+                self.drained_ok += 1
+            elif t >= deadline:
+                lost += self._kill(w, t)
+        return lost
+
+
+class ColocatedTopology:
+    """One colocated serving tier: queue -> placement (Algorithm 1 or a
+    baseline) -> event-batched worker advance, over a pluggable worker
+    container — ``FixedPool`` (fixed / elastic fleets) or
+    ``forecast.ManagedPool`` (policy-driven boot/drain/bill lifecycle).
+    The pluggable pool is what makes topology x scaling x market composable
+    while every combination runs the same placement core and the same
+    causal heartbeat loop."""
+
+    def __init__(self, slo: SLO, cfg: SimConfig, pool, rng,
+                 predictor: Optional[LengthPredictor] = None,
+                 observer: Optional[Callable] = None, tracking: bool = True):
+        self.slo = slo
+        self.cfg = cfg
+        self.pool = pool
+        self.rng = rng
+        self.predictor = predictor
+        self.observer = observer
+        self.tracking = tracking       # Algorithm 2 repredict + rebalance
+        self.tracker = ErrorTracker()
+        self.queued: List[Request] = []
+        self.finished: List[Request] = []
+        self.moves = 0
+        self.peak_workers = len(pool.serving())
+
+    def admit(self, r: Request) -> None:
+        r.l_pred = self.predictor.predict(r.l_in) if self.predictor \
+            else r.l_real
+        self.queued.append(r)
+        self.pool.note_arrival()
+
+    def requeue(self, reqs: List[Request], side: str = "serve") -> None:
+        self.queued.extend(reqs)
+
+    def backlog_len(self, side: str = "serve") -> int:
+        return len(self.queued)
+
+    def fire(self, t: float, ev) -> None:
+        self.requeue(self.pool.on_reclaim(t, ev))
+
+    def _place_one(self, r: Request) -> Optional[WorkerState]:
+        workers = self.pool.serving()
+        fac = self.pool.factory
+        if self.cfg.policy == "aladdin":
+            return best_fit_place(workers, r, allow_new=fac is not None,
+                                  new_worker_factory=fac)
+        if self.cfg.policy == "jsq":
+            return jsq_place(workers, r, allow_new=fac is not None,
+                             new_worker_factory=fac)
+        return power_of_two_place(workers, r, self.rng,
+                                  allow_new=fac is not None,
+                                  new_worker_factory=fac)
+
+    def step(self, t: float, t_next: float, arrived: int) -> None:
+        pool = self.pool
+        pool.begin_beat(self, t)
+        # re-prediction for underruns (Algorithm 2 inputs)
+        if self.tracking and self.predictor:
+            for w in pool.serving():
+                for r in w.ongoing:
+                    if r.l_out > r.l_pred and not r.repredicted:
+                        self.tracker.on_underrun(
+                            r, self.predictor.repredict(r.l_in, r.l_out))
+                        w.mark_dirty()
+        # placement
+        still: List[Request] = []
+        for r in self.queued:
+            w = self._place_one(r)
+            if w is None:
+                still.append(r)
+            else:
+                r.state = ReqState.PLACED
+                if w.id not in pool.sims:
+                    pool.sims[w.id] = SimWorker(w, w.perf, t,
+                                                self.cfg.split_phase)
+        self.queued = still
+        if self.tracking and self.cfg.rebalance \
+                and self.cfg.policy == "aladdin":
+            self.moves += rebalance(pool.serving(), self.tracker)
+            self.tracker.decay()
+        self.peak_workers = max(self.peak_workers, len(pool.serving()))
+        # advance workers
+        before = len(self.finished)
+        for w in pool.active():
+            pool.sims[w.id].advance_to(t_next, self.finished, t_start=t)
+        if self.tracking:
+            for r in self.finished[before:]:
+                self.tracker.on_finish(r)
+                if self.predictor:
+                    self.predictor.observe(r.l_in, r.l_real)
+        pool.end_beat(self, t, t_next)
+        if self.observer is not None:
+            self.observer(t=t_next, workers=pool.serving(), sims=pool.sims,
+                          queued=self.queued, finished=self.finished,
+                          arrived=arrived)
+
+    def drained(self) -> bool:
+        return (not self.queued
+                and all(not w.ongoing and not w.new_batch
+                        for w in self.pool.active())
+                and all(not s.preempted for s in self.pool.sims.values()))
+
+
 def simulate(trace: Sequence[Request], perf: PerfModel, slo: SLO,
              kv_capacity: float, cfg: SimConfig,
              n_workers: Optional[int] = None,
@@ -267,6 +482,10 @@ def simulate(trace: Sequence[Request], perf: PerfModel, slo: SLO,
              observer: Optional[Callable] = None) -> SimResult:
     """Run the serving simulation.
 
+    .. deprecated:: delegate to :func:`repro.serving.api.run` — this shim
+       builds the equivalent declarative ``Scenario`` and reproduces the
+       pre-Scenario metrics bit-for-bit (pinned by tests/test_shim_goldens).
+
     n_workers fixed (None = elastic: open a worker whenever placement fails,
     i.e. the min-cost oracle mode). ``fleet`` overrides the homogeneous
     (perf, kv_capacity) description with exactly one WorkerSpec per worker —
@@ -274,113 +493,23 @@ def simulate(trace: Sequence[Request], perf: PerfModel, slo: SLO,
     (sweep fleet sizes via min_workers_for_slo's fleet_fn instead).
     ``observer(t, workers, sims, queued, finished, arrived)`` is called at
     the end of every heartbeat (invariant checks in tests)."""
-    rng = np.random.default_rng(cfg.seed)
-    specs = list(fleet) if fleet is not None else None
+    from repro.serving import api
+
     default_spec = WorkerSpec(perf=perf, kv_capacity=kv_capacity,
                               max_batch=cfg.max_batch)
-    tracker = ErrorTracker()
-    wid_counter = [0]
-
-    def _new_worker(spec: WorkerSpec) -> WorkerState:
-        wid_counter[0] += 1
-        pcfg = PlacementConfig(gamma=cfg.gamma, theta=cfg.theta,
-                               kv_capacity=spec.kv_capacity,
-                               max_batch=spec.max_batch,
-                               split_phase=cfg.split_phase)
-        w = WorkerState(wid_counter[0], pcfg, spec.perf, slo)
-        w.spec = spec
-        return w
-
-    def factory() -> WorkerState:
-        return _new_worker(default_spec)
-
-    workers: List[WorkerState] = []
-    sims: Dict[int, SimWorker] = {}
-    if specs is not None:
-        for spec in specs:
-            w = _new_worker(spec)
-            workers.append(w)
-            sims[w.id] = SimWorker(w, w.perf, 0.0, cfg.split_phase)
-    elif n_workers:
-        for _ in range(n_workers):
-            w = factory()
-            workers.append(w)
-            sims[w.id] = SimWorker(w, w.perf, 0.0, cfg.split_phase)
-    elastic = specs is None and not n_workers
-
-    finished: List[Request] = []
-    queued: List[Request] = []
-    moves = 0
-    peak_workers = len(workers)
-
-    def admit(r: Request) -> None:
-        r.l_pred = predictor.predict(r.l_in) if predictor else r.l_real
-        queued.append(r)
-
-    def step(t: float, t_next: float, arrived: int) -> None:
-        nonlocal queued, moves, peak_workers
-        # re-prediction for underruns (Algorithm 2 inputs)
-        for w in workers:
-            for r in w.ongoing:
-                if r.l_out > r.l_pred and not r.repredicted and predictor:
-                    tracker.on_underrun(r, predictor.repredict(r.l_in,
-                                                               r.l_out))
-                    w.mark_dirty()
-        # placement
-        still: List[Request] = []
-        for r in queued:
-            fac = factory if elastic else None
-            if cfg.policy == "aladdin":
-                w = best_fit_place(workers, r, allow_new=fac is not None,
-                                   new_worker_factory=fac)
-            elif cfg.policy == "jsq":
-                w = jsq_place(workers, r, allow_new=fac is not None,
-                              new_worker_factory=fac)
-            else:
-                w = power_of_two_place(workers, r, rng,
-                                       allow_new=fac is not None,
-                                       new_worker_factory=fac)
-            if w is None:
-                still.append(r)
-            else:
-                r.state = ReqState.PLACED
-                if w.id not in sims:
-                    sims[w.id] = SimWorker(w, w.perf, t, cfg.split_phase)
-        queued = still
-        if cfg.rebalance and cfg.policy == "aladdin":
-            moves += rebalance(workers, tracker)
-            tracker.decay()
-        peak_workers = max(peak_workers, len(workers))
-        # advance workers
-        before = len(finished)
-        for w in workers:
-            sims[w.id].advance_to(t_next, finished, t_start=t)
-        for r in finished[before:]:
-            tracker.on_finish(r)
-            if predictor:
-                predictor.observe(r.l_in, r.l_real)
-        if observer is not None:
-            observer(t=t_next, workers=workers, sims=sims, queued=queued,
-                     finished=finished, arrived=arrived)
-
-    def drained() -> bool:
-        return (not queued
-                and all(not w.ongoing and not w.new_batch for w in workers)
-                and all(not s.preempted for s in sims.values()))
-
-    trace = run_heartbeat_loop(trace, cfg.heartbeat, admit, step, drained)
-
-    atgts = [r.atgt() for r in finished if r.atgt() is not None]
-    ttfts = [r.ttft() for r in finished if r.ttft() is not None]
-    total = len(trace)
-    return SimResult(
-        n_workers_peak=peak_workers,
-        attainment=slo_attainment(finished, total, slo),
-        p99_atgt=float(np.percentile(atgts, 99)) if atgts else float("nan"),
-        p99_ttft=float(np.percentile(ttfts, 99)) if ttfts else float("nan"),
-        mean_atgt=float(np.mean(atgts)) if atgts else float("nan"),
-        finished=len(finished), total=total, moves=moves,
-        gpu_cost=sum(w.spec.n_accelerators for w in workers))
+    if fleet is not None:
+        pools = [api.PoolSpec(spec, 1) for spec in fleet]
+    else:
+        pools = [api.PoolSpec(default_spec, int(n_workers or 0))]
+    scenario = api.Scenario(
+        workload=trace, fleet=api.FleetSpec(pools), slo=slo,
+        topology=api.Colocated(heartbeat=cfg.heartbeat, policy=cfg.policy,
+                               split_phase=cfg.split_phase,
+                               rebalance=cfg.rebalance, gamma=cfg.gamma,
+                               theta=cfg.theta, max_batch=cfg.max_batch),
+        scaling=api.FixedScale(),
+        predictor=predictor, observer=observer, seed=cfg.seed)
+    return api.run(scenario).to_sim_result()
 
 
 def min_workers_for_slo(trace_fn, perf: PerfModel, slo: SLO,
@@ -394,35 +523,23 @@ def min_workers_for_slo(trace_fn, perf: PerfModel, slo: SLO,
     """Binary search the minimum fixed worker count attaining the SLO target
     (the paper's cost metric in Figs. 11/12). ``fleet_fn(n)`` maps a worker
     count to a (possibly heterogeneous) fleet — e.g. an A100/V100 mix at a
-    fixed ratio; the default is n homogeneous (perf, kv_capacity) workers."""
-    attain_hist = []
+    fixed ratio; the default is n homogeneous (perf, kv_capacity) workers.
 
-    def ok(n: int) -> bool:
-        fl = fleet_fn(n) if fleet_fn is not None else None
-        res = simulate(trace_fn(), perf, slo, kv_capacity, cfg,
-                       n_workers=None if fl is not None else n,
-                       predictor=predictor, fleet=fl)
-        attain_hist.append((n, res.attainment))
-        return res.attainment >= attain_target and res.finished == res.total
+    .. deprecated:: delegate to :func:`repro.serving.api.optimize`, which
+       subsumes this search (objective="cost" on a colocated scenario)."""
+    from repro.serving import api
 
-    escalations = 0
-    while not ok(hi):
-        # plateau detection: if doubling workers stops improving attainment,
-        # the residual violations are scale-invariant (e.g. prediction-error
-        # preemption tails) — the target is infeasible, not under-provisioned
-        if len(attain_hist) >= 2 and \
-                attain_hist[-1][1] <= attain_hist[-2][1] + 1e-3:
-            raise RuntimeError(
-                f"attainment plateaus at {attain_hist[-1][1]:.3f} < "
-                f"{attain_target} (scale-invariant violations)")
-        hi *= 2
-        escalations += 1
-        if hi > 8192 or escalations > 6:
-            raise RuntimeError("workload cannot meet SLO at any scale")
-    while lo < hi:
-        mid = (lo + hi) // 2
-        if ok(mid):
-            hi = mid
-        else:
-            lo = mid + 1
-    return lo
+    default_spec = WorkerSpec(perf=perf, kv_capacity=kv_capacity,
+                              max_batch=cfg.max_batch)
+    scenario = api.Scenario(
+        workload=trace_fn,
+        fleet=api.FleetSpec([api.PoolSpec(default_spec, 0)]), slo=slo,
+        topology=api.Colocated(heartbeat=cfg.heartbeat, policy=cfg.policy,
+                               split_phase=cfg.split_phase,
+                               rebalance=cfg.rebalance, gamma=cfg.gamma,
+                               theta=cfg.theta, max_batch=cfg.max_batch),
+        scaling=api.FixedScale(), predictor=predictor, seed=cfg.seed)
+    plan = api.optimize(scenario, objective="cost",
+                        attain_target=attain_target, lo=lo, hi=hi,
+                        fleet_fn=fleet_fn)
+    return plan.n_workers

@@ -49,6 +49,17 @@ def sample_lengths(cfg: WorkloadConfig, n: int, rng=None):
     return l_in, l_out
 
 
+def clone_trace(trace) -> List[Request]:
+    """Replay a materialized workload: fresh ``Request`` objects carrying
+    the same immutable draw (l_in, l_real, arrival) and none of the per-run
+    mutable state. This is how ``api.optimize`` evaluates every candidate
+    fleet against the *same* arrivals — the workload is sampled once and
+    cloned per simulation, instead of implicitly re-sampled via a trace
+    factory."""
+    return [Request(l_in=r.l_in, l_pred=0, l_real=r.l_real,
+                    arrival=r.arrival) for r in trace]
+
+
 def generate_trace(cfg: WorkloadConfig,
                    rate: Optional[float] = None) -> List[Request]:
     """Poisson arrival stream with sampled (l_in, l_real) per request."""

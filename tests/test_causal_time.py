@@ -69,6 +69,41 @@ def test_heartbeat_core_admits_causally():
     assert [r.arrival for r in admitted] == sorted(r.arrival for r in trace)
 
 
+def test_scenario_api_cells_admit_causally(spec):
+    """The Scenario API's new matrix cells run the same causal core: no
+    first token may lead its arrival, even through boot delays, market
+    reclaims and the re-prefill recovery path (extends the per-simulator
+    pins above to the one-engine run() path)."""
+    import dataclasses
+
+    from repro.core.worker_config import spot_variant
+    from repro.serving import (Disaggregated, FleetSpec, Forecast, PoolSpec,
+                               PreemptionEvent, Scenario, SpotMarket, run)
+    dspec = dataclasses.replace(spec, max_batch=24)
+    market = SpotMarket(
+        spot_variant(dspec, price=0.35, preempt_hazard=1.0 / 100.0),
+        [PreemptionEvent(t=4.0, frac=0.6), PreemptionEvent(t=9.0, frac=0.6)],
+        prefill_spec=spot_variant(spec, price=0.35,
+                                  preempt_hazard=1.0 / 200.0),
+        prefill_events=[PreemptionEvent(t=6.0, frac=0.5)])
+    trace = generate_trace(WCFG)
+    rep = run(Scenario(
+        workload=trace,
+        fleet=FleetSpec([PoolSpec(spec, 2, role="prefill"),
+                         PoolSpec(dspec, 4, role="decode")]),
+        slo=SLO_70B,
+        topology=Disaggregated(heartbeat=0.02, theta=0.7,
+                               prefill_router="earliest"),
+        scaling=Forecast(interval=2.0, provision_delay=2.0, period=15.0,
+                         min_workers=2),
+        market=market))
+    assert rep.finished == rep.total == len(trace)
+    for r in trace:
+        assert r.t_first_token is not None
+        assert r.t_first_token >= r.arrival
+        assert r.t_finish >= r.t_first_token
+
+
 def test_attainment_is_ok_over_total_everywhere(spec):
     """Both simulators must report the shared ok/total definition — the
     seed encoded ok/finished * finished/total on one side and ok/total on

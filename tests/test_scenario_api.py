@@ -1,0 +1,206 @@
+"""The declarative Scenario API: every cell of the topology x scaling x
+market matrix runs through the one engine path; ``optimize`` subsumes the
+legacy searches and replays one materialized workload; and the public
+surface (``repro.serving.__all__``) is guarded against drift from the
+documented names."""
+import dataclasses
+from pathlib import Path
+
+import pytest
+
+import repro.serving as serving
+from repro.configs import get_arch
+from repro.core import A100_80G, PAPER_SLOS, make_worker_spec
+from repro.core.worker_config import spot_variant
+from repro.serving import (Colocated, Disaggregated, FixedScale, FleetSpec,
+                           Forecast, PolicyScale, PoolSpec, PreemptionEvent,
+                           Reactive, Scenario, ScaleSimConfig, SpotMarket,
+                           WorkloadConfig, generate_trace, optimize, run)
+
+ARCH = get_arch("llama2-70b")
+SLO = PAPER_SLOS["llama2-70b"]
+WCFG = WorkloadConfig(mean_rate=2.0, duration=10.0, seed=5, in_mu=5.0,
+                      in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return make_worker_spec(ARCH, A100_80G, SLO, mean_context=450.0)
+
+
+def _market(spec, prefill_too=False):
+    sspec = spot_variant(spec, price=0.35, preempt_hazard=1.0 / 100.0)
+    events = [PreemptionEvent(t=3.0, frac=0.5), PreemptionEvent(t=7.0,
+                                                                frac=0.5)]
+    kw = {}
+    if prefill_too:
+        kw = dict(prefill_spec=sspec, prefill_events=events)
+    return SpotMarket(sspec, events, **kw)
+
+
+def _fleet(spec, topology, with_spot=False):
+    """Fleet for one matrix cell. Under FixedScale a spot market can only
+    reclaim workers the fleet actually contains, so ``with_spot`` adds the
+    spot twins — otherwise the reclaim path is vacuously unreachable."""
+    sspec = spot_variant(spec, price=0.35, preempt_hazard=1.0 / 100.0)
+    if isinstance(topology, Disaggregated):
+        pools = [PoolSpec(spec, 2, role="prefill"),
+                 PoolSpec(spec, 3, role="decode")]
+        if with_spot:
+            pools += [PoolSpec(sspec, 1, role="prefill"),
+                      PoolSpec(sspec, 2, role="decode")]
+        return FleetSpec(pools)
+    pools = [PoolSpec(spec, 3)]
+    if with_spot:
+        pools.append(PoolSpec(sspec, 2))
+    return FleetSpec(pools)
+
+
+SCALINGS = [FixedScale(), Reactive(interval=2.0, provision_delay=2.0),
+            Forecast(interval=2.0, provision_delay=2.0, period=10.0)]
+TOPOLOGIES = [Colocated(), Disaggregated()]
+
+
+@pytest.mark.parametrize("topo_i", range(len(TOPOLOGIES)))
+@pytest.mark.parametrize("scale_i", range(len(SCALINGS)))
+@pytest.mark.parametrize("spot", [False, True])
+def test_matrix_every_cell_runs(spec, topo_i, scale_i, spot):
+    """2 topologies x 3 scaling modes x {on-demand, spot}: every cell runs
+    end-to-end through run() with conserved tokens and sane metrics."""
+    topology = TOPOLOGIES[topo_i]
+    scaling = SCALINGS[scale_i]
+    sc = Scenario(workload=lambda: generate_trace(WCFG),
+                  fleet=_fleet(spec, topology,
+                               with_spot=spot and scale_i == 0),
+                  slo=SLO, topology=topology, scaling=scaling,
+                  market=_market(spec, prefill_too=topo_i == 1)
+                  if spot else None)
+    trace = sc.materialize()
+    rep = run(dataclasses.replace(sc, workload=trace))
+    if spot and scale_i == 0:
+        # fixed fleets must actually exercise the reclaim path (a fleet
+        # without spot workers makes the spot cell vacuous)
+        assert rep.preempted_workers + rep.drained_ok >= 1
+    assert rep.schema == "runreport/2"
+    assert rep.finished == rep.total == len(trace)
+    assert 0.0 <= rep.attainment <= 1.0
+    for r in trace:
+        assert r.l_out == r.l_real
+        assert r.t_first_token is not None and r.t_first_token >= r.arrival
+    row = rep.row()
+    assert "epochs" not in row and row["topology"] in ("colocated",
+                                                       "disaggregated")
+
+
+def test_run_is_deterministic(spec):
+    sc = Scenario(workload=lambda: generate_trace(WCFG),
+                  fleet=_fleet(spec, Colocated()), slo=SLO,
+                  scaling=Reactive(interval=2.0, provision_delay=2.0),
+                  market=_market(spec))
+    assert run(sc).row() == run(sc).row()
+
+
+def test_fixed_fleet_with_market_kills_spot_workers(spec):
+    """FixedScale x market: reclaims remove spot workers from a static
+    fleet (never replaced), with drains under a notice window."""
+    sspec = spot_variant(spec, price=0.35, preempt_hazard=1.0 / 100.0)
+    fleet = FleetSpec([PoolSpec(spec, 2), PoolSpec(sspec, 2)])
+    events = [PreemptionEvent(t=4.0, frac=1.0)]
+    base = Scenario(workload=lambda: generate_trace(WCFG), fleet=fleet,
+                    slo=SLO, market=SpotMarket(sspec, events))
+    rep = run(base)
+    assert rep.finished == rep.total
+    assert rep.preempted_workers + rep.drained_ok >= 1
+    noticed = run(dataclasses.replace(
+        base, market=SpotMarket(sspec, events, notice_s=1e6)))
+    assert noticed.preempted_workers == 0 and noticed.requeued == 0
+
+
+def test_policy_scale_rejected_for_disagg(spec):
+    scfg = ScaleSimConfig()
+    sc = Scenario(workload=[], fleet=_fleet(spec, Disaggregated()), slo=SLO,
+                  topology=Disaggregated(),
+                  scaling=PolicyScale(object(), scfg))
+    with pytest.raises(ValueError, match="own"):
+        run(sc)
+
+
+# ---- optimize ----------------------------------------------------------------
+
+def test_optimize_accepts_trace_and_trace_fn_identically(spec):
+    """The trace vs trace_fn asymmetry is gone: optimize() materializes the
+    workload once and replays clones, so a concrete trace and a factory
+    producing the same draw yield the same plan."""
+    sc = Scenario(workload=lambda: generate_trace(WCFG),
+                  fleet=FleetSpec([PoolSpec(spec, 0)]), slo=SLO)
+    plan_fn = optimize(sc, attain_target=0.9, hi=8)
+    trace = generate_trace(WCFG)
+    plan_tr = optimize(dataclasses.replace(sc, workload=trace),
+                       attain_target=0.9, hi=8)
+    assert plan_fn.n_workers == plan_tr.n_workers
+    assert plan_fn.report.row() == plan_tr.report.row()
+    # and the caller's trace was NOT consumed by the search (clones ran)
+    assert all(r.t_finish is None for r in trace)
+
+
+def test_optimize_replays_one_materialization(spec):
+    """A stateful factory would re-sample per candidate under the legacy
+    searches; optimize() calls it exactly once."""
+    calls = [0]
+
+    def factory():
+        calls[0] += 1
+        return generate_trace(WCFG)
+
+    sc = Scenario(workload=factory, fleet=FleetSpec([PoolSpec(spec, 0)]),
+                  slo=SLO)
+    plan = optimize(sc, attain_target=0.9, hi=8)
+    assert calls[0] == 1
+    assert plan.evals >= 2          # while the search simulated many fleets
+
+
+def test_optimize_rejects_autoscaled_scenarios(spec):
+    sc = Scenario(workload=[], fleet=_fleet(spec, Colocated()), slo=SLO,
+                  scaling=Reactive())
+    with pytest.raises(ValueError, match="FixedScale"):
+        optimize(sc)
+
+
+def test_optimize_disagg_matches_min_cost_disagg(spec):
+    """optimize() on a disaggregated scenario IS the legacy frontier: same
+    cheapest point as min_cost_disagg on the same workload."""
+    from repro.serving import DisaggConfig, min_cost_disagg
+    kw = dict(attain_target=0.9, max_prefill=2, hi_decode=8)
+    legacy = min_cost_disagg(lambda: generate_trace(WCFG), SLO,
+                             DisaggConfig(), spec, spec, **kw)
+    sc = Scenario(workload=lambda: generate_trace(WCFG),
+                  fleet=FleetSpec([PoolSpec(spec, 0, role="prefill"),
+                                   PoolSpec(spec, 0, role="decode")]),
+                  slo=SLO, topology=Disaggregated())
+    plan = optimize(sc, **kw)
+    assert plan.feasible
+    assert plan.disagg_result.row() == legacy.row()
+
+
+# ---- API surface guard -------------------------------------------------------
+
+def test_public_surface_exists_and_imports():
+    assert hasattr(serving, "__all__") and len(serving.__all__) > 0
+    for name in serving.__all__:
+        assert getattr(serving, name, None) is not None, name
+    assert len(set(serving.__all__)) == len(serving.__all__)
+
+
+def test_public_surface_matches_documented_names():
+    """Every public name is documented in the README (the 'Scenario API'
+    section's surface listing) — additions must update the docs."""
+    readme = Path(__file__).resolve().parent.parent / "README.md"
+    text = readme.read_text()
+    assert "Scenario API" in text
+    missing = [n for n in serving.__all__ if f"`{n}`" not in text]
+    assert not missing, f"undocumented public names: {missing}"
+
+
+def test_scenario_api_names_are_in_all():
+    from repro.serving import api
+    assert set(api.__all__) <= set(serving.__all__)

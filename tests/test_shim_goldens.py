@@ -1,0 +1,128 @@
+"""Golden pins for the legacy-entry-point deprecation shims.
+
+The Scenario API refactor (repro.serving.api) turned ``simulate``,
+``simulate_disaggregated`` and ``simulate_autoscaled`` into thin shims that
+build the equivalent declarative ``Scenario`` and delegate to ``api.run``.
+The shims' contract is bit-for-bit reproduction of the pre-refactor
+metrics: every number below was captured on the pre-refactor tree with
+``scripts/capture_goldens.py`` (fixed seeds, fixed configs) and must keep
+matching exactly — any drift means the engine path diverged from the
+legacy step loops, not a tolerable modeling change.
+"""
+import pytest
+
+from repro.configs import get_arch
+from repro.core import A100_80G, PAPER_SLOS, SpotMixConfig, make_worker_spec
+from repro.core.worker_config import spot_variant
+from repro.serving import (DisaggConfig, ForecastConfig, ForecastPolicy,
+                           PreemptionEvent, ReactivePolicy, ScaleSimConfig,
+                           SeasonalNaiveForecaster, SimConfig, SpotMarket,
+                           WorkloadConfig, diurnal_trace, generate_trace,
+                           simulate, simulate_autoscaled,
+                           simulate_disaggregated)
+
+ARCH = get_arch("llama2-70b")
+SLO = PAPER_SLOS["llama2-70b"]
+WCFG = WorkloadConfig(mean_rate=3.0, duration=15.0, seed=9, in_mu=5.0,
+                      in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+DIURNAL_CFG = WorkloadConfig(mean_rate=4.0, duration=240.0, seed=21,
+                             in_mu=5.0, in_sigma=1.1, out_mu=5.3,
+                             out_sigma=0.9)
+
+# captured by scripts/capture_goldens.py on the pre-refactor tree
+GOLDEN = {
+    "colocated_fixed": {
+        "n_workers_peak": 4, "attainment": 1.0,
+        "p99_atgt": 0.06429463509567153, "p99_ttft": 0.9827317616941065,
+        "mean_atgt": 0.05541041167791266, "finished": 43, "total": 43,
+        "moves": 0, "gpu_cost": 4},
+    "colocated_elastic_po2": {
+        "n_workers_peak": 1, "attainment": 0.6046511627906976,
+        "p99_atgt": 0.12834974143653904, "p99_ttft": 0.9628434970981319,
+        "mean_atgt": 0.07810271024434604, "finished": 43, "total": 43,
+        "moves": 0, "gpu_cost": 1},
+    "disagg_fixed": {
+        "n_prefill": 2, "n_decode": 4, "gpu_cost": 12.0, "attainment": 1.0,
+        "p99_ttft": 0.7686580152156194, "p99_atgt": 0.06824715112724927,
+        "mean_transfer": 0.0037580651162790702, "finished": 43, "total": 43,
+        "pool_mix": "p:a100-80g-tp2x2|d:a100-80g-tp2x4"},
+    "autoscaled_reactive": {
+        "policy": "reactive", "gpu_seconds": 5317.5,
+        "attainment": 0.9894291754756871, "p99_ttft": 1.6510710421527965,
+        "p99_atgt": 0.07142007382595672, "mean_atgt": 0.06482130723865705,
+        "finished": 946, "total": 946, "peak_workers": 9,
+        "spot_gpu_seconds": 0.0, "preempted_workers": 0, "requeued": 0},
+    "autoscaled_forecast": {
+        "policy": "forecast", "gpu_seconds": 4977.0,
+        "attainment": 0.9873150105708245, "p99_ttft": 2.1476625225148886,
+        "p99_atgt": 0.07142007382595672, "mean_atgt": 0.06486760078579426,
+        "finished": 946, "total": 946, "peak_workers": 9,
+        "spot_gpu_seconds": 0.0, "preempted_workers": 0, "requeued": 0},
+    "autoscaled_spot": {
+        "policy": "forecast", "gpu_seconds": 3504.550000000042,
+        "attainment": 0.9873150105708245, "p99_ttft": 2.1142775518054373,
+        "p99_atgt": 0.07193432009395027, "mean_atgt": 0.06475582349729299,
+        "finished": 946, "total": 946, "peak_workers": 10,
+        "spot_gpu_seconds": 1173.5499999999881, "preempted_workers": 4,
+        "requeued": 2},
+}
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return make_worker_spec(ARCH, A100_80G, SLO, mean_context=450.0)
+
+
+def _scfg():
+    return ScaleSimConfig(interval=5.0, provision_delay=10.0,
+                          initial_workers=3)
+
+
+def test_simulate_shim_matches_prerefactor_fixed(spec):
+    res = simulate(generate_trace(WCFG), spec.perf, SLO, spec.kv_capacity,
+                   SimConfig(), n_workers=4)
+    assert res.row() == GOLDEN["colocated_fixed"]
+
+
+def test_simulate_shim_matches_prerefactor_elastic_po2(spec):
+    res = simulate(generate_trace(WCFG), spec.perf, SLO, spec.kv_capacity,
+                   SimConfig(policy="po2", seed=4), n_workers=None)
+    assert res.row() == GOLDEN["colocated_elastic_po2"]
+
+
+def test_disagg_shim_matches_prerefactor(spec):
+    res = simulate_disaggregated(generate_trace(WCFG), SLO, DisaggConfig(),
+                                 spec, spec, n_prefill=2, n_decode=4)
+    assert res.row() == GOLDEN["disagg_fixed"]
+
+
+def test_autoscaled_shim_matches_prerefactor_reactive(spec):
+    scfg = _scfg()
+    res = simulate_autoscaled(
+        diurnal_trace(DIURNAL_CFG, amplitude=0.6, period=120.0), spec, SLO,
+        SimConfig(), scfg, ReactivePolicy(scfg))
+    assert res.row() == GOLDEN["autoscaled_reactive"]
+
+
+def test_autoscaled_shim_matches_prerefactor_forecast(spec):
+    scfg = _scfg()
+    fc = SeasonalNaiveForecaster(ForecastConfig(period=120.0, bin_width=5.0))
+    res = simulate_autoscaled(
+        diurnal_trace(DIURNAL_CFG, amplitude=0.6, period=120.0), spec, SLO,
+        SimConfig(), scfg, ForecastPolicy(scfg, fc))
+    assert res.row() == GOLDEN["autoscaled_forecast"]
+
+
+def test_autoscaled_shim_matches_prerefactor_spot(spec):
+    scfg = _scfg()
+    fc = SeasonalNaiveForecaster(ForecastConfig(period=120.0, bin_width=5.0))
+    mix = SpotMixConfig(discount=0.35, hazard=1.0 / 600.0, spot_frac=0.6)
+    pol = ForecastPolicy(scfg, fc, spot_mix=mix)
+    market = SpotMarket(
+        spot_variant(spec, price=0.35, preempt_hazard=1.0 / 600.0),
+        [PreemptionEvent(t=35.0, frac=0.5),
+         PreemptionEvent(t=160.0, frac=0.5)])
+    res = simulate_autoscaled(
+        diurnal_trace(DIURNAL_CFG, amplitude=0.6, period=120.0), spec, SLO,
+        SimConfig(), scfg, pol, spot=market)
+    assert res.row() == GOLDEN["autoscaled_spot"]
