@@ -16,8 +16,8 @@ from repro.core.scaling import Autoscaler, SpotMixConfig
 from repro.core.slo import PAPER_SLOS
 from repro.core.worker_config import (A100_80G, V100_32G, make_worker_spec,
                                       optimal_worker_config, spot_variant)
-from repro.serving.api import (Disaggregated, FleetSpec, Forecast, PoolSpec,
-                               Scenario, run)
+from repro.serving.api import (Disaggregated, FeedbackScale, FleetSpec,
+                               Forecast, PoolSpec, Scenario, optimize, run)
 from repro.serving.disagg import DisaggConfig, min_cost_disagg
 from repro.serving.forecast import (ForecastConfig, ForecastPolicy,
                                     ReactivePolicy, ScaleSimConfig,
@@ -25,6 +25,7 @@ from repro.serving.forecast import (ForecastConfig, ForecastPolicy,
                                     simulate_autoscaled)
 from repro.serving.simulator import SimConfig, min_workers_for_slo, simulate
 from repro.serving.workload import (WorkloadConfig, diurnal_trace,
+                                    drifting_diurnal_trace,
                                     preemption_trace)
 
 
@@ -184,6 +185,45 @@ def main() -> None:
           f"killed={rep.preempted_workers} requeued={rep.requeued} "
           f"kv_retransfers={rep.kv_retransfers} "
           f"peak=p{rep.n_prefill}/d{rep.n_decode}")
+
+    # closed-loop SLO feedback on a drifted-seasonality trace: the nominal
+    # period stretches 2x across the run, so the open-loop forecast's
+    # per-phase floor goes stale and over-provisions; FeedbackScale shaves
+    # it (gain down to min_gain) while observed attainment saturates, and
+    # optimize() searches the policy space itself — the Plan re-runs to the
+    # searched report exactly
+    print("\nclosed-loop SLO feedback on drifted seasonality "
+          "(+ policy-space optimize):")
+    dcfg = WorkloadConfig(mean_rate=4.0, duration=dur, seed=33, in_mu=5.0,
+                          in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+
+    def drift_fn():
+        return drifting_diurnal_trace(dcfg, amplitude=0.6, period=period,
+                                      drift=1.0)
+
+    def fb_scenario(scaling):
+        return Scenario(workload=drift_fn,
+                        fleet=FleetSpec([PoolSpec(a100, 4)]), slo=slo,
+                        scaling=scaling)
+
+    open_loop = Forecast(period=period, min_workers=2)
+    for label, scaling in (
+            ("open-loop", open_loop),
+            ("feedback",
+             FeedbackScale(base=open_loop, min_gain=0.85, max_gain=1.3,
+                           boost=1.2, window=45.0))):
+        rep = run(fb_scenario(scaling))
+        print(f"  {label:9s} gpu_seconds={rep.gpu_seconds:8.0f} "
+              f"attain={rep.attainment:.3f} peak={rep.peak_workers}")
+    plan = optimize(fb_scenario(FeedbackScale(base=open_loop, min_gain=0.85,
+                                              max_gain=1.3, boost=1.2,
+                                              window=45.0)),
+                    attain_target=0.99,
+                    policy_space={"headroom": (0.9, 1.0, 1.1)})
+    match = run(plan.scenario).row() == plan.report.row()
+    print(f"  optimize  gpu_seconds={plan.cost:8.0f} "
+          f"attain={plan.report.attainment:.3f} params={plan.params} "
+          f"evals={plan.evals} replay_exact={match}")
 
     # diurnal trace through the elastic simulator
     wcfg = WorkloadConfig(mean_rate=4.0, duration=30.0, seed=17, in_mu=5.0,

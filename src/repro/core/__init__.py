@@ -17,9 +17,11 @@ from repro.core.placement import (PlacementConfig, WorkerState,               # 
                                   power_of_two_place)
 from repro.core.rebalance import ErrorTracker, rebalance                      # noqa: F401
 from repro.core.request import ReqState, Request                              # noqa: F401
-from repro.core.scaling import (Autoscaler, AutoscalerConfig,                 # noqa: F401
+from repro.core.scaling import (AttainmentController, Autoscaler,             # noqa: F401
+                                AutoscalerConfig, FeedbackConfig,
                                 SpotMixConfig, split_spot_mix)
-from repro.core.slo import PAPER_SLOS, SLO, slo_attainment                    # noqa: F401
+from repro.core.slo import (PAPER_SLOS, SLO, slo_attainment,                  # noqa: F401
+                            slo_metric_ok, windowed_attainment)
 from repro.core.worker_config import (A100_80G, TPU_V5E, V100_32G,            # noqa: F401
                                       HardwareSpec, WorkerConfig, WorkerSpec,
                                       make_worker_spec,

@@ -107,6 +107,89 @@ class Autoscaler:
         return z > self.cfg.change_z
 
 
+# ---- SLO-feedback gain control -----------------------------------------------
+
+@dataclasses.dataclass
+class FeedbackConfig:
+    """Closed-loop correction on *observed* SLO attainment.
+
+    The open-loop policies (reactive, forecast) size the fleet from demand
+    estimates alone; when the rate model is miscalibrated (drifted
+    seasonality, burst regime change) they either violate SLOs or
+    over-provision. The feedback controller multiplies the open-loop target
+    by a gain driven by the windowed attainment the cluster actually
+    delivered:
+
+      * attainment below ``slo_target - deadband`` → multiply the gain by
+        ``boost`` (fast multiplicative attack on misses), at most once per
+        ``attack_cooldown`` seconds (default: the window length) — the
+        misses that triggered a boost stay *in* the window for a while, and
+        re-boosting on the same stale evidence every epoch would race the
+        gain to ``max_gain`` before the extra capacity could even boot;
+      * attainment at or above ``slo_target + deadband`` → subtract
+        ``decay`` (slow additive release while the SLO saturates), down to
+        ``min_gain`` — below 1.0 this shaves open-loop over-provisioning;
+      * inside the deadband → hold (hysteresis: no oscillation on a flat
+        trace).
+
+    ``window`` is the attainment observation window in seconds;
+    ``min_samples`` keeps the controller inert until the window holds a
+    meaningful sample. An infinite ``deadband`` disables both thresholds,
+    making the closed loop bit-for-bit identical to its open-loop base."""
+    slo_target: float = 0.99
+    deadband: float = 0.005
+    boost: float = 1.3
+    decay: float = 0.02
+    max_gain: float = 3.0
+    min_gain: float = 1.0
+    window: float = 30.0
+    min_samples: int = 8
+    attack_cooldown: Optional[float] = None   # None: one boost per window
+
+
+class AttainmentController:
+    """The MIAD gain state machine of :class:`FeedbackConfig` (multiplicative
+    increase on SLO misses, additive decrease on saturation).
+
+    Pure arithmetic over (ok, total) observations — no simulator types — so
+    its hysteresis and monotonicity properties are unit-testable in
+    isolation (tests/test_feedback.py)."""
+
+    def __init__(self, cfg: Optional[FeedbackConfig] = None):
+        self.cfg = cfg if cfg is not None else FeedbackConfig()
+        self.gain = 1.0
+        self._last_attack = -math.inf
+
+    def observe(self, t: float, ok: int, total: int) -> float:
+        """Fold one windowed (ok, total) attainment sample, observed at
+        time ``t``, into the gain."""
+        cfg = self.cfg
+        if total < cfg.min_samples:
+            return self.gain
+        att = ok / total
+        lo = cfg.slo_target - cfg.deadband
+        hi = cfg.slo_target + cfg.deadband
+        if math.isfinite(hi):
+            # a reachable release threshold even when target+deadband > 1
+            hi = min(hi, 1.0)
+        cooldown = cfg.attack_cooldown if cfg.attack_cooldown is not None \
+            else cfg.window
+        if att < lo:
+            if t - self._last_attack >= cooldown:
+                self.gain = min(self.gain * cfg.boost, cfg.max_gain)
+                self._last_attack = t
+        elif att >= hi:
+            self.gain = max(self.gain - cfg.decay, cfg.min_gain)
+        return self.gain
+
+    def apply(self, target: int) -> int:
+        """Scale an open-loop worker target by the current gain. Gain 1.0
+        returns the target untouched — the exact open-loop integer."""
+        if self.gain == 1.0:
+            return target
+        return max(int(math.ceil(target * self.gain)), 0)
+
+
 # ---- spot / on-demand mix planning -------------------------------------------
 
 @dataclasses.dataclass

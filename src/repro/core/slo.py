@@ -32,6 +32,51 @@ def slo_attainment(finished: Iterable, total: int, slo: "SLO") -> float:
     return ok / max(total, 1)
 
 
+def slo_metric_ok(r, slo: "SLO", metric: str = "both") -> bool:
+    """Per-request SLO verdict restricted to one dimension.
+
+    ``ttft`` judges the prefill hop alone (what a disaggregated prefill
+    side controls), ``atgt`` the decode stream alone (the decode side's
+    job), ``both`` is the canonical :meth:`Request.slo_ok`. A dimension the
+    request never exercised (no first token / single-token output) passes,
+    matching ``slo_ok``'s convention."""
+    if metric == "both":
+        return r.slo_ok(slo)
+    if metric == "ttft":
+        v, budget = r.ttft(), slo.ttft
+    elif metric == "atgt":
+        v, budget = r.atgt(), slo.atgt
+    else:
+        raise ValueError(f"unknown SLO metric {metric!r}")
+    return v is None or v <= budget
+
+
+def windowed_attainment(finished: Iterable, slo: "SLO", t_now: float,
+                        window: float, metric: str = "both",
+                        ttft_pending: Iterable = ()) -> tuple:
+    """Windowed observed attainment for the SLO-feedback controllers:
+    (ok, total) over requests finished in ``[t_now - window, t_now]``
+    judged by ``metric``, plus assured misses among ``ttft_pending`` —
+    requests still waiting whose TTFT budget already expired (counted
+    whenever the metric watches TTFT). Those keep the feedback signal
+    alive in congestion collapse, when nothing finishes at all. One
+    definition shared by every topology, so the per-side controllers of a
+    disaggregated cluster and the colocated loop can never drift apart on
+    the signal itself."""
+    t0 = t_now - window
+    ok = total = 0
+    for r in finished:
+        if r.t_finish is not None and r.t_finish >= t0:
+            total += 1
+            if slo_metric_ok(r, slo, metric):
+                ok += 1
+    if metric != "atgt":
+        for r in ttft_pending:
+            if r.t_first_token is None and t_now - r.arrival > slo.ttft:
+                total += 1
+    return ok, total
+
+
 # The paper's Table 2 (A100 testbed), in seconds.
 PAPER_SLOS = {
     "llama2-70b": SLO(ttft=1.6, atgt=0.075),

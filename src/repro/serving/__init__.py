@@ -4,19 +4,20 @@ continuous-batching engine, cluster control plane, workload generators and
 length prediction. ``__all__`` is the supported public surface — guarded by
 tests/test_scenario_api.py against drifting from the documented names."""
 from repro.serving.api import (Colocated, Disaggregated,             # noqa: F401
-                               FixedScale, FleetSpec, Forecast, Plan,
-                               PolicyScale, PoolSpec, Reactive, RunReport,
-                               Scenario, optimize, run)
+                               FeedbackScale, FixedScale, FleetSpec,
+                               Forecast, Plan, PolicyScale, PoolSpec,
+                               Reactive, RunReport, Scenario, SideOverride,
+                               optimize, run)
 from repro.serving.cluster import ClusterConfig, ServingCluster      # noqa: F401
 from repro.serving.disagg import (DisaggConfig, DisaggResult,        # noqa: F401
                                   min_cost_disagg, ratio_pool_fn,
                                   simulate_disaggregated)
 from repro.serving.engine import EngineConfig, PagedEngine           # noqa: F401
-from repro.serving.forecast import (EWMAForecaster, ForecastConfig,  # noqa: F401
-                                    ForecastPolicy, ReactivePolicy,
-                                    ScaleSimConfig, ScaleSimResult,
-                                    SeasonalNaiveForecaster, SpotMarket,
-                                    simulate_autoscaled)
+from repro.serving.forecast import (EWMAForecaster, FeedbackPolicy,  # noqa: F401
+                                    ForecastConfig, ForecastPolicy,
+                                    ReactivePolicy, ScaleSimConfig,
+                                    ScaleSimResult, SeasonalNaiveForecaster,
+                                    SpotMarket, simulate_autoscaled)
 from repro.serving.length_predictor import LengthPredictor           # noqa: F401
 from repro.serving.simulator import (SimConfig, SimResult,           # noqa: F401
                                      min_workers_for_slo,
@@ -24,19 +25,21 @@ from repro.serving.simulator import (SimConfig, SimResult,           # noqa: F40
 from repro.serving.workload import (PreemptionEvent, WorkloadConfig,  # noqa: F401
                                     burst_trace, clone_trace,
                                     diurnal_rate_fn, diurnal_trace,
-                                    generate_trace, nonhomogeneous_trace,
-                                    preemption_trace, sample_lengths)
+                                    drifting_diurnal_rate_fn,
+                                    drifting_diurnal_trace, generate_trace,
+                                    nonhomogeneous_trace, preemption_trace,
+                                    sample_lengths)
 
-# The documented public surface (README "Scenario API" + ROADMAP PR-4).
+# The documented public surface (README "Scenario API" + ROADMAP PR-4/5).
 __all__ = [
     # declarative Scenario API (repro.serving.api)
     "Scenario", "FleetSpec", "PoolSpec", "Colocated", "Disaggregated",
-    "FixedScale", "Reactive", "Forecast", "PolicyScale", "RunReport",
-    "Plan", "run", "optimize",
+    "FixedScale", "Reactive", "Forecast", "FeedbackScale", "SideOverride",
+    "PolicyScale", "RunReport", "Plan", "run", "optimize",
     # markets + scaling policies
     "SpotMarket", "ScaleSimConfig", "ScaleSimResult", "ReactivePolicy",
-    "ForecastPolicy", "SeasonalNaiveForecaster", "EWMAForecaster",
-    "ForecastConfig",
+    "ForecastPolicy", "FeedbackPolicy", "SeasonalNaiveForecaster",
+    "EWMAForecaster", "ForecastConfig",
     # legacy simulators (deprecation shims over run()/optimize())
     "SimConfig", "SimResult", "simulate", "min_workers_for_slo",
     "DisaggConfig", "DisaggResult", "simulate_disaggregated",
@@ -44,8 +47,9 @@ __all__ = [
     "run_heartbeat_loop",
     # workload generation
     "WorkloadConfig", "generate_trace", "nonhomogeneous_trace",
-    "burst_trace", "diurnal_trace", "diurnal_rate_fn", "preemption_trace",
-    "PreemptionEvent", "sample_lengths", "clone_trace",
+    "burst_trace", "diurnal_trace", "diurnal_rate_fn",
+    "drifting_diurnal_trace", "drifting_diurnal_rate_fn",
+    "preemption_trace", "PreemptionEvent", "sample_lengths", "clone_trace",
     # engine + cluster + prediction
     "EngineConfig", "PagedEngine", "ClusterConfig", "ServingCluster",
     "LengthPredictor",

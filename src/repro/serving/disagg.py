@@ -33,13 +33,14 @@ dimension (the cheapest (ratio_p, ratio_d, n_p, n_d) point wins).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.placement import WorkerState, best_fit_place, jsq_place
 from repro.core.request import ReqState, Request
-from repro.core.slo import SLO
+from repro.core.slo import SLO, windowed_attainment
 from repro.core.worker_config import WorkerSpec
+from repro.serving.lifecycle import (WorkerLifecycle, mark_kv_loss,
+                                     mark_requeue)
 
 # One pool type: (worker spec, number of workers of that type).
 Pool = Tuple[WorkerSpec, int]
@@ -70,6 +71,16 @@ class DisaggConfig:
     # meets the TTFT budget — what the autoscaled disaggregated scenarios
     # use, since it makes added capacity actually absorb the tail.
     prefill_router: str = "packed"     # packed | earliest
+    # Decode-pool placement order. "packed" is Algorithm 1's bin order
+    # (fullest feasible worker first) — like the packed prefill router it
+    # is blind to the worker's *clock*, so a worker whose just-run batch
+    # left it top-ranked keeps absorbing ties while its event-batched
+    # clock sits a whole decode segment past the beat; every request
+    # placed there stalls that long before its next token, an ATGT tail
+    # that does not shrink with pool size. "earliest" ranks feasible
+    # workers by clock backlog first (then the affine routing score, then
+    # Algorithm 1's packing), mirroring the wait-aware prefill router.
+    decode_router: str = "packed"      # packed | earliest
 
 
 def prefill_affinity(spec: WorkerSpec, l_in: int) -> float:
@@ -195,111 +206,24 @@ def _mix_label(prefill_pools: Sequence[Pool],
 # market-reclaim handler. The topology below drives either kind through the
 # same step sequence.
 
-class FixedPrefillSide:
-    """Static prefill pool groups. A spot market may reclaim spot workers
-    out of the fixed pool (not replaced): instant kill requeues the queued
-    prompts (nearly free — no KV existed), a notice window drains first."""
+class _FixedSide:
+    """Shared shell of the two static disaggregated sides: routed worker
+    groups plus the one :class:`WorkerLifecycle` reclaim machine. Subclasses
+    supply only the lost-request extraction, the idle test and the recovery
+    marking — the whole condemn/kill/reap flow is the shared helper's."""
 
-    def __init__(self, pools: List[Tuple[WorkerSpec, List[PrefillSimWorker]]],
-                 rng=None, notice_s: float = 0.0):
-        self.pools = pools
-        self.rng = rng
-        self.notice_s = notice_s
-        self.condemned: Dict[int, float] = {}
-        self.killed = 0
-        self.drained_ok = 0
-        self.requeued = 0
-        self.gpu_s = 0.0
-        self.spot_gpu_s = 0.0
-        self.epochs: List = []
-
-    def groups(self):
-        return self.pools
-
-    def active(self) -> List[PrefillSimWorker]:
-        return [w for _, g in self.pools for w in g]
-
-    def note_arrival(self) -> None:
-        pass
-
-    def begin_beat(self, topo, t: float) -> None:
-        if self.condemned:
-            topo.requeue(self._reap(t), side="prefill")
-
-    def end_beat(self, topo, t: float, t_next: float) -> None:
-        pass
-
-    def on_reclaim(self, t: float, ev) -> List[Request]:
-        from repro.serving.forecast import mark_requeue
-        pool = [w for w in self.active() if w.spec.is_spot
-                and w.id not in self.condemned]
-        if not pool:
-            return []
-        n_kill = min(max(int(math.ceil(ev.frac * len(pool))), 1), len(pool))
-        victims = self.rng.choice(len(pool), size=n_kill, replace=False)
-        lost_all: List[Request] = []
-        for vi in victims:
-            w = pool[vi]
-            if self.notice_s > 0.0:
-                w.draining = True
-                self.condemned[w.id] = t + self.notice_s
-            else:
-                lost_all += self._kill(w, t, mark_requeue)
-        return lost_all
-
-    def _kill(self, w: PrefillSimWorker, t: float, mark) -> List[Request]:
-        for _, g in self.pools:
-            if w in g:
-                g.remove(w)
-                break
-        self.condemned.pop(w.id, None)
-        lost = list(w.queue)
-        w.queue.clear()
-        w.pending_tokens = 0
-        for r in lost:
-            mark(r, t)
-        self.killed += 1
-        self.requeued += len(lost)
-        return lost
-
-    def _reap(self, t: float) -> List[Request]:
-        from repro.serving.forecast import mark_requeue
-        lost: List[Request] = []
-        for wid, deadline in list(self.condemned.items()):
-            w = next((x for x in self.active() if x.id == wid), None)
-            if w is None:
-                self.condemned.pop(wid)
-                continue
-            if not w.queue:              # drained inside the notice window
-                for _, g in self.pools:
-                    if w in g:
-                        g.remove(w)
-                        break
-                self.condemned.pop(wid)
-                self.drained_ok += 1
-            elif t >= deadline:
-                lost += self._kill(w, t, mark_requeue)
-        return lost
-
-
-class FixedDecodeSide:
-    """Static decode pool groups (split-phase WorkerStates + SimWorkers).
-    Market reclaims lose the victims' KV: requests requeue to the *prefill*
-    queue and pay a full context re-prefill plus the KV re-transfer."""
+    side = "prefill"
 
     def __init__(self, pools: List[Tuple[WorkerSpec, List]],
-                 sims: Dict, rng=None, notice_s: float = 0.0):
+                 rng=None, notice_s: float = 0.0):
         self.pools = pools
-        self.sims = sims
-        self.rng = rng
-        self.notice_s = notice_s
-        self.condemned: Dict[int, float] = {}
-        self.killed = 0
-        self.drained_ok = 0
-        self.requeued = 0
         self.gpu_s = 0.0
         self.spot_gpu_s = 0.0
         self.epochs: List = []
+        self.life = WorkerLifecycle(
+            rng, notice_s=notice_s, extract=self._extract, mark=self._mark,
+            idle=self._is_idle, remove=self._remove,
+            on_condemn=lambda w: setattr(w, "draining", True))
 
     def groups(self):
         return self.pools
@@ -311,68 +235,85 @@ class FixedDecodeSide:
         pass
 
     def begin_beat(self, topo, t: float) -> None:
-        if self.condemned:
-            topo.requeue(self._reap(t), side="decode")
+        if self.life.condemned:
+            topo.requeue(self.life.reap(t, self._lookup), side=self.side)
 
     def end_beat(self, topo, t: float, t_next: float) -> None:
         pass
 
     def on_reclaim(self, t: float, ev) -> List[Request]:
-        pool = [w for w in self.active() if w.spec.is_spot
-                and w.id not in self.condemned]
-        if not pool:
-            return []
-        n_kill = min(max(int(math.ceil(ev.frac * len(pool))), 1), len(pool))
-        victims = self.rng.choice(len(pool), size=n_kill, replace=False)
-        lost_all: List[Request] = []
-        for vi in victims:
-            w = pool[vi]
-            if self.notice_s > 0.0:
-                w.draining = True       # best-fit/JSQ skip draining workers
-                self.condemned[w.id] = t + self.notice_s
-            else:
-                lost_all += self._kill(w, t)
-        return lost_all
+        return self.life.reclaim(t, ev, self.life.eligible(self.active()))
 
-    def _kill(self, w, t: float) -> List[Request]:
-        from repro.serving.forecast import mark_kv_loss
+    @property
+    def killed(self) -> int:
+        return self.life.killed
+
+    @property
+    def drained_ok(self) -> int:
+        return self.life.drained_ok
+
+    @property
+    def requeued(self) -> int:
+        return self.life.requeued
+
+    # ---- WorkerLifecycle adapters -------------------------------------------
+    def _lookup(self, wid: int):
+        return next((x for x in self.active() if x.id == wid), None)
+
+    def _remove(self, w) -> None:
         for _, g in self.pools:
             if w in g:
                 g.remove(w)
                 break
-        self.condemned.pop(w.id, None)
-        sim = self.sims.pop(w.id, None)
+
+
+class FixedPrefillSide(_FixedSide):
+    """Static prefill pool groups. A spot market may reclaim spot workers
+    out of the fixed pool (not replaced): instant kill requeues the queued
+    prompts (nearly free — no KV existed), a notice window drains first."""
+
+    side = "prefill"
+    _mark = staticmethod(mark_requeue)
+
+    def _extract(self, w: PrefillSimWorker) -> List[Request]:
+        lost = list(w.queue)
+        w.queue.clear()
+        w.pending_tokens = 0
+        return lost
+
+    def _is_idle(self, w: PrefillSimWorker) -> bool:
+        return not w.queue
+
+
+class FixedDecodeSide(_FixedSide):
+    """Static decode pool groups (split-phase WorkerStates + SimWorkers).
+    Market reclaims lose the victims' KV: requests requeue to the *prefill*
+    queue and pay a full context re-prefill plus the KV re-transfer."""
+
+    side = "decode"
+    _mark = staticmethod(mark_kv_loss)
+
+    def __init__(self, pools: List[Tuple[WorkerSpec, List]],
+                 sims: Dict, rng=None, notice_s: float = 0.0):
+        super().__init__(pools, rng=rng, notice_s=notice_s)
+        self.sims = sims
+
+    def _extract(self, w) -> List[Request]:
+        sim = self.sims.get(w.id)
         lost = w.ongoing + w.new_batch + (sim.preempted if sim else [])
-        for r in lost:
-            mark_kv_loss(r, t)
         w.ongoing.clear()
         w.new_batch.clear()
         w.mark_dirty()
-        self.killed += 1
-        self.requeued += len(lost)
         return lost
 
-    def _reap(self, t: float) -> List[Request]:
-        lost: List[Request] = []
-        for wid, deadline in list(self.condemned.items()):
-            w = next((x for x in self.active() if x.id == wid), None)
-            if w is None:
-                self.condemned.pop(wid)
-                continue
-            sim = self.sims.get(wid)
-            idle = not w.ongoing and not w.new_batch \
-                and not (sim and sim.preempted)
-            if idle:
-                for _, g in self.pools:
-                    if w in g:
-                        g.remove(w)
-                        break
-                self.sims.pop(wid, None)
-                self.condemned.pop(wid)
-                self.drained_ok += 1
-            elif t >= deadline:
-                lost += self._kill(w, t)
-        return lost
+    def _is_idle(self, w) -> bool:
+        sim = self.sims.get(w.id)
+        return not w.ongoing and not w.new_batch \
+            and not (sim and sim.preempted)
+
+    def _remove(self, w) -> None:
+        super()._remove(w)
+        self.sims.pop(w.id, None)
 
 
 class ManagedSide:
@@ -467,6 +408,25 @@ class DisaggTopology:
         return len(self.queued_p) if side == "prefill" \
             else len(self.queued_d)
 
+    def slo_window(self, side: str, t_now: float, window: float,
+                   metric: str = "both") -> Tuple[int, int]:
+        """Windowed observed attainment for the SLO-feedback policies
+        (``core.slo.windowed_attainment``: ``ttft`` for the prefill side,
+        ``atgt`` for decode; TTFT-expired waiting prompts are assured
+        misses), plus the decode queue's own assured misses — a handed-off
+        request whose decode-queue stall alone already burned the whole
+        per-token budget of its predicted stream."""
+        ok, total = windowed_attainment(self.finished, self.slo, t_now,
+                                        window, metric,
+                                        ttft_pending=self.queued_p)
+        if metric != "ttft":
+            for r in self.queued_d:
+                if r.t_first_token is not None \
+                        and t_now - r.t_first_token \
+                        > self.slo.atgt * max(r.l_pred - 1, 1):
+                    total += 1
+        return ok, total
+
     def fire(self, t: float, ev) -> None:
         side = self.decode if getattr(ev, "side", "decode") == "decode" \
             else self.prefill
@@ -543,6 +503,8 @@ class DisaggTopology:
         return None
 
     def place_decode(self, r: Request) -> Optional[WorkerState]:
+        if self.cfg.decode_router == "earliest":
+            return self._place_decode_earliest(r)
         for spec, group in sorted(self.decode.groups(),
                                   key=lambda p: decode_affinity(
                                       p[0], r, self.cfg.gamma)):
@@ -551,6 +513,36 @@ class DisaggTopology:
             else:
                 w = jsq_place(group, r, allow_new=False)
             if w is not None:
+                return w
+        return None
+
+    def _place_decode_earliest(self, r: Request) -> Optional[WorkerState]:
+        """Wait-aware decode placement mirroring the 'earliest' prefill
+        router: rank candidates by how far the worker's event-batched clock
+        overshot this beat (the stall every new placement inherits before
+        its next token), then by the affine pool score, then by Algorithm
+        1's packing order — and take the first constraint-feasible one.
+        Unlike the packed order this never keeps piling ties onto a bin
+        whose clock sits a whole decode segment ahead, so the packed
+        router's scale-invariant ATGT tie-pile tail disappears
+        (tests/test_decode_router.py pins it)."""
+        now = self._now
+        sims = self.decode.sims
+        ranked = []
+        for spec, group in self.decode.groups():
+            aff = decode_affinity(spec, r, self.cfg.gamma)
+            for w in group:
+                if not w.alive or w.draining:
+                    continue
+                sim = sims.get(w.id)
+                backlog = max(sim.t - now, 0.0) if sim is not None else 0.0
+                ranked.append((backlog, aff, -w.capacity_norm(), w.id, w))
+        ranked.sort(key=lambda e: e[:4])
+        for _, _, _, _, w in ranked:
+            ok = w.feasible([r]) if self.cfg.policy == "aladdin" \
+                else w._admit_naive([r])
+            if ok:
+                w.place(r)
                 return w
         return None
 
@@ -659,7 +651,8 @@ def simulate_disaggregated(trace: Sequence[Request], slo: SLO,
                                    gamma=cfg.gamma, theta=cfg.theta,
                                    kv_transfer_bw=cfg.kv_transfer_bw,
                                    kv_transfer_lat=cfg.kv_transfer_lat,
-                                   prefill_router=cfg.prefill_router),
+                                   prefill_router=cfg.prefill_router,
+                                   decode_router=cfg.decode_router),
         scaling=api.FixedScale(), predictor=predictor, observer=observer,
         seed=cfg.seed)
     return api.run(scenario).to_disagg_result()
@@ -735,7 +728,8 @@ def min_cost_disagg(trace_fn, slo: SLO, cfg: DisaggConfig,
                                    gamma=cfg.gamma, theta=cfg.theta,
                                    kv_transfer_bw=cfg.kv_transfer_bw,
                                    kv_transfer_lat=cfg.kv_transfer_lat,
-                                   prefill_router=cfg.prefill_router),
+                                   prefill_router=cfg.prefill_router,
+                                   decode_router=cfg.decode_router),
         scaling=api.FixedScale(), predictor=predictor, seed=cfg.seed)
     plan = api.optimize(scenario, objective="cost",
                         attain_target=attain_target,

@@ -41,11 +41,14 @@ import dataclasses
 import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.request import ReqState, Request
-from repro.core.scaling import (Autoscaler, AutoscalerConfig, SpotMixConfig,
-                                split_spot_mix)
+from repro.core.request import Request
+from repro.core.scaling import (AttainmentController, Autoscaler,
+                                AutoscalerConfig, FeedbackConfig,
+                                SpotMixConfig, split_spot_mix)
 from repro.core.slo import SLO
 from repro.core.worker_config import WorkerSpec
+from repro.serving.lifecycle import (WorkerLifecycle,          # noqa: F401
+                                     mark_kv_loss, mark_requeue)
 from repro.serving.simulator import SimConfig
 from repro.serving.workload import PreemptionEvent
 
@@ -254,6 +257,61 @@ class ForecastPolicy:
         return n_od, n_spot
 
 
+class FeedbackPolicy:
+    """Closed-loop SLO-feedback scaling: an open-loop policy (reactive or
+    forecast) proposes each epoch's worker target, and an
+    :class:`~repro.core.scaling.AttainmentController` corrects it from the
+    *observed* windowed SLO attainment the cluster delivered.
+
+    The wrapper composes rather than replaces: the inner policy keeps its
+    whole demand model (Eq. 7 fit, forecaster, seasonal floor, spot split),
+    so the feedback term only has to absorb what the demand model got wrong
+    — a drifted seasonality boosts the gain at the mispredicted ramps and
+    releases it in the over-provisioned troughs. ``metric`` selects which
+    SLO dimension the controller watches (``both`` for a colocated tier,
+    ``ttft`` for a prefill side, ``atgt`` for a decode side); the pool feeds
+    ``observe_slo`` once per scaling epoch from the topology's windowed
+    attainment. With an infinite deadband the controller never moves off
+    gain 1.0 and the closed loop reproduces the open-loop policy
+    bit-for-bit (pinned by tests/test_feedback.py)."""
+
+    name = "feedback"
+
+    def __init__(self, inner, fcfg: Optional[FeedbackConfig] = None,
+                 metric: str = "both"):
+        self.inner = inner
+        self.fcfg = fcfg or FeedbackConfig()
+        self.metric = metric
+        self.controller = AttainmentController(self.fcfg)
+
+    @property
+    def scfg(self) -> ScaleSimConfig:
+        return self.inner.scfg
+
+    @property
+    def spot_mix(self):
+        return getattr(self.inner, "spot_mix", None)
+
+    @property
+    def gain(self) -> float:
+        return self.controller.gain
+
+    @property
+    def window(self) -> float:
+        return self.fcfg.window
+
+    def observe_slo(self, t: float, ok: int, total: int) -> None:
+        self.controller.observe(t, ok, total)
+
+    def target(self, t: float, rate: float, needed: int,
+               queued: int) -> int:
+        return self.controller.apply(
+            self.inner.target(t, rate, needed, queued))
+
+    def split(self, t: float, target: int) -> Tuple[int, int]:
+        return self.inner.split(t, target)
+
+
 # ---- autoscaled simulation ---------------------------------------------------
 
 @dataclasses.dataclass
@@ -319,25 +377,6 @@ class ScaleSimResult:
         return d
 
 
-def mark_kv_loss(r: Request, t: float) -> None:
-    """Default reclaim marking: the victim's KV is gone — the request
-    requeues keeping ``l_out`` and pays a full context re-prefill plus the
-    stall from the reclaim instant (settled by the simulator core)."""
-    r.state = ReqState.QUEUED
-    r.worker = None
-    r.t_preempted = t
-    r.preempt_count += 1
-
-
-def mark_requeue(r: Request, t: float) -> None:
-    """Prefill-side reclaim marking: no KV existed yet, so the only cost is
-    the extra queue wait — which TTFT already measures (no ``t_preempted``
-    stall is armed; the token stream has not started)."""
-    r.state = ReqState.QUEUED
-    r.worker = None
-    r.preempt_count += 1
-
-
 class ManagedPool:
     """Policy-driven worker lifecycle extracted from the pre-Scenario
     ``simulate_autoscaled``: boot delay (billed while booting), voluntary
@@ -361,29 +400,37 @@ class ManagedPool:
         self.policy = policy
         self.rng = rng
         self.spot_spec = spot_spec
-        self.notice_s = notice_s
         self.name = name
         self._new_worker = new_worker
         self._on_spawn = on_spawn
-        self._on_kill = on_kill
         self._load = load
         self._idle = idle
-        self._mark = mark
         self.sims = sims if sims is not None else {}
         self.factory = None                # managed pools never place-to-open
         self.beats_per_epoch = max(int(round(scfg.interval / heartbeat)), 1)
         self.online: List = []
         self.draining: List = []
         self.booting: List[List] = []      # [online_at, worker]
-        self.condemned: Dict[int, float] = {}    # wid -> notice deadline
+        self.life = WorkerLifecycle(
+            rng, notice_s=notice_s, extract=on_kill, mark=mark, idle=idle,
+            remove=self._remove, on_condemn=self._condemn)
         self.epochs: List[EpochStat] = []
         self.acc = {"gpu_s": 0.0, "spot_gpu_s": 0.0, "beat": 0,
-                    "arrivals": 0, "busy_peak": 0, "peak": 0, "killed": 0,
-                    "requeued": 0, "drained_ok": 0}
+                    "arrivals": 0, "busy_peak": 0, "peak": 0}
         for _ in range(max(scfg.initial_workers, scfg.min_workers)):
             w = self._new_worker(self.spec)
             self.online.append(w)
             self._on_spawn(w, 0.0)
+
+    # ---- WorkerLifecycle adapters -------------------------------------------
+    def _remove(self, w) -> None:
+        (self.online if w in self.online else self.draining).remove(w)
+
+    def _condemn(self, w) -> None:
+        # the provider is taking it back: drain immediately (no admissions)
+        if w in self.online:
+            self.online.remove(w)
+            self.draining.append(w)
 
     # ---- accessors the topologies use ---------------------------------------
     @property
@@ -396,15 +443,15 @@ class ManagedPool:
 
     @property
     def killed(self) -> int:
-        return self.acc["killed"]
+        return self.life.killed
 
     @property
     def drained_ok(self) -> int:
-        return self.acc["drained_ok"]
+        return self.life.drained_ok
 
     @property
     def requeued(self) -> int:
-        return self.acc["requeued"]
+        return self.life.requeued
 
     @property
     def peak(self) -> int:
@@ -428,17 +475,14 @@ class ManagedPool:
             w = b[1]
             self.online.append(w)
             self._on_spawn(w, t)
-        if self.condemned:
+        if self.life.condemned:
             topo.requeue(self.reap_condemned(t), side=self.name)
 
     def end_beat(self, topo, t: float, t_next: float) -> None:
         # retire drained workers (billing stops with this heartbeat); a
         # condemned worker that got here finished inside its notice window
         for w in list(self.draining):
-            if self._idle(w):
-                self.draining.remove(w)
-                if self.condemned.pop(w.id, None) is not None:
-                    self.acc["drained_ok"] += 1
+            self.life.retire_if_idle(w)
         busy = sum(1 for w in self.online if self._load(w) > 0)
         self.acc["busy_peak"] = max(self.acc["busy_peak"], busy)
         self.acc["peak"] = max(self.acc["peak"], len(self.online))
@@ -452,11 +496,22 @@ class ManagedPool:
         self.acc["beat"] += 1
         if self.acc["beat"] % self.beats_per_epoch == 0:
             n_queued = topo.backlog_len(self.name)
-            self._scale_epoch(t_next, busy, n_queued)
+            self._scale_epoch(topo, t_next, busy, n_queued)
 
-    def _scale_epoch(self, t_next: float, busy: int, n_queued: int) -> None:
+    def _scale_epoch(self, topo, t_next: float, busy: int,
+                     n_queued: int) -> None:
         scfg = self.scfg
         rate = self.acc["arrivals"] / scfg.interval
+        # feedback policies close the loop on what the cluster actually
+        # delivered: feed them the topology's windowed observed attainment
+        # (a pure read — open-loop policies skip this entirely)
+        observe = getattr(self.policy, "observe_slo", None)
+        if observe is not None:
+            ok, total = topo.slo_window(
+                self.name, t_next, getattr(self.policy, "window",
+                                           scfg.interval),
+                getattr(self.policy, "metric", "both"))
+            observe(t_next, ok, total)
         # workers needed = peak busy set, plus enough extra workers to
         # absorb any placement backlog at the typical per-worker batch
         if n_queued:
@@ -498,7 +553,7 @@ class ManagedPool:
             # taking it back regardless)
             while want > 0 and self.draining:
                 cand = [w for w in self.draining
-                        if w.id not in self.condemned]
+                        if w.id not in self.life.condemned]
                 if not cand:
                     break
                 w = cand[-1]
@@ -537,66 +592,25 @@ class ManagedPool:
     # ---- market reclaims -----------------------------------------------------
     def on_reclaim(self, t: float, ev: PreemptionEvent) -> List[Request]:
         """A market reclaim: take ceil(frac * spot pool) spot workers —
-        online, draining or still booting. Without a notice window the
-        victims die instantly and their in-flight work requeues with the
-        recovery cost armed; with one they are condemned to drain until
-        ``t + notice_s``. Returns the requests knocked back into the queue."""
-        # workers already condemned by an earlier event are not fresh
-        # capacity the market can take again (the fixed-side pools apply
-        # the same exclusion); with notice_s == 0 nothing is ever
-        # condemned, so the legacy instant-kill path is untouched
-        pool = [w for w in self.online
-                if w.spec.is_spot and w.id not in self.condemned] \
-            + [w for w in self.draining
-               if w.spec.is_spot and w.id not in self.condemned]
+        online, draining or still booting. The shared
+        :class:`WorkerLifecycle` machine decides instant-kill vs condemn;
+        a cancelled boot never held requests (it was billed, which
+        gpu_seconds already reflects). Returns the requests knocked back
+        into the queue."""
+        pool = self.life.eligible(self.online) \
+            + self.life.eligible(self.draining)
         boots = [b for b in self.booting if b[1].spec.is_spot]
-        alive = len(pool) + len(boots)
-        if alive == 0:
-            return []
-        n_kill = min(max(int(math.ceil(ev.frac * alive)), 1), alive)
-        victims = self.rng.choice(alive, size=n_kill, replace=False)
-        lost_all: List[Request] = []
-        for vi in victims:
-            if vi < len(pool):
-                w = pool[vi]
-                if self.notice_s > 0.0:
-                    if w in self.online:
-                        self.online.remove(w)
-                        self.draining.append(w)
-                    self.condemned[w.id] = t + self.notice_s
-                else:
-                    lost_all += self._kill(w, t)
-            else:
-                # a cancelled boot never held requests (it was billed,
-                # which gpu_seconds already reflects)
-                self.booting.remove(boots[vi - len(pool)])
-        return lost_all
+        return self.life.reclaim(t, ev, pool, boots=boots,
+                                 cancel_boot=self.booting.remove)
 
     def reap_condemned(self, t: float) -> List[Request]:
         """Kill condemned workers whose notice deadline has passed; workers
         that drained empty first are retired (and counted ``drained_ok``)
         by the regular end-of-beat retirement."""
-        lost_all: List[Request] = []
-        for wid, deadline in list(self.condemned.items()):
-            if t < deadline:
-                continue
-            w = next((x for x in self.draining if x.id == wid), None)
-            if w is None:                # already retired as drained_ok
-                self.condemned.pop(wid, None)
-                continue
-            lost_all += self._kill(w, t)
-        return lost_all
-
-    def _kill(self, w, t: float) -> List[Request]:
-        (self.online if w in self.online else self.draining).remove(w)
-        self.condemned.pop(w.id, None)
-        lost = self._on_kill(w)
-        for r in lost:
-            self._mark(r, t)
-        # only serving-capable workers count as mid-flight reclaims
-        self.acc["requeued"] += len(lost)
-        self.acc["killed"] += 1
-        return lost
+        return self.life.reap(
+            t, lambda wid: next((x for x in self.draining if x.id == wid),
+                                None),
+            retire_idle=False)
 
 
 def simulate_autoscaled(trace: Sequence[Request], spec: WorkerSpec, slo: SLO,

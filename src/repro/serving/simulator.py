@@ -14,7 +14,6 @@ homogeneous fleet and remain the default."""
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.perf_model import PerfModel
@@ -23,9 +22,10 @@ from repro.core.placement import (PlacementConfig, WorkerState,
                                   power_of_two_place)
 from repro.core.rebalance import ErrorTracker, rebalance
 from repro.core.request import ReqState, Request
-from repro.core.slo import SLO
+from repro.core.slo import SLO, windowed_attainment
 from repro.core.worker_config import WorkerSpec
 from repro.serving.length_predictor import LengthPredictor
+from repro.serving.lifecycle import WorkerLifecycle, mark_kv_loss
 
 
 def run_heartbeat_loop(trace: Sequence[Request], heartbeat: float,
@@ -278,24 +278,54 @@ class FixedPool:
     fits — the min-cost oracle. A spot market may still reclaim workers out
     of a fixed fleet (they are simply not replaced): with a notice window the
     victim drains (``WorkerState.draining`` keeps placement away) and is
-    killed at the deadline if work remains."""
+    killed at the deadline if work remains — all driven by the shared
+    :class:`~repro.serving.lifecycle.WorkerLifecycle` machine."""
 
     def __init__(self, workers: List[WorkerState], sims: Dict[int, SimWorker],
                  rng, factory: Optional[Callable[[], WorkerState]] = None,
                  notice_s: float = 0.0):
         self.workers = workers
         self.sims = sims
-        self.rng = rng
         self.factory = factory
-        self.notice_s = notice_s
-        self.condemned: Dict[int, float] = {}     # wid -> kill deadline
-        self.killed = 0
-        self.drained_ok = 0
-        self.requeued = 0
         self.retired_cost = 0.0     # accelerators of reclaimed/drained
         self.gpu_s = 0.0            # workers; fixed fleets bill no seconds
         self.spot_gpu_s = 0.0
         self.epochs: List = []
+        self.life = WorkerLifecycle(
+            rng, notice_s=notice_s, extract=self._extract,
+            mark=mark_kv_loss, idle=self._is_idle, remove=self._remove,
+            on_condemn=lambda w: setattr(w, "draining", True))
+
+    # ---- WorkerLifecycle adapters -------------------------------------------
+    def _extract(self, w: WorkerState) -> List[Request]:
+        sim = self.sims.get(w.id)
+        lost = w.ongoing + w.new_batch + (sim.preempted if sim else [])
+        w.ongoing.clear()
+        w.new_batch.clear()
+        w.mark_dirty()
+        return lost
+
+    def _is_idle(self, w: WorkerState) -> bool:
+        sim = self.sims.get(w.id)
+        return not w.ongoing and not w.new_batch \
+            and not (sim and sim.preempted)
+
+    def _remove(self, w: WorkerState) -> None:
+        self.workers.remove(w)
+        self.retired_cost += w.spec.n_accelerators
+        self.sims.pop(w.id, None)
+
+    @property
+    def killed(self) -> int:
+        return self.life.killed
+
+    @property
+    def drained_ok(self) -> int:
+        return self.life.drained_ok
+
+    @property
+    def requeued(self) -> int:
+        return self.life.requeued
 
     # ---- lifecycle hooks (static fleet: only the notice reaper) -------------
     def note_arrival(self) -> None:
@@ -308,67 +338,18 @@ class FixedPool:
         return self.workers
 
     def begin_beat(self, topo, t: float) -> None:
-        if self.condemned:
-            topo.requeue(self._reap(t))
+        if self.life.condemned:
+            topo.requeue(self.life.reap(t, self._lookup))
 
     def end_beat(self, topo, t: float, t_next: float) -> None:
         pass
 
+    def _lookup(self, wid: int) -> Optional[WorkerState]:
+        return next((x for x in self.workers if x.id == wid), None)
+
     # ---- market reclaims ----------------------------------------------------
     def on_reclaim(self, t: float, ev) -> List[Request]:
-        pool = [w for w in self.workers if w.spec.is_spot
-                and w.id not in self.condemned]
-        if not pool:
-            return []
-        n_kill = min(max(int(math.ceil(ev.frac * len(pool))), 1), len(pool))
-        victims = self.rng.choice(len(pool), size=n_kill, replace=False)
-        lost_all: List[Request] = []
-        for vi in victims:
-            w = pool[vi]
-            if self.notice_s > 0.0:
-                w.draining = True      # no new admissions inside the notice
-                self.condemned[w.id] = t + self.notice_s
-            else:
-                lost_all += self._kill(w, t)
-        return lost_all
-
-    def _kill(self, w: WorkerState, t: float) -> List[Request]:
-        self.workers.remove(w)
-        self.retired_cost += w.spec.n_accelerators
-        self.condemned.pop(w.id, None)
-        sim = self.sims.pop(w.id, None)
-        lost = w.ongoing + w.new_batch + (sim.preempted if sim else [])
-        for r in lost:
-            r.state = ReqState.QUEUED
-            r.worker = None
-            r.t_preempted = t
-            r.preempt_count += 1
-        w.ongoing.clear()
-        w.new_batch.clear()
-        w.mark_dirty()
-        self.killed += 1
-        self.requeued += len(lost)
-        return lost
-
-    def _reap(self, t: float) -> List[Request]:
-        lost: List[Request] = []
-        for wid, deadline in list(self.condemned.items()):
-            w = next((x for x in self.workers if x.id == wid), None)
-            if w is None:
-                self.condemned.pop(wid)
-                continue
-            sim = self.sims.get(wid)
-            idle = not w.ongoing and not w.new_batch \
-                and not (sim and sim.preempted)
-            if idle:                     # finished inside the notice window
-                self.workers.remove(w)
-                self.retired_cost += w.spec.n_accelerators
-                self.sims.pop(wid, None)
-                self.condemned.pop(wid)
-                self.drained_ok += 1
-            elif t >= deadline:
-                lost += self._kill(w, t)
-        return lost
+        return self.life.reclaim(t, ev, self.life.eligible(self.workers))
 
 
 class ColocatedTopology:
@@ -407,6 +388,14 @@ class ColocatedTopology:
 
     def backlog_len(self, side: str = "serve") -> int:
         return len(self.queued)
+
+    def slo_window(self, side: str, t_now: float, window: float,
+                   metric: str = "both") -> tuple:
+        """Windowed observed attainment for the SLO-feedback policies
+        (``core.slo.windowed_attainment``); queued requests whose TTFT
+        budget expired while waiting count as assured misses."""
+        return windowed_attainment(self.finished, self.slo, t_now, window,
+                                   metric, ttft_pending=self.queued)
 
     def fire(self, t: float, ev) -> None:
         self.requeue(self.pool.on_reclaim(t, ev))

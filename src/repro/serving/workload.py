@@ -137,6 +137,47 @@ def diurnal_trace(cfg: WorkloadConfig, amplitude: float = 0.5,
     return nonhomogeneous_trace(cfg, rate_fn, cfg.mean_rate * (1.0 + a))
 
 
+def drifting_diurnal_rate_fn(cfg: WorkloadConfig, amplitude: float = 0.5,
+                             period: Optional[float] = None,
+                             drift: float = 0.5,
+                             phase: float = 0.0) -> Callable[[float], float]:
+    """Diurnal rate curve whose seasonality *drifts*: the instantaneous
+    period stretches linearly from ``period`` at t=0 to
+    ``period * (1 + drift)`` at t=duration, so the accumulated phase is
+    ``2π ∫ dt'/P(t')`` rather than ``2π t/period``. A seasonal-naive
+    forecaster keyed to the nominal period accumulates phase error cycle
+    after cycle — by mid-trace it provisions for yesterday's peak at
+    today's trough — which is exactly the open-loop miscalibration regime
+    SLO-feedback scaling exists for."""
+    period = period or cfg.duration
+    a = min(max(amplitude, 0.0), 1.0)
+    d = max(drift, 0.0)
+
+    def cycles(t: float) -> float:
+        if d <= 1e-12:
+            return t / period
+        # ∫0^t dt' / (period * (1 + d*t'/duration))
+        return cfg.duration / (period * d) * np.log1p(d * t / cfg.duration)
+
+    def rate_fn(t: float) -> float:
+        return cfg.mean_rate * (1.0 + a * np.sin(2 * np.pi * cycles(t)
+                                                 + phase))
+
+    return rate_fn
+
+
+def drifting_diurnal_trace(cfg: WorkloadConfig, amplitude: float = 0.5,
+                           period: Optional[float] = None,
+                           drift: float = 0.5,
+                           phase: float = 0.0) -> List[Request]:
+    """Drifted-seasonality demand (see :func:`drifting_diurnal_rate_fn`):
+    the trace a forecast policy trained on the nominal ``period``
+    mis-serves — the benchmark workload for ``FeedbackScale``."""
+    a = min(max(amplitude, 0.0), 1.0)
+    rate_fn = drifting_diurnal_rate_fn(cfg, amplitude, period, drift, phase)
+    return nonhomogeneous_trace(cfg, rate_fn, cfg.mean_rate * (1.0 + a))
+
+
 # ---- spot-market preemption events -------------------------------------------
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,101 @@
+"""Wait-aware "earliest" decode placement (ISSUE 5 satellite).
+
+The packed decode router (Algorithm 1's bin order) is blind to the decode
+worker's event-batched *clock*: the fullest feasible worker keeps winning
+ties while its clock sits a whole decode segment past the beat, so every
+request placed there inherits that stall before its next token — an ATGT
+tail that does not shrink with pool size. The "earliest" router ranks
+feasible workers by clock backlog first, mirroring the PR-4 prefill fix;
+these tests pin that the tie-pile tail actually disappears."""
+import pytest
+
+from repro.configs import get_arch
+from repro.core import A100_80G, PAPER_SLOS, make_worker_spec
+from repro.serving import (Disaggregated, FleetSpec, PoolSpec, Scenario,
+                           WorkloadConfig, clone_trace, generate_trace, run)
+
+ARCH = get_arch("llama2-70b")
+SLO = PAPER_SLOS["llama2-70b"]
+WCFG = WorkloadConfig(mean_rate=6.0, duration=40.0, seed=11, in_mu=5.0,
+                      in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return make_worker_spec(ARCH, A100_80G, SLO, mean_context=450.0)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return generate_trace(WCFG)
+
+
+def _run(spec, trace, router: str, n_decode: int):
+    sc = Scenario(workload=clone_trace(trace),
+                  fleet=FleetSpec([PoolSpec(spec, 2, role="prefill"),
+                                   PoolSpec(spec, n_decode, role="decode")]),
+                  slo=SLO,
+                  topology=Disaggregated(decode_router=router))
+    return run(sc)
+
+
+def test_packed_decode_tail_is_scale_invariant(spec, trace):
+    """The bug being fixed, pinned: the packed router's ATGT p99 sits past
+    the SLO and does NOT move when the decode pool triples — the tail is a
+    tie-pile artifact, not a capacity shortfall."""
+    small = _run(spec, trace, "packed", 4)
+    large = _run(spec, trace, "packed", 12)
+    assert small.p99_atgt > SLO.atgt
+    assert large.p99_atgt == pytest.approx(small.p99_atgt)
+    assert large.attainment == pytest.approx(small.attainment)
+
+
+def test_earliest_decode_router_absorbs_the_tail(spec, trace):
+    """Same trace, same fleets: clock-aware placement spreads the ties, the
+    p99 ATGT tail drops below the SLO, attainment reaches 1.0, and — unlike
+    packed — added decode capacity keeps shrinking the tail."""
+    packed = _run(spec, trace, "packed", 4)
+    small = _run(spec, trace, "earliest", 4)
+    large = _run(spec, trace, "earliest", 12)
+    assert small.p99_atgt < packed.p99_atgt
+    assert small.p99_atgt <= SLO.atgt
+    assert small.attainment == 1.0 and large.attainment == 1.0
+    assert large.p99_atgt < small.p99_atgt     # capacity absorbs the tail
+
+
+def test_decode_router_default_is_legacy_packed(spec, trace):
+    assert Disaggregated().decode_router == "packed"
+    base = _run(spec, trace, "packed", 4)
+    default = run(Scenario(
+        workload=clone_trace(trace),
+        fleet=FleetSpec([PoolSpec(spec, 2, role="prefill"),
+                         PoolSpec(spec, 4, role="decode")]),
+        slo=SLO, topology=Disaggregated()))
+    assert default.row() == base.row()
+
+
+def test_earliest_decode_conserves_tokens(spec, trace):
+    t = clone_trace(trace)
+    rep = run(Scenario(
+        workload=t,
+        fleet=FleetSpec([PoolSpec(spec, 2, role="prefill"),
+                         PoolSpec(spec, 4, role="decode")]),
+        slo=SLO,
+        topology=Disaggregated(decode_router="earliest",
+                               prefill_router="earliest")))
+    assert rep.finished == rep.total == len(t)
+    for r in t:
+        assert r.l_out == r.l_real
+        assert r.t_first_token is not None and r.t_first_token >= r.arrival
+
+
+def test_earliest_decode_router_with_jsq_policy(spec, trace):
+    """The wait-aware rank composes with the naive-admission policy too."""
+    sc = Scenario(workload=clone_trace(trace),
+                  fleet=FleetSpec([PoolSpec(spec, 2, role="prefill"),
+                                   PoolSpec(spec, 4, role="decode")]),
+                  slo=SLO,
+                  topology=Disaggregated(policy="jsq",
+                                         decode_router="earliest"))
+    rep = run(sc)
+    assert rep.finished == rep.total

@@ -1,0 +1,300 @@
+"""SLO-feedback scaling: the AttainmentController state machine, the
+FeedbackScale scenario plumbing, and the policy-space optimize() round trip
+(ISSUE 5 tentpole + satellites).
+
+Controller contracts pinned here:
+  * deadband hysteresis — a flat attainment trace inside the deadband never
+    moves the gain (no oscillation);
+  * monotone response — observing *lower* attainment never yields a lower
+    gain than observing higher attainment from the same state; in
+    particular low attainment never scales the target down;
+  * open-loop equivalence — an infinite deadband makes FeedbackScale
+    reproduce its open-loop base bit-for-bit through run().
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (A100_80G, PAPER_SLOS, AttainmentController,
+                        FeedbackConfig, make_worker_spec)
+from repro.serving import (Colocated, Disaggregated, FeedbackScale,
+                           FleetSpec, Forecast, PoolSpec, Reactive, Scenario,
+                           SideOverride, WorkloadConfig,
+                           drifting_diurnal_trace, generate_trace, optimize,
+                           run)
+from repro.serving.api import _build_policy, _scale_cfg
+from repro.serving.forecast import FeedbackPolicy, ScaleSimConfig
+
+ARCH = get_arch("llama2-70b")
+SLO = PAPER_SLOS["llama2-70b"]
+WCFG = WorkloadConfig(mean_rate=3.0, duration=30.0, seed=5, in_mu=5.0,
+                      in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return make_worker_spec(ARCH, A100_80G, SLO, mean_context=450.0)
+
+
+# ---- controller state machine ------------------------------------------------
+
+def _ctl(**kw) -> AttainmentController:
+    return AttainmentController(FeedbackConfig(**kw))
+
+
+def test_deadband_hysteresis_no_oscillation_on_flat_trace():
+    """Attainment sitting anywhere inside the deadband holds the gain at
+    exactly 1.0, epoch after epoch."""
+    c = _ctl(slo_target=0.99, deadband=0.01)
+    for k, att in enumerate([0.99, 0.985, 0.995, 0.99, 0.981] * 10):
+        c.observe(float(k), int(att * 1000), 1000)
+        assert c.gain == 1.0
+
+
+def test_deadband_hysteresis_holds_a_raised_gain():
+    """After a boost, in-deadband samples neither re-boost nor release —
+    the gain parks until the attainment leaves the band."""
+    c = _ctl(slo_target=0.99, deadband=0.01, boost=1.5)
+    c.observe(0.0, 900, 1000)              # 0.90 < 0.98: attack
+    g = c.gain
+    assert g == 1.5
+    for k in range(20):
+        c.observe(100.0 + k, 990, 1000)    # inside the band: hold
+        assert c.gain == g
+
+
+def test_monotone_response_in_attainment():
+    """From identical states, a lower observed attainment never produces a
+    smaller gain — and low attainment never scales the target down."""
+    grid = [i / 100.0 for i in range(80, 101)]
+    gains = []
+    for att in grid:
+        c = _ctl(slo_target=0.99, deadband=0.005, min_gain=0.7)
+        c.gain = 1.5                        # a mid-range prior state
+        c.observe(1e9, int(round(att * 10000)), 10000)
+        gains.append(c.gain)
+    for lo_gain, hi_gain in zip(gains, gains[1:]):
+        assert lo_gain >= hi_gain
+    # low attainment boosts (never shrinks) the applied target
+    c = _ctl(slo_target=0.99, deadband=0.005)
+    before = c.apply(10)
+    c.observe(1e9, 0, 1000)
+    assert c.apply(10) >= before
+
+
+def test_attack_cooldown_rate_limits_boosts():
+    """The misses that triggered a boost stay in the window; re-observing
+    them within the cooldown must not compound the gain."""
+    c = _ctl(slo_target=0.99, deadband=0.005, boost=2.0, window=30.0,
+             max_gain=8.0)
+    c.observe(0.0, 0, 100)
+    assert c.gain == 2.0
+    c.observe(5.0, 0, 100)                 # same stale window: no re-boost
+    assert c.gain == 2.0
+    c.observe(31.0, 0, 100)                # window refreshed: attack again
+    assert c.gain == 4.0
+
+
+def test_min_samples_keeps_controller_inert():
+    c = _ctl(slo_target=0.99, min_samples=8)
+    c.observe(0.0, 0, 7)                   # too few to judge
+    assert c.gain == 1.0
+
+
+def test_gain_bounds_and_identity_apply():
+    c = _ctl(slo_target=0.99, deadband=0.001, boost=10.0, max_gain=2.5,
+             decay=1.0, min_gain=0.6, window=1.0)
+    c.observe(0.0, 0, 100)
+    c.observe(10.0, 0, 100)
+    assert c.gain == 2.5                   # capped at max_gain
+    for k in range(10):
+        c.observe(20.0 + k, 100, 100)
+        assert c.gain >= 0.6
+    assert c.gain == 0.6                   # floored at min_gain
+    c.gain = 1.0
+    assert c.apply(7) == 7                 # gain 1.0 is the exact identity
+
+
+# ---- FeedbackPolicy wrapper --------------------------------------------------
+
+class _ConstPolicy:
+    scfg = ScaleSimConfig()
+    spot_mix = None
+
+    def target(self, t, rate, needed, queued):
+        return 10
+
+    def split(self, t, target):
+        return target, 0
+
+
+def test_feedback_policy_never_scales_down_on_misses():
+    pol = FeedbackPolicy(_ConstPolicy(), FeedbackConfig(slo_target=0.99))
+    base = pol.target(0.0, 1.0, 1, 0)
+    pol.observe_slo(100.0, 0, 100)
+    assert pol.target(100.0, 1.0, 1, 0) >= base
+
+
+def test_feedback_policy_infinite_deadband_is_identity():
+    pol = FeedbackPolicy(_ConstPolicy(),
+                         FeedbackConfig(deadband=float("inf"), min_gain=0.5))
+    for k in range(50):
+        pol.observe_slo(float(k * 100), k % 2 * 100, 100)
+        assert pol.gain == 1.0
+        assert pol.target(float(k), 1.0, 1, 0) == 10
+
+
+# ---- bit-for-bit open-loop equivalence through run() -------------------------
+
+def _drift_fn(duration=120.0, period=60.0, seed=9):
+    wcfg = dataclasses.replace(WCFG, mean_rate=4.0, duration=duration,
+                               seed=seed)
+    return lambda: drifting_diurnal_trace(wcfg, amplitude=0.6,
+                                          period=period, drift=1.0)
+
+
+@pytest.mark.parametrize("base", [
+    Forecast(period=60.0, min_workers=2),
+    Reactive(interval=5.0, provision_delay=10.0),
+])
+def test_infinite_deadband_reproduces_open_loop_colocated(spec, base):
+    sc = Scenario(workload=_drift_fn(), fleet=FleetSpec([PoolSpec(spec, 3)]),
+                  slo=SLO, topology=Colocated(), scaling=base)
+    closed = dataclasses.replace(
+        sc, scaling=FeedbackScale(base=base, deadband=float("inf"),
+                                  min_gain=0.5))
+    r_open, r_closed = run(sc).row(), run(closed).row()
+    assert r_closed.pop("scaling") == "feedback"
+    r_open.pop("scaling")
+    assert r_open == r_closed
+
+
+def test_infinite_deadband_reproduces_open_loop_disagg(spec):
+    base = Forecast(period=60.0, min_workers=2, headroom=1.2,
+                    prefill=SideOverride(lead=5.0),
+                    decode=SideOverride(lead=20.0))
+    sc = Scenario(workload=_drift_fn(),
+                  fleet=FleetSpec([PoolSpec(spec, 2, role="prefill"),
+                                   PoolSpec(spec, 4, role="decode")]),
+                  slo=SLO,
+                  topology=Disaggregated(prefill_router="earliest",
+                                         decode_router="earliest"),
+                  scaling=base)
+    closed = dataclasses.replace(
+        sc, scaling=FeedbackScale(base=base, deadband=float("inf")))
+    r_open, r_closed = run(sc).row(), run(closed).row()
+    assert r_closed.pop("scaling") == "feedback"
+    r_open.pop("scaling")
+    assert r_open == r_closed
+
+
+def test_feedback_boosts_capacity_under_sustained_misses(spec):
+    """An under-provisioned base that misses persistently must end with a
+    gain above 1.0 and more capacity than the open loop bought."""
+    base = Reactive(interval=5.0, provision_delay=10.0, max_workers=64)
+    wcfg = dataclasses.replace(WCFG, mean_rate=8.0, duration=90.0)
+    sc = Scenario(workload=lambda: generate_trace(wcfg),
+                  fleet=FleetSpec([PoolSpec(spec, 1)]), slo=SLO,
+                  scaling=base)
+    r_open = run(sc)
+    r_fb = run(dataclasses.replace(
+        sc, scaling=FeedbackScale(base=base, slo_target=0.99)))
+    assert r_fb.peak_workers >= r_open.peak_workers
+    assert r_fb.attainment >= r_open.attainment - 1e-9
+
+
+# ---- per-side resolution -----------------------------------------------------
+
+def test_per_side_metric_and_lead_resolution():
+    base = Forecast(interval=4.0, provision_delay=8.0, headroom=1.1,
+                    prefill=SideOverride(lead=3.0, window=12.0),
+                    decode=SideOverride(lead=25.0, headroom=1.3))
+    s = FeedbackScale(base=base, window=40.0)
+    scfg_p = _scale_cfg(s, 2, side="prefill")
+    scfg_d = _scale_cfg(s, 2, side="decode")
+    assert scfg_p.lead == 3.0 and scfg_d.lead == 25.0
+    assert scfg_p.headroom == 1.1 and scfg_d.headroom == 1.3
+    pol_p = _build_policy(s, scfg_p, None, side="prefill")
+    pol_d = _build_policy(s, scfg_d, None, side="decode")
+    pol_c = _build_policy(s, _scale_cfg(s, 2), None)
+    assert (pol_p.metric, pol_d.metric, pol_c.metric) == ("ttft", "atgt",
+                                                          "both")
+    assert pol_p.window == 12.0 and pol_d.window == 40.0
+    explicit = dataclasses.replace(s, metric="both")
+    assert _build_policy(explicit, scfg_p, None, side="prefill").metric \
+        == "both"
+
+
+# ---- policy-space optimize() round trip --------------------------------------
+
+def _roundtrip(scenario, **kw):
+    plan = optimize(scenario, **kw)
+    assert plan.feasible
+    rep = run(plan.scenario)
+    assert rep.row() == plan.report.row()
+    return plan
+
+
+def test_optimize_policy_space_roundtrip_colocated_feedback(spec):
+    sc = Scenario(workload=_drift_fn(),
+                  fleet=FleetSpec([PoolSpec(spec, 3)]), slo=SLO,
+                  scaling=FeedbackScale(base=Forecast(period=60.0,
+                                                      min_workers=2)))
+    plan = _roundtrip(sc, attain_target=0.9,
+                      policy_space={"headroom": (0.9, 1.0, 1.2),
+                                    "theta": (0.8, 0.9)})
+    assert set(plan.params) <= {"headroom", "theta"}
+    assert plan.evals >= 4
+    assert math.isfinite(plan.cost)
+
+
+def test_optimize_policy_space_roundtrip_colocated_reactive(spec):
+    sc = Scenario(workload=lambda: generate_trace(WCFG),
+                  fleet=FleetSpec([PoolSpec(spec, 2)]), slo=SLO,
+                  scaling=Reactive(interval=2.0, provision_delay=2.0))
+    _roundtrip(sc, attain_target=0.5, policy_space={"headroom": (1.0, 1.2)})
+
+
+def test_optimize_policy_space_roundtrip_disagg_per_side_leads(spec):
+    sc = Scenario(workload=lambda: generate_trace(WCFG),
+                  fleet=FleetSpec([PoolSpec(spec, 2, role="prefill"),
+                                   PoolSpec(spec, 3, role="decode")]),
+                  slo=SLO,
+                  topology=Disaggregated(prefill_router="earliest",
+                                         decode_router="earliest"),
+                  scaling=Forecast(interval=2.0, provision_delay=2.0,
+                                   period=10.0, min_workers=2))
+    plan = _roundtrip(sc, attain_target=0.5,
+                      policy_space={"prefill_lead": (2.0, 4.0),
+                                    "decode_lead": (4.0, 8.0)})
+    assert set(plan.params) <= {"prefill_lead", "decode_lead"}
+
+
+def test_optimize_policy_space_materializes_once(spec):
+    calls = [0]
+
+    def factory():
+        calls[0] += 1
+        return generate_trace(WCFG)
+
+    sc = Scenario(workload=factory, fleet=FleetSpec([PoolSpec(spec, 2)]),
+                  slo=SLO, scaling=Reactive(interval=2.0,
+                                            provision_delay=2.0))
+    plan = optimize(sc, attain_target=0.5,
+                    policy_space={"headroom": (1.0, 1.2, 1.4)})
+    assert calls[0] == 1
+    assert plan.evals >= 3
+
+
+def test_default_policy_space_shape(spec):
+    from repro.serving.api import default_policy_space
+    colo = Scenario(workload=[], fleet=FleetSpec([PoolSpec(spec, 1)]),
+                    slo=SLO, scaling=Forecast())
+    space = default_policy_space(colo)
+    assert "headroom" in space and "theta" in space
+    assert "prefill_lead" not in space and "max_spot_frac" not in space
+    disagg = dataclasses.replace(colo, topology=Disaggregated())
+    space = default_policy_space(disagg)
+    assert "prefill_lead" in space and "decode_lead" in space

@@ -1,0 +1,151 @@
+"""Property battery for the unified WorkerLifecycle machine (ISSUE 5).
+
+PR 5 collapsed the four condemn/kill/reap copies (FixedPool,
+FixedPrefillSide, FixedDecodeSide, forecast.ManagedPool) onto one
+``repro.serving.lifecycle.WorkerLifecycle``. This battery hypothesis-fuzzes
+reclaim schedules — event times, reclaim fractions, notice windows — and
+drives the SAME schedule through all four former call sites, asserting the
+machine's invariants hold identically everywhere:
+
+  * token conservation — every offered request finishes with exactly
+    ``l_real`` tokens, none generated twice, no dangling reclaim stall;
+  * no lost requests — finished == offered on every topology, whatever the
+    market kills mid-flight;
+  * settlement — every KV-loss requeue is stamped exactly once
+    (``sum(preempt_count) == requeued``), a fixed fleet's accelerator cost
+    is conserved across kills (live + retired == initial), an unbounded
+    notice kills nothing and loses no KV, and decode-side victims are the
+    only ones re-crossing the interconnect.
+
+Marked ``slow`` so tier-1 stays fast; hypothesis is a CI-only dependency
+(requirements-ci.txt) and the battery skips where it is not installed.
+"""
+import dataclasses
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.core import A100_80G, PAPER_SLOS, make_worker_spec  # noqa: E402
+from repro.core.worker_config import spot_variant  # noqa: E402
+from repro.serving import (Colocated, Disaggregated, FixedScale,  # noqa: E402
+                           FleetSpec, Forecast, PoolSpec, PreemptionEvent,
+                           Scenario, SpotMarket, WorkloadConfig,
+                           diurnal_trace, run)
+
+ARCH = get_arch("llama2-70b")
+SLO = PAPER_SLOS["llama2-70b"]
+SPEC = make_worker_spec(ARCH, A100_80G, SLO, mean_context=450.0)
+SPOT = spot_variant(SPEC, price=0.35, preempt_hazard=1.0 / 200.0)
+DSPEC = dataclasses.replace(SPEC, max_batch=24)
+DSPOT = spot_variant(DSPEC, price=0.35, preempt_hazard=1.0 / 200.0)
+
+events_st = st.lists(
+    st.builds(PreemptionEvent,
+              t=st.floats(5.0, 35.0, allow_nan=False),
+              frac=st.floats(0.2, 1.0, allow_nan=False)),
+    min_size=1, max_size=4).map(lambda evs: sorted(evs, key=lambda e: e.t))
+
+notice_st = st.sampled_from([0.0, 8.0, 1e9])
+seed_st = st.integers(0, 3)
+
+
+def _workload(seed: int):
+    wcfg = WorkloadConfig(mean_rate=3.0, duration=40.0, seed=seed,
+                          in_mu=5.0, in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+    return lambda: diurnal_trace(wcfg, amplitude=0.5, period=20.0)
+
+
+def _sites(events, notice, seed):
+    """The four former condemn/kill/reap call sites, one Scenario each, all
+    fed the same reclaim schedule."""
+    market = SpotMarket(SPOT, events, notice_s=notice)
+    dmarket = SpotMarket(DSPOT, events, notice_s=notice, prefill_spec=SPOT,
+                         prefill_events=events)
+    wl = _workload(seed)
+    return {
+        "FixedPool": Scenario(
+            workload=wl, fleet=FleetSpec([PoolSpec(SPEC, 2),
+                                          PoolSpec(SPOT, 2)]),
+            slo=SLO, topology=Colocated(), scaling=FixedScale(),
+            market=market, seed=seed),
+        "ManagedPool": Scenario(
+            workload=wl, fleet=FleetSpec([PoolSpec(SPEC, 3)]),
+            slo=SLO, topology=Colocated(),
+            scaling=Forecast(period=20.0, min_workers=2),
+            market=market, seed=seed),
+        "FixedSides": Scenario(
+            workload=wl,
+            fleet=FleetSpec([PoolSpec(SPEC, 2, role="prefill"),
+                             PoolSpec(SPOT, 1, role="prefill"),
+                             PoolSpec(DSPEC, 3, role="decode"),
+                             PoolSpec(DSPOT, 2, role="decode")]),
+            slo=SLO, topology=Disaggregated(), scaling=FixedScale(),
+            market=dmarket, seed=seed),
+        "ManagedSides": Scenario(
+            workload=wl,
+            fleet=FleetSpec([PoolSpec(SPEC, 2, role="prefill"),
+                             PoolSpec(DSPEC, 4, role="decode")]),
+            slo=SLO,
+            topology=Disaggregated(prefill_router="earliest",
+                                   decode_router="earliest"),
+            scaling=Forecast(period=20.0, min_workers=2, headroom=1.2),
+            market=dmarket, seed=seed),
+    }
+
+
+def _fleet_cost(fleet: FleetSpec) -> float:
+    return sum(p.spec.n_accelerators * p.count for p in fleet.pools)
+
+
+def _check_invariants(site: str, sc: Scenario, notice: float) -> None:
+    trace = sc.materialize()
+    rep = run(dataclasses.replace(sc, workload=trace))
+    # -- no lost requests, tokens conserved, every stall settled
+    assert rep.finished == rep.total == len(trace), site
+    for r in trace:
+        assert r.t_finish is not None, site
+        assert r.l_out == r.l_real, site
+        assert r.t_preempted is None, site
+    # -- settlement: each requeue stamped exactly once
+    assert sum(r.preempt_count for r in trace) == rep.requeued, site
+    assert rep.kv_retransfers <= rep.requeued, site
+    if notice >= 1e9:
+        # an unbounded notice never reaches a deadline: nothing is killed,
+        # no KV is ever lost
+        assert rep.preempted_workers == 0, site
+        assert rep.requeued == 0, site
+    if isinstance(sc.scaling, FixedScale):
+        assert rep.gpu_seconds == 0.0, site
+        if isinstance(sc.topology, Colocated):
+            # accelerator-cost conservation across kills: the report prices
+            # live plus retired workers, which must equal the declared fleet
+            assert rep.gpu_cost == pytest.approx(_fleet_cost(sc.fleet)), site
+    else:
+        assert rep.gpu_seconds > 0.0, site
+        assert rep.spot_gpu_seconds <= rep.gpu_seconds + 1e-9, site
+
+
+@pytest.mark.slow
+@given(events=events_st, notice=notice_st, seed=seed_st)
+@settings(max_examples=10, deadline=None)
+def test_same_schedule_through_all_four_call_sites(events, notice, seed):
+    for site, sc in _sites(events, notice, seed).items():
+        _check_invariants(site, sc, notice)
+
+
+@pytest.mark.slow
+@given(events=events_st, seed=seed_st)
+@settings(max_examples=6, deadline=None)
+def test_notice_monotone_requeues_everywhere(events, seed):
+    """Across every call site, a longer notice can only reduce KV-loss
+    requeues — draining strictly dominates killing."""
+    for site in ("FixedPool", "ManagedPool", "FixedSides", "ManagedSides"):
+        requeues = []
+        for notice in (0.0, 8.0, 1e9):
+            sc = _sites(events, notice, seed)[site]
+            rep = run(sc)
+            requeues.append(rep.requeued)
+        assert requeues[0] >= requeues[1] >= requeues[2] == 0, site

@@ -159,11 +159,19 @@ def test_optimize_replays_one_materialization(spec):
     assert plan.evals >= 2          # while the search simulated many fleets
 
 
-def test_optimize_rejects_autoscaled_scenarios(spec):
+def test_optimize_rejects_policy_scale(spec):
+    """The PolicyScale escape hatch wraps a prebuilt policy instance, so
+    the policy-space search cannot rebuild it per candidate."""
     sc = Scenario(workload=[], fleet=_fleet(spec, Colocated()), slo=SLO,
-                  scaling=Reactive())
-    with pytest.raises(ValueError, match="FixedScale"):
+                  scaling=PolicyScale(object(), ScaleSimConfig()))
+    with pytest.raises(ValueError, match="PolicyScale"):
         optimize(sc)
+
+
+def test_optimize_rejects_policy_space_for_fixed(spec):
+    sc = Scenario(workload=[], fleet=_fleet(spec, Colocated()), slo=SLO)
+    with pytest.raises(ValueError, match="policy_space"):
+        optimize(sc, policy_space={"headroom": (1.0,)})
 
 
 def test_optimize_disagg_matches_min_cost_disagg(spec):
