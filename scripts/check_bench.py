@@ -8,8 +8,12 @@ deterministic, so on unchanged code the fresh rows match the baselines under
 changes within the stated envelope do not fail CI. The gate enforces, per row
 matched by name:
 
-  * attainment may not drop more than --attain-tol (absolute), and
-  * gpu_cost may not regress (grow) more than --cost-tol (relative).
+  * attainment may not drop more than --attain-tol (absolute),
+  * gpu_cost may not regress (grow) more than --cost-tol (relative), and
+  * with --time-tol given, us_per_call may not grow more than that
+    fraction on rows whose baseline records a positive wall time (the
+    perf-canary rows: hot_loop, fastsim, scale_*) — so the engines'
+    measured speedups are gated, not just printed.
 
 A scenario file or row present in the baselines but missing from the fresh
 run fails the gate (a silently dropped scenario is a regression too). Rows
@@ -44,7 +48,7 @@ def finite(row: dict, key: str):
 
 
 def check_file(base_path: Path, fresh_path: Path, attain_tol: float,
-               cost_tol: float) -> list:
+               cost_tol: float, time_tol: float | None = None) -> list:
     problems = []
     if not fresh_path.exists():
         return [f"{fresh_path.name}: missing (scenario no longer writes "
@@ -70,6 +74,14 @@ def check_file(base_path: Path, fresh_path: Path, attain_tol: float,
                 f"{b_cost:.1f} -> {f_cost:.1f} "
                 f"(+{(f_cost / b_cost - 1.0) * 100:.1f}% > "
                 f"{cost_tol * 100:.0f}%)")
+        b_us, f_us = finite(brow, "us_per_call"), finite(frow, "us_per_call")
+        if time_tol is not None and b_us is not None and b_us > 0.0 \
+                and f_us is not None and f_us > b_us * (1.0 + time_tol):
+            problems.append(
+                f"{fresh_path.name}:{name}: us_per_call regressed "
+                f"{b_us:.0f} -> {f_us:.0f} "
+                f"(+{(f_us / b_us - 1.0) * 100:.1f}% > "
+                f"{time_tol * 100:.0f}%)")
     return problems
 
 
@@ -82,6 +94,10 @@ def main() -> int:
                     help="max absolute attainment drop per row")
     ap.add_argument("--cost-tol", type=float, default=0.10,
                     help="max relative gpu_cost growth per row")
+    ap.add_argument("--time-tol", type=float, default=None,
+                    help="max relative us_per_call growth on rows whose "
+                    "baseline records a positive wall time; omitted = "
+                    "wall-clock not gated (machines differ)")
     ap.add_argument("--update", action="store_true",
                     help="copy fresh BENCH files over the baselines "
                     "instead of checking (for intentional shifts)")
@@ -106,7 +122,7 @@ def main() -> int:
     checked = 0
     for base_path in baselines:
         problems += check_file(base_path, args.fresh_dir / base_path.name,
-                               args.attain_tol, args.cost_tol)
+                               args.attain_tol, args.cost_tol, args.time_tol)
         checked += 1
     if problems:
         print(f"check_bench: {len(problems)} regression(s) vs committed "
@@ -117,8 +133,11 @@ def main() -> int:
               "`python scripts/check_bench.py --update` and commit.",
               file=sys.stderr)
         return 1
+    time_note = (f", us_per_call +{args.time_tol:.0%}"
+                 if args.time_tol is not None else "")
     print(f"check_bench: OK ({checked} scenario files within tolerances: "
-          f"attainment -{args.attain_tol}, gpu_cost +{args.cost_tol:.0%})")
+          f"attainment -{args.attain_tol}, gpu_cost +{args.cost_tol:.0%}"
+          f"{time_note})")
     return 0
 
 

@@ -22,6 +22,8 @@ import dataclasses
 import math
 from typing import List, Optional, Sequence
 
+import numpy as np
+
 from repro.core.perf_model import PerfModel
 from repro.core.request import Request
 from repro.core.slo import SLO
@@ -202,6 +204,78 @@ class WorkerState:
         r.worker = None
         self._wctx -= r.l_in + self.cfg.gamma * r.l_pred
         self._wctx_key = (len(self.ongoing), len(self.new_batch))
+
+
+# ---- vectorized scoring (struct-of-arrays engine) ----------------------------
+#
+# Array twins of the per-worker constraint/scoring methods above, shared by
+# ``serving.fastsim``. They replicate the scalar code's floating-point
+# operation ORDER exactly (multiply-then-add chains, sequential suffix
+# accumulation), so a placement decision computed on arrays is bit-for-bit
+# the decision the WorkerState methods would have made.
+
+
+def kv_peak_arrays(rem: np.ndarray, ctx: np.ndarray, h: float,
+                   j: float) -> float:
+    """Vectorized :meth:`WorkerState.kv_peak`: peak future KV demand of a
+    batch described by int arrays ``rem`` (remaining predicted tokens) and
+    ``ctx`` (current context) — identical value to the scalar suffix scan."""
+    n = int(rem.shape[0])
+    if n == 0:
+        return 0.0
+    order = np.lexsort((ctx, rem))          # == sorted((rem, ctx)) tuples
+    rem_s = rem[order]
+    ctx_s = ctx[order]
+    # suffix[i] = Σ ctx_s[i:], accumulated high-index-first like the scalar
+    # loop (integer-valued, so the float image is exact either way)
+    suffix = np.cumsum(ctx_s[::-1])[::-1]
+    peak = h * float(suffix[0]) + j * n
+    ks = np.unique(np.maximum(rem_s, 1))
+    i = np.searchsorted(rem_s, ks, side="left")
+    valid = i < n
+    if valid.any():
+        iv = i[valid]
+        kv = ks[valid]
+        tot = h * (suffix[iv] + (n - iv) * kv) + j * (n - iv)
+        m = float(tot.max())
+        if m > peak:
+            peak = m
+    return peak
+
+
+def decode_budget_arrays(batch: np.ndarray, atgt: float, k2: np.ndarray,
+                         c2: np.ndarray, c3: np.ndarray) -> np.ndarray:
+    """Vectorized Eq. 4 across workers: ``max_total_context(batch, atgt)``
+    per worker (inf where k2 <= 0), matching the scalar op order
+    ``((atgt - c3) - c2*b) / k2`` then ``max(. , 0.0)``."""
+    out = np.full(batch.shape, np.inf)
+    pos = k2 > 0
+    if pos.any():
+        out[pos] = np.maximum(
+            (atgt - c3[pos] - c2[pos] * batch[pos]) / k2[pos], 0.0)
+    return out
+
+
+def slack_arrays(l_out: np.ndarray, tds: np.ndarray, mask: np.ndarray,
+                 atgt: float) -> np.ndarray:
+    """Vectorized constraint-(d) banked slack: per-worker min over ongoing
+    members of ``atgt*max(l_out-1, 0) - t_decode_spent`` for a padded
+    (W, B) member layout; +inf where a worker has no ongoing requests."""
+    vals = atgt * np.maximum(l_out - 1, 0) - tds
+    vals = np.where(mask, vals, np.inf)
+    return vals.min(axis=1)
+
+
+def best_fit_order(norms: np.ndarray) -> np.ndarray:
+    """Algorithm 1's ranking: capacity_norm descending, ties in worker-list
+    order (``sorted(..., reverse=True)`` never reorders equal keys, and
+    neither does a stable argsort of the negated key)."""
+    return np.argsort(-norms, kind="stable")
+
+
+def jsq_order(batch_sizes: np.ndarray) -> np.ndarray:
+    """JSQ's ranking: batch size ascending, ties in worker-list order."""
+    return np.argsort(batch_sizes, kind="stable")
 
 
 def best_fit_place(workers: List[WorkerState], req: Request,

@@ -232,6 +232,15 @@ class Scenario:
     predictor: Optional[LengthPredictor] = None
     observer: Optional[Callable] = None
     seed: int = 0
+    # which simulation core executes the scenario:
+    #   reference  — the per-object Python engine (every feature; the oracle)
+    #   vectorized — the numpy struct-of-arrays core (serving.fastsim):
+    #                bit-for-bit the reference on fixed colocated fleets,
+    #                ValueError outside that envelope
+    #   jax        — the jit/scan compiled core (serving.fastsim_jax):
+    #                fixed colocated aladdin/jsq fleets with inert KV;
+    #                optimize() evaluates candidate batches in one call
+    engine: str = "reference"
 
     def materialize(self) -> List:
         """The workload as a concrete request list (evaluating a trace
@@ -707,7 +716,21 @@ def run(scenario: Scenario, seed: Optional[int] = None) -> RunReport:
     exactly like the legacy entry points."""
     s = seed if seed is not None else scenario.seed
     if isinstance(scenario.topology, Colocated):
+        if scenario.engine == "vectorized":
+            from repro.serving import fastsim
+            return fastsim.run_colocated_vectorized(scenario, s)
+        if scenario.engine == "jax":
+            from repro.serving import fastsim_jax
+            return fastsim_jax.run_colocated_jax(scenario, s)
+        if scenario.engine != "reference":
+            raise ValueError(f"unknown engine {scenario.engine!r} (expected "
+                             "'reference', 'vectorized' or 'jax')")
         return _run_colocated(scenario, s)
+    if scenario.engine != "reference":
+        raise ValueError("engine='vectorized'/'jax' accelerate Colocated "
+                         "topologies only; a "
+                         f"{type(scenario.topology).__name__} scenario "
+                         "needs engine='reference'")
     if isinstance(scenario.topology, Disaggregated):
         return _run_disagg(scenario, s)
     raise TypeError(f"unknown topology {type(scenario.topology).__name__}")
@@ -926,10 +949,30 @@ def _optimize_colocated(scenario: Scenario, template, attain_target: float,
         return dataclasses.replace(scenario, workload=clone_trace(template),
                                    fleet=fleet, scaling=FixedScale())
 
+    def evaluate(ns: Sequence[int]) -> None:
+        """Evaluate candidate worker counts into ``reports``. On the jax
+        engine a whole batch runs as ONE vmapped compiled call; the other
+        engines sweep sequentially (the vectorized core still being far
+        cheaper per candidate than the reference)."""
+        ns = [n for n in ns if n not in reports]
+        if not ns:
+            return
+        if scenario.engine == "jax" and fleet_fn is None and len(ns) > 1:
+            from repro.serving import fastsim_jax
+            batch = fastsim_jax.run_candidate_batch(
+                [scenario_for(n) for n in ns])
+            for n, rep in zip(ns, batch):
+                reports[n] = rep
+            evals[0] += len(ns)
+        else:
+            for n in ns:
+                reports[n] = run(scenario_for(n))
+                evals[0] += 1
+
     def ok(n: int) -> bool:
-        rep = run(scenario_for(n))
-        evals[0] += 1
-        reports[n] = rep
+        if n not in reports:
+            evaluate([n])
+        rep = reports[n]
         attain_hist.append((n, rep.attainment))
         return rep.attainment >= attain_target and rep.finished == rep.total
 
@@ -947,7 +990,22 @@ def _optimize_colocated(scenario: Scenario, template, attain_target: float,
         escalations += 1
         if hi > 8192 or escalations > 6:
             raise RuntimeError("workload cannot meet SLO at any scale")
+    # multisection on the batch-capable engines: probe a whole bracket per
+    # round (one compiled call on jax) instead of one midpoint at a time
+    batch_k = 8 if scenario.engine in ("vectorized", "jax") else 1
     while lo < hi:
+        if batch_k > 1 and hi - lo > 2:
+            span = hi - lo
+            cand = sorted({lo + (span * i) // (batch_k + 1)
+                           for i in range(1, batch_k + 1)})
+            cand = [c for c in cand if lo <= c < hi]
+            evaluate(cand)
+            for c in cand:              # monotone: walk the probe results
+                if ok(c):
+                    hi = c
+                    break
+                lo = c + 1
+            continue
         mid = (lo + hi) // 2
         if ok(mid):
             hi = mid
@@ -955,8 +1013,8 @@ def _optimize_colocated(scenario: Scenario, template, attain_target: float,
             lo = mid + 1
     rep = reports.get(lo)
     if rep is None:                     # lo was proven by its neighbors only
-        rep = run(scenario_for(lo))
-        evals[0] += 1
+        evaluate([lo])
+        rep = reports[lo]
     return Plan(objective="cost", scenario=scenario_for(lo), report=rep,
                 n_workers=lo, cost=rep.gpu_cost, evals=evals[0])
 

@@ -1,0 +1,539 @@
+"""Struct-of-arrays colocated simulation core (the ``engine="vectorized"``
+path of :mod:`repro.serving.api`).
+
+Per-beat state — the queue, per-worker batch membership, KV occupancy
+``h*Σctx + j*b``, decode clocks and the per-request ``l_out`` /
+``t_decode_spent`` arrays — lives in numpy arrays; placement scoring and the
+decode-segment arithmetic run as array kernels (the scoring twins live in
+:mod:`repro.core.placement`). The Python engine
+(:func:`repro.serving.simulator.run_heartbeat_loop` over
+``ColocatedTopology``) stays the oracle: this engine reproduces its
+per-request ``(t_first_token, t_finish, l_out, t_decode_spent)``
+**bit-for-bit** (pinned by tests/test_fastsim_equivalence.py), which demands
+replicating the reference's floating-point operation order exactly:
+
+* sequential left-associated accumulation (``np.cumsum`` /
+  ``np.add.accumulate``) wherever the reference sums in a Python loop —
+  never ``np.sum``, whose pairwise reduction rounds differently;
+* the worker clock advances through ``np.add.accumulate([t, dur_0, ...])``,
+  matching ``t += dur`` per iteration (``t + cumsum(durs)`` does not);
+* multiply-add chains keep the scalar code's grouping
+  (``k2*C + c2*b + c3`` as ``((k2*C) + (c2*b)) + c3``);
+* ``capacity_norm`` keeps CPython's ``math.hypot`` (numpy's may differ in
+  the last ulp, which could flip a best-fit ranking);
+* integer-valued aggregates (context sums, KV peaks) are exact in float64
+  and may be reduced in any order.
+
+Supported envelope (everything else raises ``ValueError`` so ``api.run``
+can fall back or the caller can switch engines explicitly): ``Colocated``
+topology without ``split_phase``, ``FixedScale`` with an explicit worker
+count (no elastic mode), no spot market, no length predictor, no observer;
+policies ``aladdin`` / ``jsq`` / ``po2``. Heterogeneous fixed fleets are
+supported — every per-worker coefficient is an array.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.placement import (best_fit_order, decode_budget_arrays,
+                                  jsq_order, kv_peak_arrays, slack_arrays)
+from repro.core.request import ReqState, Request
+
+DEFAULT_TAIL = 240.0
+
+# above this expected iteration count a decode segment is evaluated as one
+# array kernel; below it a scalar loop is cheaper (numpy call overhead)
+_SEG_VECTOR_MIN = 16
+
+
+def check_colocated_envelope(scenario) -> List:
+    """Validate that ``scenario`` fits the vectorized engine's envelope and
+    return the expanded per-worker spec list. Raises ``ValueError`` with the
+    first unsupported feature otherwise."""
+    from repro.serving import api
+
+    if not isinstance(scenario.topology, api.Colocated):
+        raise ValueError("vectorized engine supports Colocated topologies "
+                         f"only, not {type(scenario.topology).__name__}")
+    topo = scenario.topology
+    if topo.split_phase:
+        raise ValueError("vectorized engine does not support split_phase "
+                         "(decode-pool-only) simulation")
+    if topo.policy not in ("aladdin", "jsq", "po2"):
+        raise ValueError(f"unknown placement policy {topo.policy!r}")
+    if not isinstance(scenario.scaling, api.FixedScale):
+        raise ValueError("vectorized engine supports FixedScale only; "
+                         "autoscaled scenarios need engine='reference'")
+    if scenario.market is not None:
+        raise ValueError("vectorized engine does not support a spot market")
+    if scenario.predictor is not None:
+        raise ValueError("vectorized engine does not support length "
+                         "predictors (l_pred must equal l_real)")
+    if scenario.observer is not None:
+        raise ValueError("vectorized engine does not support observers "
+                         "(there are no per-worker objects to observe)")
+    pools = scenario.fleet.for_role("serve")
+    if not pools:
+        raise ValueError("colocated scenario needs at least one fleet pool")
+    if scenario.scaling.n is not None:
+        specs = [pools[0].spec] * int(scenario.scaling.n)
+    else:
+        specs = [p.spec for p in pools for _ in range(p.count)]
+    if not specs:
+        raise ValueError("vectorized engine needs an explicit worker count "
+                         "(elastic mode needs engine='reference')")
+    return specs
+
+
+class _Engine:
+    """One vectorized colocated simulation (struct-of-arrays state)."""
+
+    def __init__(self, specs: Sequence, trace: Sequence[Request], topo, slo,
+                 seed: int, tail: float = DEFAULT_TAIL):
+        self.policy = topo.policy
+        self.hb = float(topo.heartbeat)
+        self.gamma = float(topo.gamma)
+        self.theta = float(topo.theta)
+        self.slo = slo
+        self.tail = float(tail)
+        self.rng = np.random.default_rng(seed)
+        self.specs = list(specs)
+        W = len(specs)
+        self.W = W
+
+        # ---- per-worker coefficient arrays (+ Python-float twins) ----------
+        self.K1 = np.array([s.perf.prefill.k1 for s in specs])
+        self.C1 = np.array([s.perf.prefill.c1 for s in specs])
+        self.K2 = np.array([s.perf.decode.k2 for s in specs])
+        self.C2 = np.array([s.perf.decode.c2 for s in specs])
+        self.C3 = np.array([s.perf.decode.c3 for s in specs])
+        self.H = np.array([s.perf.kv.h for s in specs])
+        self.J = np.array([s.perf.kv.j for s in specs])
+        self.M = np.array([s.kv_capacity for s in specs])
+        self.MAXB = np.array([s.max_batch for s in specs], dtype=np.int64)
+        # capacity_norm denominators: max(max_batch, 1) and
+        # max(max_total_context(1, atgt) or 1.0, 1.0), fixed per worker
+        self.maxb_norm = [max(int(s.max_batch), 1) for s in specs]
+        self.cmax_norm = []
+        for s in specs:
+            cmax = s.perf.decode.max_total_context(1, slo.atgt) or 1.0
+            self.cmax_norm.append(max(cmax, 1.0))
+        self.coef = [(float(s.perf.prefill.k1), float(s.perf.prefill.c1),
+                      float(s.perf.decode.k2), float(s.perf.decode.c2),
+                      float(s.perf.decode.c3), float(s.perf.kv.h),
+                      float(s.perf.kv.j), float(s.kv_capacity),
+                      int(s.max_batch)) for s in specs]
+
+        # ---- request struct-of-arrays (sorted by arrival, stable) ----------
+        order = sorted(range(len(trace)), key=lambda i: trace[i].arrival)
+        self.trace = [trace[i] for i in order]
+        n = len(self.trace)
+        self.n = n
+        self.arrival = np.array([r.arrival for r in self.trace])
+        self.l_in = np.array([r.l_in for r in self.trace], dtype=np.int64)
+        self.l_real = np.array([r.l_real for r in self.trace],
+                               dtype=np.int64)
+        # no predictor in the envelope: admit() sets l_pred = l_real
+        self.l_pred = self.l_real
+        self.l_out = np.zeros(n, dtype=np.int64)
+        self.tds = np.zeros(n)                      # t_decode_spent
+        self.t_first = np.full(n, np.nan)
+        self.t_fin = np.full(n, np.nan)
+
+        # ---- mutable worker state ------------------------------------------
+        Bcap = max(int(self.MAXB.max()), 1) if W else 1
+        self.mem = np.full((W, Bcap), -1, dtype=np.int64)   # ongoing members
+        self.cnt = np.zeros(W, dtype=np.int64)
+        self.bsz = np.zeros(W, dtype=np.int64)      # cnt + len(newb)
+        self.t_w = np.zeros(W)                      # local worker clocks
+        self.ctx = np.zeros(W, dtype=np.int64)      # Σ context over ongoing
+        self.wctx = np.zeros(W)                     # weighted-context cache
+        self.dirty = np.ones(W, dtype=bool)
+        self.norm = np.zeros(W)                     # capacity_norm cache
+        self.newb: List[List[int]] = [[] for _ in range(W)]
+        self.pre: List[List[int]] = [[] for _ in range(W)]
+        self.newsum = np.zeros(W, dtype=np.int64)   # Σ l_in over newb
+        self.queued: List[int] = []
+        self.fin_order: List[int] = []      # finish order (oracle's order)
+        self.preemptions = 0
+        self.beats = 0
+
+    def _grow_mem(self) -> None:
+        # resumes can push a batch past max_batch (placement bounds only
+        # new admissions, like the scalar engine's unbounded ongoing list)
+        W, B = self.mem.shape
+        nm = np.full((W, 2 * B), -1, dtype=np.int64)
+        nm[:, :B] = self.mem
+        self.mem = nm
+
+    # ---- weighted-context / capacity-norm caches ---------------------------
+
+    def _recompute_wctx(self) -> None:
+        """Ordered recompute of the weighted-context cache for dirty workers
+        (sequential cumsum over ongoing-then-new_batch, like the scalar
+        ``_wctx_now``)."""
+        g = self.gamma
+        for wi in np.nonzero(self.dirty)[0]:
+            cnt = int(self.cnt[wi])
+            nb = self.newb[wi]
+            if cnt == 0 and not nb:
+                self.wctx[wi] = 0.0
+            else:
+                m = self.mem[wi, :cnt]
+                vals = self.l_in[m] + g * self.l_pred[m]
+                if nb:
+                    nba = np.asarray(nb, dtype=np.int64)
+                    vals = np.concatenate(
+                        [vals, self.l_in[nba] + g * self.l_pred[nba]])
+                self.wctx[wi] = np.cumsum(vals)[-1]
+            self.dirty[wi] = False
+
+    def _refresh_norms(self) -> None:
+        for wi in range(self.W):
+            self.norm[wi] = math.hypot(
+                self.bsz[wi] / self.maxb_norm[wi],
+                self.wctx[wi] / self.cmax_norm[wi])
+
+    def _kv_peak_with(self, wi: int, ridx: int) -> float:
+        cnt = int(self.cnt[wi])
+        ids = self.mem[wi, :cnt]
+        extra = self.newb[wi] + [ridx]
+        ids = np.concatenate([ids, np.asarray(extra, dtype=np.int64)])
+        rem = np.maximum(self.l_pred[ids] - self.l_out[ids], 0)
+        ctx = self.l_in[ids] + self.l_out[ids]
+        _, _, _, _, _, h, j, _, _ = self.coef[wi]
+        return kv_peak_arrays(rem, ctx, h, j)
+
+    # ---- placement ---------------------------------------------------------
+
+    def _place(self, wi: int, ridx: int, v: float, li: int) -> None:
+        self.newb[wi].append(ridx)
+        self.newsum[wi] += li
+        self.bsz[wi] += 1
+        self.wctx[wi] += v
+        self.norm[wi] = math.hypot(
+            self.bsz[wi] / self.maxb_norm[wi],
+            self.wctx[wi] / self.cmax_norm[wi])
+
+    def _place_all_aladdin(self) -> None:
+        theta = self.theta
+        atgt = self.slo.atgt
+        ttft = self.slo.ttft
+        g = self.gamma
+        self._recompute_wctx()
+        self._refresh_norms()
+        # constraint (d) slack is over *ongoing* members only — fixed for
+        # the whole placement pass
+        B = self.mem.shape[1]
+        mask_slots = np.arange(B)[None, :] < self.cnt[:, None]
+        slack = slack_arrays(self.l_out[self.mem], self.tds[self.mem],
+                             mask_slots, atgt)
+        d_budget = theta * np.maximum(slack, 0.0)
+        still: List[int] = []
+        for ridx in self.queued:
+            li = int(self.l_in[ridx])
+            v = li + g * int(self.l_pred[ridx])
+            bpost = self.bsz + 1
+            okb = (bpost <= self.MAXB) & (
+                self.wctx + v <= theta * decode_budget_arrays(
+                    bpost, atgt, self.K2, self.C2, self.C3))
+            pre_t = self.K1 * (self.newsum + li) + self.C1
+            mask = okb & (pre_t <= ttft) & (pre_t <= d_budget)
+            placed = False
+            if mask.any():
+                for wi in best_fit_order(self.norm):
+                    wi = int(wi)
+                    if not mask[wi]:
+                        continue
+                    if self._kv_peak_with(wi, ridx) \
+                            <= theta * self.coef[wi][7]:
+                        self._place(wi, ridx, v, li)
+                        placed = True
+                        break
+            if not placed:
+                still.append(ridx)
+        self.queued[:] = still
+
+    def _place_all_jsq(self) -> None:
+        still: List[int] = []
+        for ridx in self.queued:
+            li = int(self.l_in[ridx])
+            csum = self.ctx + self.newsum       # Σ context incl. new_batch
+            kv_now = (self.H * csum + self.J * self.bsz) \
+                + (self.H * li + self.J)
+            mask = (kv_now <= self.M) & (self.bsz + 1 <= self.MAXB)
+            order = jsq_order(self.bsz)
+            hit = np.nonzero(mask[order])[0]
+            if hit.size:
+                wi = int(order[hit[0]])
+                self._place(wi, ridx, li + self.gamma * int(
+                    self.l_pred[ridx]), li)
+            else:
+                still.append(ridx)
+        self.queued[:] = still
+
+    def _admit_naive_scalar(self, wi: int, li: int) -> bool:
+        _, _, _, _, _, h, j, M, maxb = self.coef[wi]
+        csum = int(self.ctx[wi]) + int(self.newsum[wi])
+        own = int(self.bsz[wi])
+        kv_now = (h * csum + j * own) + (h * li + j)
+        return kv_now <= M and own + 1 <= maxb
+
+    def _place_all_po2(self) -> None:
+        self._recompute_wctx()
+        W = self.W
+        g = self.gamma
+        still: List[int] = []
+        for ridx in self.queued:
+            li = int(self.l_in[ridx])
+            v = li + g * int(self.l_pred[ridx])
+            if W >= 2:
+                i, jj = self.rng.choice(W, size=2, replace=False)
+                cands = sorted((int(i), int(jj)),
+                               key=lambda w: self.wctx[w])
+            else:
+                cands = list(range(W))
+            placed = False
+            for wi in cands:
+                if self._admit_naive_scalar(wi, li):
+                    self._place(wi, ridx, v, li)
+                    placed = True
+                    break
+            if not placed:
+                for wi in np.argsort(self.wctx, kind="stable"):
+                    wi = int(wi)
+                    if wi in cands:
+                        continue
+                    if self._admit_naive_scalar(wi, li):
+                        self._place(wi, ridx, v, li)
+                        placed = True
+                        break
+            if not placed:
+                still.append(ridx)
+        self.queued[:] = still
+
+    # ---- worker advance ----------------------------------------------------
+
+    def _advance(self, wi: int, t_start: float, t_end: float) -> None:
+        k1, c1, k2, c2, c3, h, j, M, _ = self.coef[wi]
+        mem = self.mem
+        l_in = self.l_in
+        l_out = self.l_out
+        l_real = self.l_real
+        tds = self.tds
+        t_first = self.t_first
+        t_fin = self.t_fin
+        arrival = self.arrival
+        t = float(self.t_w[wi])
+        cnt = int(self.cnt[wi])
+        ctx = int(self.ctx[wi])
+        newb = self.newb[wi]
+        pre = self.pre[wi]
+        resume_thr = 0.9 * M
+        while t < t_end:
+            # resume preempted requests when KV frees up (recompute: prompt
+            # AND generated tokens re-prefill). Like the scalar engine, the
+            # admission test uses the pre-resume occupancy for every pop.
+            resume: List[int] = []
+            while pre:
+                cand = pre[0]
+                occ = (h * ctx + j * cnt) \
+                    + h * (int(l_in[cand]) + int(l_out[cand])) + j
+                if occ > resume_thr:
+                    break
+                resume.append(pre.pop(0))
+            if newb or resume:
+                total_in = sum(int(l_in[r]) + int(l_out[r]) for r in newb) \
+                    + sum(int(l_in[r]) + int(l_out[r]) for r in resume)
+                dur = k1 * total_in + c1
+                t += dur
+                # prefill preempts decode: ongoing + still-preempted +
+                # resumed victims all stall through it
+                if cnt:
+                    tds[mem[wi, :cnt]] += dur
+                for r in pre:
+                    tds[r] += dur
+                for r in resume:
+                    tds[r] += dur
+                for r in newb:
+                    t_first[r] = t
+                    l_out[r] = 1
+                    if cnt == mem.shape[1]:
+                        self._grow_mem()
+                        mem = self.mem
+                    mem[wi, cnt] = r
+                    cnt += 1
+                    ctx += int(l_in[r]) + 1
+                for r in resume:
+                    if cnt == mem.shape[1]:
+                        self._grow_mem()
+                        mem = self.mem
+                    mem[wi, cnt] = r
+                    cnt += 1
+                    ctx += int(l_in[r]) + int(l_out[r])
+                newb.clear()
+                self.newsum[wi] = 0
+                continue
+            if cnt == 0:
+                t = t_end
+                break
+            # KV overflow -> preempt the youngest (recompute semantics)
+            while h * ctx + j * cnt > M and cnt > 1:
+                row = mem[wi, :cnt]
+                vpos = int(np.argmax(arrival[row]))
+                victim = int(row[vpos])
+                ctx -= int(l_in[victim]) + int(l_out[victim])
+                mem[wi, vpos:cnt - 1] = mem[wi, vpos + 1:cnt]
+                cnt -= 1
+                pre.append(victim)
+                self.preemptions += 1
+            # decode segment: batch fixed until finish/overflow/heartbeat
+            b = cnt
+            row = mem[wi, :cnt]
+            n_fin = int(np.min(np.maximum(l_real[row] - l_out[row], 1)))
+            C = ctx
+            k = 0
+            seg = 0.0
+            dur0 = k2 * C + c2 * b + c3
+            est = (t_end - t) / dur0 if dur0 > 0 else float(n_fin)
+            if n_fin <= _SEG_VECTOR_MIN or est <= _SEG_VECTOR_MIN \
+                    or dur0 <= 0:
+                while k < n_fin and t < t_end:
+                    if k > 0 and h * C + j * b > M and b > 1:
+                        break
+                    dur = k2 * C + c2 * b + c3
+                    t += dur
+                    seg += dur
+                    C += b
+                    k += 1
+            else:
+                kmax = min(n_fin, int(est) + 2)
+                ks = np.arange(kmax, dtype=np.int64)
+                C_k = C + ks * b
+                cb = c2 * b
+                durs = k2 * C_k + cb + c3
+                t_traj = np.add.accumulate(
+                    np.concatenate(([t], durs)))
+                k = int(np.searchsorted(t_traj[:kmax], t_end, side="left"))
+                if b > 1:
+                    viol = h * C_k + j * b > M
+                    viol[0] = False
+                    nz = np.nonzero(viol)[0]
+                    if nz.size:
+                        k = min(k, int(nz[0]))
+                if k > 0:
+                    seg = float(np.add.accumulate(durs[:k])[-1])
+                    t = float(t_traj[k])
+                    C += k * b
+            ctx = C
+            l_out[row] += k
+            tds[row] += seg
+            done = l_out[row] >= l_real[row]
+            if done.any():
+                fin_ids = row[done]
+                t_fin[fin_ids] = t
+                self.fin_order.extend(int(r) for r in fin_ids)
+                ctx -= int((l_in[fin_ids] + l_out[fin_ids]).sum())
+                kept = row[~done]
+                cnt = kept.shape[0]
+                mem[wi, :cnt] = kept
+            # preempted requests' ATGT clocks also advance (stalled)
+            for r in pre:
+                tds[r] += seg
+        self.t_w[wi] = t
+        self.cnt[wi] = cnt
+        self.ctx[wi] = ctx
+        self.bsz[wi] = cnt + len(newb)
+        self.dirty[wi] = True
+
+    # ---- the heartbeat loop ------------------------------------------------
+
+    def _step(self, t: float, t_next: float) -> None:
+        if self.queued:
+            if self.policy == "aladdin":
+                self._place_all_aladdin()
+            elif self.policy == "jsq":
+                self._place_all_jsq()
+            else:
+                self._place_all_po2()
+        t_w = self.t_w
+        cnt = self.cnt
+        for wi in range(self.W):
+            if cnt[wi] == 0 and not self.newb[wi] and not self.pre[wi]:
+                # idle worker: the scalar loop just fast-forwards its clock
+                if t_w[wi] < t_next:
+                    t_w[wi] = t_next
+                self.dirty[wi] = True
+            else:
+                self._advance(wi, t, t_next)
+
+    def _drained(self) -> bool:
+        return (not self.queued and int(self.cnt.sum()) == 0
+                and all(not nb for nb in self.newb)
+                and all(not p for p in self.pre))
+
+    def run(self) -> None:
+        n = self.n
+        horizon = (float(self.arrival[n - 1]) if n else 0.0) + self.tail
+        hb = self.hb
+        arr = self.arrival
+        t = 0.0
+        idx = 0
+        queued = self.queued
+        while t < horizon:
+            t_next = t + hb
+            while idx < n and arr[idx] <= t:
+                queued.append(idx)
+                idx += 1
+            self._step(t, t_next)
+            self.beats += 1
+            t = t_next
+            if idx >= n and self._drained():
+                break
+
+    # ---- results -----------------------------------------------------------
+
+    def writeback(self) -> List[Request]:
+        """Scatter the array state back onto the ``Request`` objects (the
+        same mutation contract as the reference engine) and return the
+        finished sublist in *finish order* — ``np.mean``/``np.percentile``
+        are pairwise reductions, so matching the oracle's report to the
+        last ulp needs the oracle's list order, not just its members."""
+        for pos, r in enumerate(self.trace):
+            r.l_pred = int(self.l_pred[pos])
+            r.l_out = int(self.l_out[pos])
+            r.t_decode_spent = float(self.tds[pos])
+            tf = self.t_first[pos]
+            r.t_first_token = None if math.isnan(tf) else float(tf)
+            te = self.t_fin[pos]
+            if not math.isnan(te):
+                r.t_finish = float(te)
+                r.state = ReqState.FINISHED
+        return [self.trace[i] for i in self.fin_order]
+
+
+def run_colocated_vectorized(scenario, seed: Optional[int] = None,
+                             tail: float = DEFAULT_TAIL):
+    """Run a colocated ``Scenario`` on the struct-of-arrays engine and
+    return the same :class:`~repro.serving.api.RunReport` the reference
+    engine would produce (bit-for-bit on the supported envelope)."""
+    from repro.serving import api
+
+    specs = check_colocated_envelope(scenario)
+    s = seed if seed is not None else scenario.seed
+    trace = scenario.materialize()
+    eng = _Engine(specs, trace, scenario.topology, scenario.slo, s,
+                  tail=tail)
+    eng.run()
+    finished = eng.writeback()
+    rep = api.RunReport(topology="colocated", scaling="fixed",
+                        **api._percentiles(finished, len(trace),
+                                           scenario.slo))
+    rep.peak_workers = eng.W
+    rep.gpu_cost = sum(sp.n_accelerators for sp in specs)
+    rep.moves = 0
+    rep.beats = eng.beats       # benchmark side channel (not in row())
+    return rep

@@ -1,0 +1,513 @@
+"""Compiled colocated simulation core (the ``engine="jax"`` path).
+
+The whole heartbeat loop — admission, FIFO placement, per-worker prefill /
+decode-segment advancement — runs as ONE ``jax.jit``-compiled
+``lax.while_loop`` over beats, with the per-worker advance ``vmap``-ped
+across the fleet and (for ``optimize``) the entire simulation ``vmap``-ped
+across a batch of candidate worker counts, so a whole bracket of the
+binary search evaluates in a single compiled call
+(:func:`run_candidate_batch`).
+
+Scope: this is the throughput engine, not the oracle. It compiles the
+semantics of :mod:`repro.serving.fastsim` (itself bit-for-bit against the
+Python reference) for the **inert-KV** envelope — ``KVModel(h=0, j=0)``,
+the regime of the calibrated benchmark specs, where KV occupancy never
+binds so preemption/resume cannot occur — for fixed colocated
+``aladdin``/``jsq`` fleets. Everything else raises ``ValueError``.
+
+Performance contract: the beat body touches only O(W·B) lane-resident
+state (request clocks live in per-worker row arrays, not in trace-sized
+arrays), because on CPU XLA a bulk scatter into a trace-sized carry costs
+~50 ns *per update element* per beat while single-element updates and
+fused masked reductions are ~0.1 µs. Finished rows are drained into the
+per-request output arrays one finisher at a time (a few per beat); the
+still-running remainder is flushed with one bulk scatter after the loop.
+
+Numerics: each request's clock arithmetic keeps the reference's
+*sequential* add order (decode segments advance through an inner
+``while_loop`` of dependent adds on lane-local rows). Worker aggregates
+(context sums, batch counts) are reduced in slot order rather than
+admission order — exact anyway, because they are sums of integers (and
+integer multiples of ``gamma``) well below 2^52. XLA may still contract
+multiply-add chains, so agreement with the oracle is to the last few ulps
+rather than bit-for-bit — the equivalence tests pin the integer outputs
+exactly and the float outputs at ``rtol=1e-12``.
+
+``jax`` is an optional dependency: importing this module without it
+raises ``ImportError`` (``api.run`` only imports it on ``engine="jax"``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import enable_x64
+
+from repro.core.request import ReqState
+from repro.serving.fastsim import DEFAULT_TAIL, check_colocated_envelope
+
+_BIG_I = 1 << 50
+
+
+def check_jax_envelope(scenario) -> List:
+    """The vectorized-engine envelope, further restricted to what the
+    compiled core supports: inert KV, and aladdin/jsq placement (po2
+    consumes the numpy Generator stream request-by-request, which a
+    compiled batch cannot reproduce)."""
+    specs = check_colocated_envelope(scenario)
+    if scenario.topology.policy == "po2":
+        raise ValueError("the jax engine supports aladdin/jsq placement "
+                         "(po2 needs the sequential rng stream; use "
+                         "engine='vectorized')")
+    for s in specs:
+        if s.perf.kv.h != 0.0 or s.perf.kv.j != 0.0:
+            raise ValueError("the jax engine requires inert KV "
+                             "(KVModel(h=0, j=0)); KV-bound scenarios need "
+                             "engine='vectorized' or 'reference'")
+        if s.kv_capacity <= 0:
+            raise ValueError("kv_capacity must be positive")
+    return specs
+
+
+# ---- the compiled kernel -----------------------------------------------------
+
+
+def _advance_lane(t0, active0, started0, li, lr, lo, tds, tf1, tfn,
+                  k1, c1, k2, c2, c3, t_end):
+    """One worker's ``advance_to(t_end)``: alternate prefill / decode
+    segments until the local clock reaches the beat end. Membership is a
+    pair of masks (``active`` rows hold a request; ``started`` ones have
+    been prefilled) so finished slots become reusable holes without any
+    compaction; all row state is lane-local, keeping every request's
+    sequential add order. vmapped across the fleet."""
+
+    def cond(st):
+        return st[0] < t_end
+
+    def body(st):
+        t, active, started, lo, tds, tf1, tfn = st
+        newm = active & ~started
+        has_new = jnp.any(newm)
+        n_on = jnp.sum(active & started)
+        # --- prefill branch: joint new-batch prefill, decode stalls -------
+        tot_in = jnp.sum(jnp.where(newm, li, 0))
+        dur_p = k1 * tot_in + c1
+        t_pre = t + dur_p
+        tds_pre = tds + jnp.where(active & started, dur_p, 0.0)
+        tf1_pre = jnp.where(newm, t_pre, tf1)
+        lo_pre = jnp.where(newm, jnp.int64(1), lo)
+        # --- decode branch: batch fixed until the next finish boundary ----
+        do_dec = ~has_new & (n_on > 0)
+        b = n_on
+        C0 = jnp.sum(jnp.where(active, li + lo, 0))
+        n_fin = jnp.min(jnp.where(active, jnp.maximum(lr - lo, 1), _BIG_I))
+        n_fin = jnp.where(do_dec, n_fin, 0)
+        cb = c2 * b
+
+        def dcond(dst):
+            k, td, _seg = dst
+            return (k < n_fin) & (td < t_end)
+
+        def dbody(dst):
+            k, td, seg = dst
+            dur = k2 * (C0 + k * b) + cb + c3
+            return k + 1, td + dur, seg + dur
+
+        k, t_dec, seg = lax.while_loop(
+            dcond, dbody, (jnp.int64(0), t, jnp.float64(0.0)))
+        lo_dec = lo + jnp.where(active, k, 0)
+        tds_dec = tds + jnp.where(active, seg, 0.0)
+        done = active & (lo_dec >= lr)
+        tfn_dec = jnp.where(done, t_dec, tfn)
+        # --- select: prefill > decode > idle ------------------------------
+        t_new = jnp.where(has_new, t_pre, jnp.where(do_dec, t_dec, t_end))
+        return (t_new,
+                jnp.where(has_new, active, active & ~done),
+                jnp.where(has_new, active, started),
+                jnp.where(has_new, lo_pre,
+                          jnp.where(do_dec, lo_dec, lo)),
+                jnp.where(has_new, tds_pre,
+                          jnp.where(do_dec, tds_dec, tds)),
+                jnp.where(has_new, tf1_pre, tf1),
+                jnp.where(do_dec, tfn_dec, tfn))
+
+    return lax.while_loop(cond, body,
+                          (t0, active0, started0, lo, tds, tf1, tfn))
+
+
+def _make_simulate(n: int, W: int, B: int, hb: float, horizon: float,
+                   theta: float, gamma: float, ttft: float, atgt: float,
+                   policy: str,
+                   coefs: Tuple[Tuple[float, ...], ...],
+                   maxb: Tuple[int, ...],
+                   maxb_norm: Tuple[float, ...],
+                   cmax_norm: Tuple[float, ...]):
+    """Close over the static configuration and return the whole-trace
+    simulation ``fn(arrival, l_in, l_real, n_active)`` (jit/vmap-able)."""
+    K1, C1, K2, C2, C3 = (jnp.asarray(c) for c in coefs)
+    MAXB = jnp.asarray(maxb, dtype=jnp.int64)
+    MAXBN = jnp.asarray(maxb_norm)
+    CMAXN = jnp.asarray(cmax_norm)
+    is_aladdin = policy == "aladdin"
+
+    def simulate(arrival, l_in, l_real, n_active):
+        alive = jnp.arange(W) < n_active
+
+        def place_pass(qlen, q, mem, active, started, lane_li, lane_lr,
+                       lane_lo, lane_tds, lane_tf1, lane_tfn):
+            on = active & started
+            if is_aladdin:
+                # constraint (d) slack over *ongoing* members: fixed for
+                # the whole pass (placement only adds new_batch entries)
+                slack = jnp.min(jnp.where(
+                    on, atgt * jnp.maximum(lane_lo - 1, 0) - lane_tds,
+                    jnp.inf), axis=1)
+                d_budget = theta * jnp.maximum(slack, 0.0)
+            else:
+                d_budget = jnp.zeros(W)
+            # l_pred == l_real inside the envelope (no predictor); sums of
+            # integers (x gamma), so slot order cannot perturb them
+            wctx0 = jnp.sum(jnp.where(
+                active, lane_li + gamma * lane_lr, 0.0), axis=1)
+            newsum0 = jnp.sum(jnp.where(active & ~started, lane_li, 0),
+                              axis=1)
+            cnt0 = jnp.sum(active, axis=1)
+
+            def pbody(st):
+                (i, keep, q, mem, active, started, lane_li, lane_lr,
+                 lane_lo, lane_tds, lane_tf1, lane_tfn, cnt, newsum,
+                 wctx) = st
+                rid = q[i]
+                liv = l_in[rid]
+                lrv = l_real[rid]
+                v = liv + gamma * lrv
+                bpost = cnt + 1
+                if is_aladdin:
+                    budget = jnp.where(
+                        K2 > 0,
+                        jnp.maximum(((atgt - C3) - C2 * bpost)
+                                    / jnp.where(K2 > 0, K2, 1.0), 0.0),
+                        jnp.inf)
+                    pre_t = K1 * (newsum + liv) + C1
+                    ok = ((bpost <= MAXB)
+                          & (wctx + v <= theta * budget)
+                          & (pre_t <= ttft) & (pre_t <= d_budget) & alive)
+                    # best-fit: max capacity_norm, ties to the lowest index
+                    # (argmax returns the first maximum, like stable sort)
+                    norm = jnp.hypot(cnt / MAXBN, wctx / CMAXN)
+                    w = jnp.argmax(jnp.where(ok, norm, -jnp.inf))
+                else:
+                    # jsq: min batch, ties to the lowest index; inert KV
+                    # makes _admit_naive's occupancy test vacuous
+                    ok = (bpost <= MAXB) & alive
+                    w = jnp.argmin(jnp.where(ok, cnt, _BIG_I))
+                placed = jnp.any(ok)
+                # placed implies cnt[w] < max_batch <= B, so the row has a
+                # hole; out-of-range updates drop, so B is a safe no-op
+                wslot = jnp.where(placed, jnp.argmin(active[w]), B)
+                mem = mem.at[w, wslot].set(rid, mode="drop")
+                active = active.at[w, wslot].set(True, mode="drop")
+                started = started.at[w, wslot].set(False, mode="drop")
+                lane_li = lane_li.at[w, wslot].set(liv, mode="drop")
+                lane_lr = lane_lr.at[w, wslot].set(lrv, mode="drop")
+                lane_lo = lane_lo.at[w, wslot].set(0, mode="drop")
+                lane_tds = lane_tds.at[w, wslot].set(0.0, mode="drop")
+                lane_tf1 = lane_tf1.at[w, wslot].set(jnp.nan, mode="drop")
+                lane_tfn = lane_tfn.at[w, wslot].set(jnp.nan, mode="drop")
+                cnt = cnt.at[w].add(jnp.where(placed, 1, 0))
+                newsum = newsum.at[w].add(jnp.where(placed, liv, 0))
+                wctx = wctx.at[w].add(jnp.where(placed, v, 0.0))
+                # unplaced requests stay queued, FIFO order preserved
+                qslot = jnp.where(placed, jnp.int64(n), keep)
+                q = q.at[qslot].set(rid, mode="drop")
+                keep = keep + jnp.where(placed, 0, 1)
+                return (i + 1, keep, q, mem, active, started, lane_li,
+                        lane_lr, lane_lo, lane_tds, lane_tf1, lane_tfn,
+                        cnt, newsum, wctx)
+
+            st = lax.while_loop(
+                lambda st: st[0] < qlen, pbody,
+                (jnp.int64(0), jnp.int64(0), q, mem, active, started,
+                 lane_li, lane_lr, lane_lo, lane_tds, lane_tf1, lane_tfn,
+                 cnt0, newsum0, wctx0))
+            return st[1:12]
+
+        def beat_body(st):
+            (t, idx, qlen, q, mem, active, started, t_w, lane_li, lane_lr,
+             lane_lo, lane_tds, lane_tf1, lane_tfn, out_lo, out_tds,
+             out_tf1, out_tfn, beats) = st
+
+            # admit arrivals <= t (the trace is sorted by arrival)
+            def adm_body(ast):
+                i2, qlen2, q2 = ast
+                return i2 + 1, qlen2 + 1, q2.at[qlen2].set(i2)
+
+            idx, qlen, q = lax.while_loop(
+                lambda ast: (ast[0] < n) & (arrival[ast[0]] <= t),
+                adm_body, (idx, qlen, q))
+            (qlen, q, mem, active, started, lane_li, lane_lr, lane_lo,
+             lane_tds, lane_tf1, lane_tfn) = place_pass(
+                qlen, q, mem, active, started, lane_li, lane_lr, lane_lo,
+                lane_tds, lane_tf1, lane_tfn)
+            # Event skip: with an empty queue, placement is a no-op at
+            # every beat until the next arrival is admitted, and decode
+            # segments continue across beat boundaries unchanged (lane
+            # clocks persist and overshoot; segments end at finishes, not
+            # beats).  So step the beat clock with the *same sequential
+            # t += hb adds* as stepwise execution (bit-identical grid)
+            # until the first beat whose admission check would fire, and
+            # cover the whole gap with one advance call.  A backlogged
+            # queue forces single-beat stepping, because placement must
+            # retry every beat.
+            can_skip = qlen == 0
+            next_arr = jnp.where(idx < n,
+                                 arrival[jnp.minimum(idx, n - 1)], jnp.inf)
+
+            def jcond(jst):
+                j, tt = jst
+                return ((tt < horizon) & (tt < next_arr)
+                        & ((j == 0) | can_skip))
+
+            k_steps, t_next = lax.while_loop(
+                jcond, lambda jst: (jst[0] + 1, jst[1] + hb),
+                (jnp.int64(0), t))
+            # advance every worker on its lane-resident rows
+            pre_active = active
+            t_w, active, started, lane_lo, lane_tds, lane_tf1, lane_tfn = \
+                jax.vmap(_advance_lane,
+                         in_axes=(0,) * 14 + (None,))(
+                    t_w, active, started, lane_li, lane_lr, lane_lo,
+                    lane_tds, lane_tf1, lane_tfn, K1, C1, K2, C2, C3,
+                    t_next)
+            # drain this step's finishers into the per-request outputs one
+            # at a time (bulk scatters into trace-sized arrays are the
+            # dominant cost on CPU XLA; single-element updates are free)
+            fin = pre_active & ~active
+
+            def ext_body(_j, es):
+                fm, o_lo, o_tds, o_tf1, o_tfn, mf = es
+                fl = jnp.argmax(fm.reshape(-1))
+                w, s = fl // B, fl % B
+                rid = mem[w, s]
+                o_lo = o_lo.at[rid].set(lane_lo[w, s])
+                o_tds = o_tds.at[rid].set(lane_tds[w, s])
+                o_tf1 = o_tf1.at[rid].set(lane_tf1[w, s])
+                o_tfn = o_tfn.at[rid].set(lane_tfn[w, s])
+                mf = jnp.maximum(mf, lane_tfn[w, s])
+                return fm.at[w, s].set(False), o_lo, o_tds, o_tf1, o_tfn, mf
+
+            _fm, out_lo, out_tds, out_tf1, out_tfn, maxfin = lax.fori_loop(
+                0, jnp.sum(fin), ext_body,
+                (fin, out_lo, out_tds, out_tf1, out_tfn, -jnp.inf))
+            # Stepwise execution exits once the last request finishes; the
+            # final drain jump runs all the way to the horizon, so clamp
+            # its beat count to the last finish (exact to within the final
+            # decode segment's span -- nothing downstream consumes beats
+            # beyond the benchmark rate).
+            emptied = ~jnp.any(active)
+            k_fin = jnp.ceil((maxfin - t) / hb).astype(jnp.int64)
+            k_used = jnp.where((idx >= n) & emptied & (k_steps > 1),
+                               jnp.clip(k_fin, 1, k_steps), k_steps)
+            return (t_next, idx, qlen, q, mem, active, started, t_w,
+                    lane_li, lane_lr, lane_lo, lane_tds, lane_tf1,
+                    lane_tfn, out_lo, out_tds, out_tf1, out_tfn,
+                    beats + k_used)
+
+        def beat_cond(st):
+            t, idx, qlen, active = st[0], st[1], st[2], st[5]
+            drained = (idx >= n) & (qlen == 0) & ~jnp.any(active)
+            return (t < horizon) & ~drained
+
+        st0 = (jnp.float64(0.0), jnp.int64(0), jnp.int64(0),
+               jnp.zeros((max(n, 1),), dtype=jnp.int64),
+               jnp.full((W, B), -1, dtype=jnp.int64),
+               jnp.zeros((W, B), dtype=bool),
+               jnp.zeros((W, B), dtype=bool),
+               jnp.zeros((W,)),
+               jnp.zeros((W, B), dtype=jnp.int64),
+               jnp.zeros((W, B), dtype=jnp.int64),
+               jnp.zeros((W, B), dtype=jnp.int64),
+               jnp.zeros((W, B)),
+               jnp.full((W, B), jnp.nan), jnp.full((W, B), jnp.nan),
+               jnp.zeros((n,), dtype=jnp.int64),
+               jnp.zeros((n,)),
+               jnp.full((n,), jnp.nan), jnp.full((n,), jnp.nan),
+               jnp.int64(0))
+        st = lax.while_loop(beat_cond, beat_body, st0)
+        mem, active = st[4], st[5]
+        lane_lo, lane_tds, lane_tf1, lane_tfn = st[10], st[11], st[12], \
+            st[13]
+        out_lo, out_tds, out_tf1, out_tfn, beats = st[14], st[15], st[16], \
+            st[17], st[18]
+        # flush still-running rows (partial clocks) once, after the loop
+        sink = jnp.where(active, mem, n).reshape(-1)
+        out_lo = out_lo.at[sink].set(lane_lo.reshape(-1), mode="drop")
+        out_tds = out_tds.at[sink].set(lane_tds.reshape(-1), mode="drop")
+        out_tf1 = out_tf1.at[sink].set(lane_tf1.reshape(-1), mode="drop")
+        out_tfn = out_tfn.at[sink].set(lane_tfn.reshape(-1), mode="drop")
+        return out_lo, out_tds, out_tf1, out_tfn, beats
+
+    return simulate
+
+
+# compiled kernels are cached per static configuration; the jit wrapper on
+# top caches its traces too, so repeated runs/batches recompile nothing
+_KERNELS: Dict[Tuple, object] = {}
+
+
+def _kernel_for(scenario, specs, trace, batched: bool):
+    from repro.serving import api
+
+    topo = scenario.topology
+    W = len(specs)
+    B = max(max(int(s.max_batch) for s in specs), 1)
+    arrival = np.array(sorted(r.arrival for r in trace))
+    n = len(trace)
+    horizon = (float(arrival[-1]) if n else 0.0) + DEFAULT_TAIL
+    cmax_norm = []
+    for s in specs:
+        cmax = s.perf.decode.max_total_context(1, scenario.slo.atgt) or 1.0
+        cmax_norm.append(max(cmax, 1.0))
+    key = (n, W, B, float(topo.heartbeat), horizon, float(topo.theta),
+           float(topo.gamma), float(scenario.slo.ttft),
+           float(scenario.slo.atgt), topo.policy,
+           tuple((float(s.perf.prefill.k1), float(s.perf.prefill.c1),
+                  float(s.perf.decode.k2), float(s.perf.decode.c2),
+                  float(s.perf.decode.c3), int(s.max_batch)) for s in specs),
+           batched)
+    fn = _KERNELS.get(key)
+    if fn is None:
+        coefs = tuple(tuple(getattr(s.perf.prefill, a) for s in specs)
+                      for a in ("k1", "c1")) + \
+            tuple(tuple(getattr(s.perf.decode, a) for s in specs)
+                  for a in ("k2", "c2", "c3"))
+        sim = _make_simulate(
+            n, W, B, float(topo.heartbeat), horizon, float(topo.theta),
+            float(topo.gamma), float(scenario.slo.ttft),
+            float(scenario.slo.atgt), topo.policy, coefs,
+            tuple(int(s.max_batch) for s in specs),
+            tuple(max(int(s.max_batch), 1) for s in specs),
+            tuple(cmax_norm))
+        if batched:
+            fn = jax.jit(jax.vmap(sim, in_axes=(None, None, None, 0)))
+        else:
+            fn = jax.jit(sim)
+        _KERNELS[key] = fn
+    return fn
+
+
+def _trace_arrays(trace):
+    order = sorted(range(len(trace)), key=lambda i: trace[i].arrival)
+    ordered = [trace[i] for i in order]
+    arrival = np.array([r.arrival for r in ordered])
+    l_in = np.array([r.l_in for r in ordered], dtype=np.int64)
+    l_real = np.array([r.l_real for r in ordered], dtype=np.int64)
+    return ordered, arrival, l_in, l_real
+
+
+def _report_from_arrays(scenario, specs, n_active, arrival, l_real, l_out,
+                        tds, t_first, t_fin):
+    """Replicate ``api._percentiles`` over the result arrays (requests in
+    finish order, like the reference's finished list)."""
+    from repro.serving import api
+
+    slo = scenario.slo
+    n = len(arrival)
+    fin = ~np.isnan(t_fin)
+    order = np.lexsort((np.arange(n)[fin], t_fin[fin]))
+    idx = np.nonzero(fin)[0][order]
+    ttfts = t_first[idx] - arrival[idx]
+    has_atgt = l_real[idx] > 1
+    atgts = tds[idx][has_atgt] / np.maximum(l_real[idx][has_atgt] - 1, 1)
+    ok = (ttfts <= slo.ttft)
+    ok_atgt = np.ones(len(idx), dtype=bool)
+    ok_atgt[has_atgt] = atgts <= slo.atgt
+    rep = api.RunReport(
+        topology="colocated", scaling="fixed",
+        attainment=float(np.sum(ok & ok_atgt)) / max(n, 1),
+        p99_atgt=float(np.percentile(atgts, 99)) if len(atgts)
+        else float("nan"),
+        p99_ttft=float(np.percentile(ttfts, 99)) if len(ttfts)
+        else float("nan"),
+        mean_atgt=float(np.mean(atgts)) if len(atgts) else float("nan"),
+        finished=int(len(idx)), total=n)
+    rep.peak_workers = int(n_active)
+    rep.gpu_cost = sum(s.n_accelerators for s in specs[:n_active])
+    rep.moves = 0
+    return rep
+
+
+def run_colocated_jax(scenario, seed: Optional[int] = None):
+    """Run a colocated ``Scenario`` on the compiled engine, mutate the
+    trace's ``Request`` objects with the outcome (the same contract as the
+    other engines) and return the ``RunReport``. Also returns the executed
+    beat count via the report-side channel ``rep.beats`` attribute used by
+    the benchmarks."""
+    specs = check_jax_envelope(scenario)
+    trace = scenario.materialize()
+    ordered, arrival, l_in, l_real = _trace_arrays(trace)
+    # x64 is scoped, not a process-global flag: the serving models run in
+    # jax's default 32-bit mode and must not see this engine's precision
+    with enable_x64():
+        fn = _kernel_for(scenario, specs, trace, batched=False)
+        l_out, tds, t_first, t_fin, beats = (
+            np.asarray(x) for x in fn(arrival, l_in, l_real, len(specs)))
+    for pos, r in enumerate(ordered):
+        r.l_pred = int(l_real[pos])
+        r.l_out = int(l_out[pos])
+        r.t_decode_spent = float(tds[pos])
+        tf = t_first[pos]
+        r.t_first_token = None if math.isnan(tf) else float(tf)
+        te = t_fin[pos]
+        if not math.isnan(te):
+            r.t_finish = float(te)
+            r.state = ReqState.FINISHED
+    rep = _report_from_arrays(scenario, specs, len(specs), arrival, l_real,
+                              l_out, tds, t_first, t_fin)
+    rep.beats = int(beats)      # benchmark side channel (not in row())
+    return rep
+
+
+def run_candidate_batch(scenarios) -> List:
+    """Evaluate a batch of fleet-size candidates of the SAME workload /
+    spec / policy in one vmapped compiled call — the whole bracket of
+    ``optimize``'s search at once. Returns one ``RunReport`` per scenario
+    (candidate traces are not mutated; the search only reads reports)."""
+    if not scenarios:
+        return []
+    spec_lists = [check_jax_envelope(sc) for sc in scenarios]
+    base = scenarios[0]
+    base_spec = spec_lists[0][0]
+
+    def coef_key(s):
+        return (s.perf.prefill.k1, s.perf.prefill.c1, s.perf.decode.k2,
+                s.perf.decode.c2, s.perf.decode.c3, s.max_batch,
+                s.n_accelerators)
+
+    for sl in spec_lists:
+        if any(coef_key(s) != coef_key(base_spec) for s in sl):
+            # vmap shares one coefficient set across the batch
+            raise ValueError("run_candidate_batch needs homogeneous "
+                             "candidates of one worker spec")
+    W_max = max(len(sl) for sl in spec_lists)
+    trace = base.materialize()
+    _ordered, arrival, l_in, l_real = _trace_arrays(trace)
+    padded = [base_spec] * W_max
+    n_active = np.array([len(sl) for sl in spec_lists], dtype=np.int64)
+    with enable_x64():
+        fn = _kernel_for(base, padded, trace, batched=True)
+        l_out, tds, t_first, t_fin, beats = (
+            np.asarray(x) for x in fn(arrival, l_in, l_real, n_active))
+    reps = []
+    for i in range(len(scenarios)):
+        rep = _report_from_arrays(base, padded, int(n_active[i]), arrival,
+                                  l_real, l_out[i], tds[i], t_first[i],
+                                  t_fin[i])
+        rep.beats = int(beats[i])   # benchmark side channel
+        reps.append(rep)
+    return reps

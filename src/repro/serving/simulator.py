@@ -147,8 +147,10 @@ class SimWorker:
                 self.t += dur
                 # the prefill preempts decode: ongoing requests stall and
                 # their ATGT clocks keep running (this is what constraint (d)
-                # budgets and what naive placement ignores)
-                for r in w.ongoing + self.preempted:
+                # budgets and what naive placement ignores). Resumed victims
+                # stall through their own re-prefill too — recompute
+                # semantics: their decode clock never stopped.
+                for r in w.ongoing + self.preempted + resume:
                     r.t_decode_spent += dur
                 for r in w.new_batch:
                     if r.t_first_token is None:

@@ -65,8 +65,14 @@ def generate_trace(cfg: WorkloadConfig,
     """Poisson arrival stream with sampled (l_in, l_real) per request."""
     rng = np.random.default_rng(cfg.seed)
     rate = rate if rate is not None else cfg.mean_rate
+    scale = 1.0 / max(rate, 1e-9)
     n = max(int(rate * cfg.duration * 1.5), 16)
-    gaps = rng.exponential(1.0 / max(rate, 1e-9), n)
+    gaps = rng.exponential(scale, n)
+    # keep drawing until the stream covers the whole horizon — a fixed
+    # draw silently truncates the trace tail on unlucky seeds (same bug
+    # class nonhomogeneous_trace guards against)
+    while gaps.sum() < cfg.duration:
+        gaps = np.concatenate([gaps, rng.exponential(scale, n)])
     arrivals = np.cumsum(gaps)
     arrivals = arrivals[arrivals < cfg.duration]
     l_in, l_out = sample_lengths(cfg, len(arrivals), rng)

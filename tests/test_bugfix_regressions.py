@@ -1,0 +1,74 @@
+"""Regression pins for two silent-accounting bugs.
+
+1. ``workload.generate_trace`` drew a fixed ``rate*duration*1.5`` batch of
+   exponential gaps; on unlucky seeds the gaps sum below ``duration`` and the
+   trace tail silently vanished — the exact bug class the coverage loop in
+   ``nonhomogeneous_trace`` documents and guards against.
+
+2. ``SimWorker.advance_to`` charged prefill stalls to ``w.ongoing`` and
+   ``self.preempted`` but not to the KV-overflow victims being *resumed* by
+   that very prefill: their ATGT clock stopped for the duration of their own
+   re-prefill (recompute semantics say it keeps running), flattering
+   attainment under KV pressure.
+"""
+import pytest
+
+from repro.core.perf_model import (DecodeModel, KVModel, PerfModel,
+                                   PrefillModel)
+from repro.core.placement import PlacementConfig, WorkerState
+from repro.core.request import Request
+from repro.core.slo import SLO
+from repro.serving.simulator import SimWorker
+from repro.serving.workload import WorkloadConfig, generate_trace
+
+
+def test_generate_trace_covers_full_horizon():
+    # seed 37 at rate 0.5 draws 22 gaps summing to 24.76s < 30s: before the
+    # coverage loop the window [24.76, 30) was silently empty (22 requests,
+    # none after t=24.77). With it the stream extends to the horizon.
+    cfg = WorkloadConfig(mean_rate=0.5, duration=30.0, seed=37)
+    trace = generate_trace(cfg)
+    assert len(trace) == 25
+    assert trace[-1].arrival > 24.77
+    arrivals = [r.arrival for r in trace]
+    assert arrivals == sorted(arrivals)
+    assert all(t < cfg.duration for t in arrivals)
+
+
+def test_generate_trace_unaffected_when_draw_covers():
+    # a seed whose first draw already covers the horizon must be bit-for-bit
+    # unchanged by the coverage loop (same rng consumption order)
+    cfg = WorkloadConfig(mean_rate=3.0, duration=15.0, seed=9, in_mu=5.0,
+                         in_sigma=1.1, out_mu=5.3, out_sigma=0.9)
+    trace = generate_trace(cfg)
+    assert len(trace) == 43          # the shim-golden trace, untouched
+    assert trace[-1].arrival < cfg.duration
+
+
+def test_resumed_victim_atgt_clock_advances():
+    # force overflow -> preempt -> resume on one worker and assert the
+    # victim's decode clock ran through its own re-prefill
+    perf = PerfModel(kv=KVModel(h=1.0, j=0.0),
+                     prefill=PrefillModel(k1=1e-4, c1=0.02),
+                     decode=DecodeModel(k2=1e-5, c2=1e-4, c3=0.01))
+    pcfg = PlacementConfig(kv_capacity=151.0, max_batch=8)
+    slo = SLO(ttft=10.0, atgt=10.0)
+    w = WorkerState(0, pcfg, perf, slo)
+    sim = SimWorker(w, perf, 0.0, split_phase=False)
+    r1 = Request(l_in=100, l_pred=5, l_real=5, arrival=0.0)
+    r2 = Request(l_in=50, l_pred=100, l_real=100, arrival=0.1)
+    w.place(r1)
+    w.place(r2)
+    finished = []
+    sim.advance_to(1000.0, finished, t_start=0.0)
+    # after the joint prefill kv = h*(101+51) = 152 > 151: the younger r2 is
+    # preempted, resumed once r1 finishes, and decodes to completion
+    assert sim.preemptions == 1
+    assert len(finished) == 2
+    assert r2.t_finish is not None and r2.t_first_token is not None
+    # clock invariant: once the first token exists, every wall-second until
+    # finish is decode or stall — including the victim's own re-prefill.
+    # Pre-fix r2's clock was short by exactly that prefill duration.
+    for r in (r1, r2):
+        assert r.t_decode_spent == pytest.approx(
+            r.t_finish - r.t_first_token, rel=1e-9)

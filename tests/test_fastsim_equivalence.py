@@ -1,0 +1,225 @@
+"""The struct-of-arrays engine against its oracle.
+
+``serving.fastsim`` re-implements the colocated fixed-fleet simulation over
+numpy arrays; the per-object Python engine stays the semantic oracle. These
+tests pin **bit-for-bit** equality — identical per-request
+``(t_first_token, t_finish, l_out, t_decode_spent)`` and identical
+``RunReport.row()`` — across a policy x KV-pressure x heavy-tail grid,
+including preemption/resume churn and heterogeneous fleets (the same idiom
+``test_shim_goldens.py`` uses to pin the legacy shims).
+
+The jax engine (``serving.fastsim_jax``) compiles the same semantics; its
+grid runs under ``importorskip`` and allows last-ulp drift (XLA may fuse
+multiply-add chains), with integer outputs still exact.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.perf_model import (DecodeModel, KVModel, PerfModel,
+                                   PrefillModel)
+from repro.core.slo import SLO
+from repro.core.worker_config import WorkerSpec
+from repro.serving import api
+from repro.serving.workload import (WorkloadConfig, clone_trace,
+                                    generate_trace)
+
+SLO_GRID = SLO(ttft=2.0, atgt=0.2)
+
+
+def _spec(kv: str) -> WorkerSpec:
+    if kv == "tight":
+        kvm, cap = KVModel(h=1.0, j=16.0), 6000.0
+    elif kv == "crush":
+        # overflow mid-decode: constant preempt/resume churn
+        kvm, cap = KVModel(h=1.0, j=8.0), 2500.0
+    else:
+        kvm, cap = KVModel(h=0.0, j=0.0), 1e18
+    perf = PerfModel(kv=kvm,
+                     prefill=PrefillModel(k1=2.2e-5, c1=8e-3),
+                     decode=DecodeModel(k2=6e-6, c2=3.5e-4, c3=9e-3))
+    return WorkerSpec(perf=perf, kv_capacity=cap, max_batch=24,
+                      n_accelerators=2, name=f"eq-{kv}")
+
+
+def _scenario(trace, pools, policy, engine, seed=0):
+    return api.Scenario(
+        workload=trace, fleet=api.FleetSpec(pools), slo=SLO_GRID,
+        topology=api.Colocated(policy=policy), scaling=api.FixedScale(),
+        seed=seed, engine=engine)
+
+
+def _run_both(trace, pools, policy, seed=0, engine="vectorized"):
+    ref_t, vec_t = clone_trace(trace), clone_trace(trace)
+    ref = api.run(_scenario(ref_t, pools, policy, "reference", seed))
+    vec = api.run(_scenario(vec_t, pools, policy, engine, seed))
+    return ref, vec, ref_t, vec_t
+
+
+def _assert_bitwise(ref, vec, ref_t, vec_t):
+    key = lambda r: r.arrival
+    for a, b in zip(sorted(ref_t, key=key), sorted(vec_t, key=key)):
+        assert a.t_first_token == b.t_first_token
+        assert a.t_finish == b.t_finish
+        assert a.l_out == b.l_out
+        assert a.t_decode_spent == b.t_decode_spent
+    ra, va = ref.row(), vec.row()
+    for k in ra:
+        if isinstance(ra[k], float) and np.isnan(ra[k]):
+            assert np.isnan(va[k])
+        else:
+            assert ra[k] == va[k], k
+
+
+@pytest.mark.parametrize("policy", ["aladdin", "jsq", "po2"])
+@pytest.mark.parametrize("kv", ["tight", "loose"])
+def test_grid_policy_x_kv_x_tail(policy, kv):
+    trace = generate_trace(WorkloadConfig(
+        mean_rate=3.0, duration=20.0, seed=11, tail_frac=0.3,
+        in_mu=4.6, out_mu=4.4, out_sigma=1.0))
+    ref, vec, ref_t, vec_t = _run_both(trace, [api.PoolSpec(_spec(kv), 2)],
+                                       policy)
+    assert ref.finished > 0
+    _assert_bitwise(ref, vec, ref_t, vec_t)
+
+
+@pytest.mark.parametrize("policy", ["aladdin", "jsq", "po2"])
+def test_preemption_resume_churn(policy):
+    # KV crush: hundreds of mid-decode preemptions and resumed victims
+    trace = generate_trace(WorkloadConfig(
+        mean_rate=4.0, duration=25.0, seed=3, tail_frac=0.25,
+        in_mu=5.0, out_mu=4.8, out_sigma=1.1))
+    ref, vec, ref_t, vec_t = _run_both(trace,
+                                       [api.PoolSpec(_spec("crush"), 2)],
+                                       policy)
+    _assert_bitwise(ref, vec, ref_t, vec_t)
+
+
+def test_heterogeneous_fleet():
+    trace = generate_trace(WorkloadConfig(
+        mean_rate=4.0, duration=25.0, seed=2, tail_frac=0.25,
+        in_mu=5.0, out_mu=4.8, out_sigma=1.1))
+    big = dataclasses.replace(
+        _spec("tight"), kv_capacity=9000.0, max_batch=32, n_accelerators=4,
+        perf=PerfModel(kv=KVModel(h=0.5, j=4.0),
+                       prefill=PrefillModel(k1=1.1e-5, c1=5e-3),
+                       decode=DecodeModel(k2=3e-6, c2=2.0e-4, c3=6e-3)))
+    pools = [api.PoolSpec(_spec("crush"), 1), api.PoolSpec(big, 2)]
+    for policy in ("aladdin", "jsq", "po2"):
+        ref, vec, ref_t, vec_t = _run_both(trace, pools, policy)
+        _assert_bitwise(ref, vec, ref_t, vec_t)
+
+
+def test_congestion_with_unplaced_tail():
+    # rate far above capacity: the queue backs up and some requests never
+    # finish — exercises the still-queued FIFO path and the drain rule
+    trace = generate_trace(WorkloadConfig(
+        mean_rate=12.0, duration=12.0, seed=7, tail_frac=0.4,
+        in_mu=5.4, out_mu=5.0))
+    for policy in ("aladdin", "jsq"):
+        ref_t, vec_t = clone_trace(trace), clone_trace(trace)
+        slo = SLO(ttft=0.5, atgt=0.05)
+        mk = lambda tr, eng: dataclasses.replace(
+            _scenario(tr, [api.PoolSpec(_spec("crush"), 1)], policy, eng),
+            slo=slo)
+        ref = api.run(mk(ref_t, "reference"))
+        vec = api.run(mk(vec_t, "vectorized"))
+        assert ref.finished < ref.total
+        _assert_bitwise(ref, vec, ref_t, vec_t)
+
+
+def test_optimize_parity_and_batched_evaluation():
+    trace = generate_trace(WorkloadConfig(mean_rate=6.0, duration=30.0,
+                                          seed=3))
+    slo = SLO(ttft=1.0, atgt=0.1)
+    plans = {}
+    for eng in ("reference", "vectorized"):
+        sc = api.Scenario(
+            workload=trace, fleet=api.FleetSpec(
+                [api.PoolSpec(_spec("tight"), 1)]),
+            slo=slo, topology=api.Colocated(policy="aladdin"),
+            scaling=api.FixedScale(), engine=eng)
+        plans[eng] = api.optimize(sc, attain_target=0.95, lo=1, hi=16)
+    assert plans["reference"].n_workers == plans["vectorized"].n_workers
+    assert plans["reference"].report.row() \
+        == plans["vectorized"].report.row()
+    # the multisection probe evaluates whole candidate brackets at once
+    assert plans["vectorized"].evals >= plans["reference"].evals
+
+
+def test_envelope_rejects_unsupported_features():
+    trace = generate_trace(WorkloadConfig(mean_rate=2.0, duration=5.0))
+    fleet = api.FleetSpec([api.PoolSpec(_spec("loose"), 1)])
+    base = api.Scenario(workload=trace, fleet=fleet, slo=SLO_GRID,
+                        engine="vectorized")
+    with pytest.raises(ValueError, match="split_phase"):
+        api.run(dataclasses.replace(
+            base, topology=api.Colocated(split_phase=True)))
+    with pytest.raises(ValueError, match="FixedScale"):
+        api.run(dataclasses.replace(base, scaling=api.Reactive()))
+    with pytest.raises(ValueError, match="elastic"):
+        api.run(dataclasses.replace(
+            base, fleet=api.FleetSpec([api.PoolSpec(_spec("loose"), 0)])))
+    with pytest.raises(ValueError, match="Colocated"):
+        api.run(dataclasses.replace(base, topology=api.Disaggregated()))
+    with pytest.raises(ValueError, match="unknown engine"):
+        api.run(dataclasses.replace(base, engine="warp"))
+
+
+# ---- the compiled engine (importorskip: CI images without jax skip) ----------
+
+
+def _jax_spec() -> WorkerSpec:
+    # the jax core requires inert KV (h == j == 0): the bench specs' regime
+    perf = PerfModel(kv=KVModel(h=0.0, j=0.0),
+                     prefill=PrefillModel(k1=2.2e-5, c1=8e-3),
+                     decode=DecodeModel(k2=6e-6, c2=3.5e-4, c3=9e-3))
+    return WorkerSpec(perf=perf, kv_capacity=1e18, max_batch=24,
+                      n_accelerators=2, name="eq-jax")
+
+
+@pytest.mark.parametrize("policy", ["aladdin", "jsq"])
+def test_jax_engine_matches_reference(policy):
+    pytest.importorskip("jax")
+    trace = generate_trace(WorkloadConfig(
+        mean_rate=3.0, duration=20.0, seed=11, tail_frac=0.3,
+        in_mu=4.6, out_mu=4.4, out_sigma=1.0))
+    pools = [api.PoolSpec(_jax_spec(), 2)]
+    ref, jx, ref_t, jx_t = _run_both(trace, pools, policy, engine="jax")
+    key = lambda r: r.arrival
+    for a, b in zip(sorted(ref_t, key=key), sorted(jx_t, key=key)):
+        # integers exact; floats to the last few ulps (XLA may contract)
+        assert a.l_out == b.l_out
+        assert (a.t_finish is None) == (b.t_finish is None)
+        if a.t_first_token is not None:
+            assert b.t_first_token == pytest.approx(a.t_first_token,
+                                                    rel=1e-12)
+        if a.t_finish is not None:
+            assert b.t_finish == pytest.approx(a.t_finish, rel=1e-12)
+            assert b.t_decode_spent == pytest.approx(a.t_decode_spent,
+                                                     rel=1e-12)
+    assert jx.finished == ref.finished
+    assert jx.attainment == pytest.approx(ref.attainment)
+    assert jx.p99_atgt == pytest.approx(ref.p99_atgt, rel=1e-9)
+    assert jx.p99_ttft == pytest.approx(ref.p99_ttft, rel=1e-9)
+
+
+def test_jax_candidate_batch_matches_singles():
+    pytest.importorskip("jax")
+    from repro.serving import fastsim_jax
+    trace = generate_trace(WorkloadConfig(mean_rate=6.0, duration=15.0,
+                                          seed=5))
+    slo = SLO(ttft=1.0, atgt=0.1)
+    scs = [api.Scenario(
+        workload=clone_trace(trace),
+        fleet=api.FleetSpec([api.PoolSpec(_jax_spec(), n)]), slo=slo,
+        topology=api.Colocated(policy="aladdin"),
+        scaling=api.FixedScale(), engine="jax") for n in (2, 4, 6)]
+    batch = fastsim_jax.run_candidate_batch(scs)
+    for sc, rep in zip(scs, batch):
+        single = api.run(dataclasses.replace(
+            sc, workload=clone_trace(trace)))
+        assert rep.finished == single.finished
+        assert rep.attainment == pytest.approx(single.attainment)
+        assert rep.p99_atgt == pytest.approx(single.p99_atgt, rel=1e-9)
