@@ -26,7 +26,6 @@ from __future__ import annotations
 import argparse
 import json
 import math
-import shutil
 import sys
 from pathlib import Path
 
@@ -85,6 +84,60 @@ def check_file(base_path: Path, fresh_path: Path, attain_tol: float,
     return problems
 
 
+def merge_baseline(base_path: Path, fresh_path: Path) -> tuple:
+    """Merge a fresh BENCH file into its baseline, row by row.
+
+    Fresh rows win for every metric *except* ``us_per_call``: a positive
+    baseline wall time (a perf canary gated by --time-tol) is only
+    replaced by a positive fresh measurement, never zeroed by an untimed
+    run — which is what the old wholesale file copy silently did.
+    Returns ``(merged_payload, per_row_messages)``.
+    """
+    with open(fresh_path) as f:
+        payload = json.load(f)
+    base = load_rows(base_path) if base_path.exists() else {}
+    messages = []
+    for row in payload.get("rows", []):
+        brow = base.get(row["name"], {})
+        b_us = finite(brow, "us_per_call")
+        f_us = finite(row, "us_per_call")
+        if b_us is not None and b_us > 0.0 and not (f_us and f_us > 0.0):
+            row["us_per_call"] = b_us
+            messages.append(f"{fresh_path.name}:{row['name']}: kept "
+                            f"us_per_call {b_us:.0f} (fresh run untimed)")
+            f_us = b_us
+        deltas = []
+        for key, fmt in (("attainment", ".4f"), ("gpu_cost", ".1f"),
+                         ("us_per_call", ".0f")):
+            b, f_ = finite(brow, key), finite(row, key)
+            if b is not None and f_ is not None and b != f_:
+                deltas.append(f"{key} {b:{fmt}} -> {f_:{fmt}}")
+        if deltas:
+            messages.append(
+                f"{fresh_path.name}:{row['name']}: " + ", ".join(deltas))
+    return payload, messages
+
+
+def update_baselines(fresh_dir: Path, baseline_dir: Path) -> int:
+    baseline_dir.mkdir(parents=True, exist_ok=True)
+    fresh_files = sorted(fresh_dir.glob("BENCH_*.json"))
+    fresh_names = {p.name for p in fresh_files}
+    updated = 0
+    for fresh in fresh_files:
+        base_path = baseline_dir / fresh.name
+        payload, messages = merge_baseline(base_path, fresh)
+        base_path.write_text(json.dumps(payload, indent=2) + "\n")
+        for m in messages:
+            print(f"  {m}")
+        updated += 1
+    for base_path in sorted(baseline_dir.glob("BENCH_*.json")):
+        if base_path.name not in fresh_names:
+            print(f"  {base_path.name}: no fresh counterpart, baseline "
+                  f"left untouched (delete it if the scenario is gone)")
+    print(f"check_bench: baselines updated from {updated} fresh files")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fresh-dir", type=Path, default=REPO,
@@ -99,19 +152,15 @@ def main() -> int:
                     "baseline records a positive wall time; omitted = "
                     "wall-clock not gated (machines differ)")
     ap.add_argument("--update", action="store_true",
-                    help="copy fresh BENCH files over the baselines "
-                    "instead of checking (for intentional shifts)")
+                    help="merge fresh BENCH rows into the baselines "
+                    "instead of checking (for intentional shifts); "
+                    "positive us_per_call canaries are refreshed only "
+                    "by timed runs, never zeroed")
     args = ap.parse_args()
 
     baselines = sorted(args.baseline_dir.glob("BENCH_*.json"))
     if args.update:
-        args.baseline_dir.mkdir(parents=True, exist_ok=True)
-        updated = 0
-        for fresh in sorted(args.fresh_dir.glob("BENCH_*.json")):
-            shutil.copy(fresh, args.baseline_dir / fresh.name)
-            updated += 1
-        print(f"check_bench: baselines updated from {updated} fresh files")
-        return 0
+        return update_baselines(args.fresh_dir, args.baseline_dir)
     if not baselines:
         print(f"check_bench: no baselines under {args.baseline_dir}; "
               f"run with --update after a smoke bench to create them",

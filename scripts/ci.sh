@@ -3,11 +3,15 @@
 # workflow (.github/workflows/ci.yml) execute:
 #   1. lint/format gate (ruff; skipped with a warning where not installed,
 #      the workflow always installs it so the gate is real on every PR)
-#   2. tier-1 pytest
-#   3. cluster-sim smoke bench (all scenarios, incl. forecast + spot) under
+#   2. simlint — the repo-specific static-analysis gate (SIM00x codes:
+#      jit purity / perf contract, x64 scope, unit safety, clock
+#      monotonicity, shim freeze, envelope coverage) with the tracked
+#      allowlist scripts/simlint_baseline.json
+#   3. tier-1 pytest
+#   4. cluster-sim smoke bench (all scenarios, incl. forecast + spot) under
 #      a 90s budget — a timeout is reported as a PERF regression, distinct
 #      from a crash
-#   4. scripts/check_bench.py — fresh BENCH_*.json rows vs the committed
+#   5. scripts/check_bench.py — fresh BENCH_*.json rows vs the committed
 #      baselines (attainment may not drop, gpu_cost may not regress >10%,
 #      and the perf-canary rows' us_per_call may not grow >25% — the
 #      struct-of-arrays engines' speedups are gated, not just printed)
@@ -19,13 +23,17 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 echo "== lint (ruff check + format) =="
 if command -v ruff >/dev/null 2>&1; then
   ruff check .
-  # format coverage starts with the CI tooling added in PR 3; widen as
-  # older files are migrated to ruff's formatter style
-  ruff format --check scripts/check_bench.py
+  # format coverage: the CI/bench tooling and the analysis package; widen
+  # as older src/ files are migrated to ruff's formatter style
+  ruff format --check scripts benchmarks src/repro/analysis
 else
   echo "WARNING: ruff not installed locally; lint gate skipped here" \
        "(GitHub Actions installs ruff and enforces it on every PR)"
 fi
+
+echo "== simlint (repo-specific invariants, SIM00x) =="
+python -m repro.analysis src scripts benchmarks \
+  --baseline scripts/simlint_baseline.json
 
 echo "== tier-1 pytest =="
 python -m pytest -x -q

@@ -1,0 +1,16 @@
+#!/usr/bin/env python
+"""Thin launcher for ``python -m repro.analysis`` that works from a
+fresh checkout without PYTHONPATH setup (CI exports it; humans often
+don't)."""
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+SRC = str(REPO_ROOT / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

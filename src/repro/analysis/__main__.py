@@ -1,0 +1,99 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 clean (baseline-accepted findings included), 1 findings or
+stale baseline entries, 2 usage/parse error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.checkers import ALL_CHECKERS
+from repro.analysis.core import Project, run_checkers
+from repro.analysis.diagnostics import CODES, Baseline
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="simlint: repo-specific static analysis enforcing "
+                    "the simulator's invariants")
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files or directories to analyze (default: src)")
+    p.add_argument("--baseline", type=Path, default=None,
+                   help="tracked allowlist JSON; accepted findings pass, "
+                        "stale entries fail")
+    p.add_argument("--write-baseline", type=Path, default=None,
+                   metavar="PATH",
+                   help="write current findings to PATH as the new "
+                        "baseline and exit 0")
+    p.add_argument("--list-codes", action="store_true",
+                   help="print the SIM00x registry and exit")
+    p.add_argument("--select", action="append", default=None,
+                   metavar="CODE", help="run only these codes")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_codes:
+        for code, desc in CODES.items():
+            print(f"{code}  {desc}")
+        return 0
+
+    checkers = [cls() for cls in ALL_CHECKERS]
+    if args.select:
+        checkers = [c for c in checkers if c.code in set(args.select)]
+        if not checkers:
+            print(f"simlint: no checker matches --select {args.select}",
+                  file=sys.stderr)
+            return 2
+
+    try:
+        project = Project.collect([Path(p) for p in args.paths])
+    except (RuntimeError, OSError) as e:
+        print(f"simlint: {e}", file=sys.stderr)
+        return 2
+
+    diags = run_checkers(project, checkers)
+
+    if args.write_baseline is not None:
+        Baseline.from_diagnostics(diags).save(args.write_baseline)
+        print(f"simlint: wrote {len(diags)} finding(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    baseline = Baseline()
+    if args.baseline is not None:
+        try:
+            baseline = Baseline.load(args.baseline)
+        except (OSError, ValueError) as e:
+            print(f"simlint: cannot load baseline: {e}", file=sys.stderr)
+            return 2
+
+    fresh = [d for d in diags if not baseline.accepts(d)]
+    for d in fresh:
+        print(d.format())
+    stale = baseline.stale_entries()
+    for e in stale:
+        print(f"simlint: stale baseline entry {e['code']} {e['path']} "
+              f"{e['text']!r} matched nothing; remove it")
+
+    n_files = len(project.files)
+    if fresh or stale:
+        print(f"simlint: {len(fresh)} finding(s), {len(stale)} stale "
+              f"baseline entr{'y' if len(stale) == 1 else 'ies'} "
+              f"across {n_files} file(s)")
+        return 1
+    accepted = len(diags) - len(fresh)
+    suffix = f" ({accepted} baseline-accepted)" if accepted else ""
+    print(f"simlint: clean — {n_files} file(s), "
+          f"{len(checkers)} checker(s){suffix}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,13 @@
+"""The repo-specific checkers, one stable ``SIM00x`` code each."""
+from repro.analysis.checkers.clocks import ClockMonotonicity
+from repro.analysis.checkers.envelope import EnvelopeCoverage
+from repro.analysis.checkers.jit_purity import JitPurity
+from repro.analysis.checkers.shims import ShimFreeze
+from repro.analysis.checkers.units import UnitSafety
+from repro.analysis.checkers.x64_scope import X64Scope
+
+ALL_CHECKERS = [JitPurity, X64Scope, UnitSafety, ClockMonotonicity,
+                ShimFreeze, EnvelopeCoverage]
+
+__all__ = ["ALL_CHECKERS", "ClockMonotonicity", "EnvelopeCoverage",
+           "JitPurity", "ShimFreeze", "UnitSafety", "X64Scope"]

@@ -1,0 +1,86 @@
+"""SIM004 — causal clocks are stamped only by blessed helpers.
+
+``t_first_token`` / ``t_finish`` / ``t_preempted`` and the ATGT
+accumulator ``t_decode_spent`` define the attainment numbers every
+benchmark gates on; both historical clock bugs came from ad-hoc writes
+that bypassed the causal bookkeeping (admission-before-arrival, the
+resumed-victim ATGT hole).  Writes to these fields — and element writes
+into the vectorized cores' clock arrays — are therefore only legal
+inside a short whitelist of helpers whose monotonicity is pinned by the
+equivalence grid.  Everything else must route through those helpers.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.core import Checker, SourceFile, qualname_of
+from repro.analysis.diagnostics import Diagnostic
+
+CLOCK_ATTRS = {"t_first_token", "t_finish", "t_preempted",
+               "t_decode_spent"}
+# vectorized-core clock arrays: element writes only (whole-array
+# (re)allocation in __init__ is setup, not a clock stamp)
+CLOCK_ARRAYS = {"t_first", "t_fin", "tds", "t_w"}
+
+# path suffix -> qualnames blessed to stamp clocks there
+BLESSED = {
+    "serving/simulator.py": {"SimWorker.advance_to"},
+    "serving/fastsim.py": {"_Engine._advance", "_Engine._step",
+                           "_Engine.writeback"},
+    "serving/fastsim_jax.py": {"run_colocated_jax"},
+    "serving/disagg.py": {"PrefillSimWorker.advance_to"},
+    "serving/lifecycle.py": {"mark_kv_loss", "mark_requeue"},
+    "serving/engine.py": {"PagedEngine.step"},
+    "serving/cluster.py": {"ServingCluster.inject_failure"},
+}
+
+
+def _blessed_here(rel: str, qualname: str) -> bool:
+    for suffix, quals in BLESSED.items():
+        if rel.endswith(suffix):
+            return any(qualname == q or qualname.startswith(q + ".")
+                       for q in quals)
+    return False
+
+
+class ClockMonotonicity(Checker):
+    code = "SIM004"
+    name = "clock-monotonicity"
+
+    def applies(self, src: SourceFile) -> bool:
+        return src.rel.startswith("src/") and "/analysis/" not in src.rel
+
+    def check_file(self, src: SourceFile) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            else:
+                continue
+            for t in targets:
+                field = None
+                if isinstance(t, ast.Attribute) and \
+                        t.attr in CLOCK_ATTRS:
+                    field = t.attr
+                elif isinstance(t, ast.Subscript):
+                    base = t.value
+                    name = (base.attr if isinstance(base, ast.Attribute)
+                            else base.id if isinstance(base, ast.Name)
+                            else "")
+                    if name in CLOCK_ARRAYS:
+                        field = f"{name}[...]"
+                if field is None:
+                    continue
+                qual = qualname_of(node)
+                if _blessed_here(src.rel, qual):
+                    continue
+                where = qual or "<module>"
+                diags.append(src.diag(
+                    "SIM004", node,
+                    f"clock field `{field}` stamped outside the blessed "
+                    f"helpers (in `{where}`); route through "
+                    "SimWorker.advance_to / the engine writeback"))
+        return diags

@@ -1,0 +1,80 @@
+"""SIM006 — every scenario knob is inspected by an envelope validator.
+
+The compiled cores (``fastsim.py`` / ``fastsim_jax.py``) run a strict
+subset of what ``Scenario`` can express; the ``check_*_envelope``
+validators are the fence that routes unsupported combinations back to
+the reference loop instead of silently mis-simulating them.  That fence
+only works if *every* field on the envelope-relevant dataclasses is
+actually looked at by some validator — a new knob that no validator
+inspects is exactly the "silently wrong compiled results" failure mode.
+This checker cross-references each field of the enforced dataclasses in
+``serving/api.py`` against the attribute reads of every
+``check_*_envelope`` function in the tree and reports the orphans.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Set
+
+from repro.analysis.core import Checker, Project, SourceFile
+from repro.analysis.diagnostics import Diagnostic
+
+VALIDATOR_RE = re.compile(r"^check_\w+_envelope$")
+# the dataclasses whose every field must be validator-inspected: the
+# Scenario root plus the topology/scaling classes the compiled cores
+# accept (other topologies are rejected wholesale by isinstance checks,
+# so their fields never reach a compiled core)
+ENFORCED = ("Scenario", "Colocated", "FixedScale")
+
+
+def _validator_reads(project: Project) -> Set[str]:
+    reads: Set[str] = set()
+    for src in project.files:
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.FunctionDef) and \
+                    VALIDATOR_RE.match(node.name):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Attribute):
+                        reads.add(sub.attr)
+    return reads
+
+
+class EnvelopeCoverage(Checker):
+    code = "SIM006"
+    name = "envelope-coverage"
+
+    def check_project(self, project: Project) -> List[Diagnostic]:
+        api = next((f for f in project.files
+                    if f.rel.endswith("serving/api.py")), None)
+        if api is None:
+            return []
+        reads = _validator_reads(project)
+        if not reads:
+            # no validators at all in scope: that is a different failure
+            # (the run() plumbing is gone), not per-field coverage
+            return []
+        diags: List[Diagnostic] = []
+        for cls in api.tree.body:
+            if not isinstance(cls, ast.ClassDef) or \
+                    cls.name not in ENFORCED:
+                continue
+            diags.extend(self._check_class(api, cls, reads))
+        return diags
+
+    def _check_class(self, api: SourceFile, cls: ast.ClassDef,
+                     reads: Set[str]) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for stmt in cls.body:
+            if not (isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)):
+                continue
+            field = stmt.target.id
+            if field.startswith("_") or field in reads:
+                continue
+            diags.append(api.diag(
+                "SIM006", stmt,
+                f"field `{cls.name}.{field}` is not inspected by any "
+                "check_*_envelope validator; a compiled core could "
+                "silently ignore it"))
+        return diags

@@ -1,0 +1,274 @@
+"""SIM001 — jit purity and the fastsim_jax performance contract.
+
+The compiled beat loop stays fast only while every per-beat update is a
+single-element ``.at[i].set(..., mode="drop")`` into a lane-resident
+carry; a bulk scatter (slice/``reshape``/``arange``-shaped index) costs
+~50ns *per element of the index* per beat on CPU XLA, which is exactly
+the regression the performance-contract docstring forbids.  Python-level
+``if``/``for`` on traced values and ``float()``/``int()``/``np.*``
+coercions of tracers are concretization errors waiting for the next
+``jit`` — or silent per-call retraces.
+
+Traced scope is discovered structurally: function defs (and lambdas)
+passed as the cond/body of ``lax.while_loop``/``fori_loop``/``scan``,
+and Pallas kernels reaching ``pl.pallas_call`` directly or through
+``functools.partial``.  Positional parameters of a traced function are
+tracers; keyword-only parameters are static configuration (the Pallas
+idiom) and are exempt, as are closure names bound outside traced scope.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import (Checker, SourceFile, dotted_name,
+                                 names_in)
+from repro.analysis.diagnostics import Diagnostic
+
+# index-producing calls that make a scatter "bulk" (index size scales
+# with the trace / lane count instead of being one element)
+BULK_INDEX_PRODUCERS = {
+    "reshape", "ravel", "flatten", "arange", "nonzero", "flatnonzero",
+    "argsort", "take", "repeat", "tile", "broadcast_to", "concatenate",
+    "stack", "where",
+}
+# NB: bare ``jnp.where(cond, a, b)`` three-arg select is fine and common
+# in scalar index computation; only single-arg where (nonzero-like) is a
+# bulk producer.  _is_bulk_call() below makes that distinction.
+
+SCATTER_METHODS = {"set", "add", "mul", "min", "max", "multiply",
+                   "divide", "power", "apply"}
+
+_LOOP_FUNCS = {"while_loop": (0, 1), "fori_loop": (2,), "scan": (0,)}
+
+
+def _is_bulk_call(call: ast.Call) -> bool:
+    tail = dotted_name(call.func).rsplit(".", 1)[-1]
+    if isinstance(call.func, ast.Attribute) and call.func.attr in \
+            BULK_INDEX_PRODUCERS:
+        tail = call.func.attr
+    if tail not in BULK_INDEX_PRODUCERS:
+        return False
+    if tail == "where":
+        return len(call.args) == 1        # nonzero-style where only
+    return True
+
+
+class _TracedFunc:
+    def __init__(self, node, kind: str, inherited: Set[str]):
+        self.node = node
+        self.kind = kind                  # "loop_body" | "kernel"
+        args = node.args
+        pos = [a.arg for a in (*args.posonlyargs, *args.args)]
+        kwonly = {a.arg for a in args.kwonlyargs}
+        self.traced: Set[str] = (set(pos) | set(inherited)) - kwonly
+        self.static: Set[str] = kwonly
+        # local name -> RHS expr (one-level dataflow for index analysis)
+        self.assigns: Dict[str, ast.AST] = {}
+        self._close(node)
+
+    def _close(self, node) -> None:
+        """Fixpoint: locals assigned from traced expressions are traced."""
+        body = node.body if isinstance(node.body, list) else [node.body]
+        changed = True
+        while changed:
+            changed = False
+            for stmt in ast.walk(ast.Module(body=body, type_ignores=[])):
+                if isinstance(stmt, (ast.FunctionDef, ast.Lambda)) \
+                        and stmt is not node:
+                    continue
+                targets: List[ast.AST] = []
+                value: Optional[ast.AST] = None
+                if isinstance(stmt, ast.Assign):
+                    targets, value = stmt.targets, stmt.value
+                elif isinstance(stmt, ast.AnnAssign) and stmt.value:
+                    targets, value = [stmt.target], stmt.value
+                elif isinstance(stmt, ast.AugAssign):
+                    targets, value = [stmt.target], stmt.value
+                if value is None:
+                    continue
+                tainted = bool(names_in(value) & self.traced)
+                for t in targets:
+                    names = [t] if isinstance(t, ast.Name) else [
+                        e for e in ast.walk(t) if isinstance(e, ast.Name)]
+                    for n in names:
+                        if n.id in self.static:
+                            continue
+                        if isinstance(t, ast.Name):
+                            self.assigns[n.id] = value
+                        if tainted and n.id not in self.traced:
+                            self.traced.add(n.id)
+                            changed = True
+
+    def is_traced_expr(self, node: ast.AST) -> bool:
+        return bool(names_in(node) & self.traced)
+
+
+class JitPurity(Checker):
+    code = "SIM001"
+    name = "jit-purity"
+
+    def applies(self, src: SourceFile) -> bool:
+        return src.rel.endswith("fastsim_jax.py") or "kernels/" in src.rel
+
+    # -- traced-scope discovery ------------------------------------------
+
+    def _resolve_def(self, call: ast.Call, arg: ast.AST):
+        """Resolve a cond/body/kernel argument to its FunctionDef/Lambda."""
+        if isinstance(arg, ast.Lambda):
+            return arg
+        if isinstance(arg, ast.Call):     # functools.partial(kernel, ...)
+            tail = dotted_name(arg.func).rsplit(".", 1)[-1]
+            if tail == "partial" and arg.args:
+                return self._resolve_def(call, arg.args[0])
+            return None
+        if not isinstance(arg, ast.Name):
+            return None
+        # walk outward through enclosing scopes looking for the def, or
+        # a local binding like ``kernel = functools.partial(_kernel, ...)``
+        scope = getattr(call, "parent", None)
+        while scope is not None:
+            if isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Module)):
+                for n in ast.walk(scope):
+                    if isinstance(n, ast.FunctionDef) and n.name == arg.id:
+                        return n
+                    if (isinstance(n, ast.Assign)
+                            and len(n.targets) == 1
+                            and isinstance(n.targets[0], ast.Name)
+                            and n.targets[0].id == arg.id
+                            and isinstance(n.value, ast.Call)):
+                        return self._resolve_def(call, n.value)
+            scope = getattr(scope, "parent", None)
+        return None
+
+    def _discover(self, src: SourceFile) -> List[_TracedFunc]:
+        roots: List[Tuple[ast.AST, str]] = []
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            tail = dotted_name(node.func).rsplit(".", 1)[-1]
+            if tail in _LOOP_FUNCS:
+                for i in _LOOP_FUNCS[tail]:
+                    if i < len(node.args):
+                        fn = self._resolve_def(node, node.args[i])
+                        if fn is not None:
+                            roots.append((fn, "loop_body"))
+            elif tail == "pallas_call" and node.args:
+                fn = self._resolve_def(node, node.args[0])
+                if fn is not None:
+                    roots.append((fn, "kernel"))
+
+        # nested defs inside a traced function are traced too, inheriting
+        # the parent's traced names as closure
+        out: List[_TracedFunc] = []
+        seen = set()
+
+        def add(node, kind: str, inherited: Set[str]) -> None:
+            if id(node) in seen:
+                return
+            seen.add(id(node))
+            tf = _TracedFunc(node, kind, inherited)
+            out.append(tf)
+            body = node.body if isinstance(node.body, list) else []
+            for stmt in body:
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, (ast.FunctionDef, ast.Lambda)):
+                        add(sub, kind, tf.traced)
+
+        for fn, kind in roots:
+            add(fn, kind, set())
+        return out
+
+    # -- the three rules --------------------------------------------------
+
+    def check_file(self, src: SourceFile) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for tf in self._discover(src):
+            diags.extend(self._check_func(src, tf))
+        return diags
+
+    def _own_nodes(self, tf: _TracedFunc):
+        """Walk tf's body, skipping nested function subtrees (they are
+        checked as their own traced funcs)."""
+        body = tf.node.body
+        stack = list(body) if isinstance(body, list) else [body]
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and node is not tf.node:
+                continue
+            yield node
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _index_is_bulk(self, idx: ast.AST, tf: _TracedFunc,
+                       depth: int = 0) -> bool:
+        if depth > 2:
+            return False
+        for sub in ast.walk(idx):
+            if isinstance(sub, ast.Slice):
+                return True
+            if isinstance(sub, ast.Constant) and sub.value is Ellipsis:
+                return True
+            if isinstance(sub, ast.Call) and _is_bulk_call(sub):
+                return True
+        # one-level dataflow: a bare Name index resolved through a local
+        # assignment whose RHS is bulk-shaped
+        names = ([idx] if isinstance(idx, ast.Name) else
+                 list(idx.elts) if isinstance(idx, ast.Tuple) else [])
+        for n in names:
+            if isinstance(n, ast.Name) and n.id in tf.assigns:
+                if self._index_is_bulk(tf.assigns[n.id], tf, depth + 1):
+                    return True
+        return False
+
+    def _check_func(self, src: SourceFile,
+                    tf: _TracedFunc) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for node in self._own_nodes(tf):
+            # Rule A — bulk scatter into a carry, loop bodies only (the
+            # post-loop flush outside the beat loop is explicitly allowed
+            # by the performance contract).
+            if (tf.kind == "loop_body" and isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in SCATTER_METHODS
+                    and isinstance(node.func.value, ast.Subscript)
+                    and isinstance(node.func.value.value, ast.Attribute)
+                    and node.func.value.value.attr == "at"):
+                idx = node.func.value.slice
+                if self._index_is_bulk(idx, tf):
+                    diags.append(src.diag(
+                        "SIM001", node,
+                        "bulk scatter `.at[...]."
+                        f"{node.func.attr}` inside a compiled loop body "
+                        "(~50ns/element/beat on CPU XLA); keep per-beat "
+                        "updates single-element, flush after the loop"))
+            # Rule B — Python branching on traced values
+            if isinstance(node, (ast.If, ast.While)) and \
+                    tf.is_traced_expr(node.test):
+                kw = "while" if isinstance(node, ast.While) else "if"
+                diags.append(src.diag(
+                    "SIM001", node,
+                    f"Python `{kw}` on a traced value inside a compiled "
+                    "function; use jnp.where / lax.cond / pl.when"))
+            if isinstance(node, ast.For) and \
+                    isinstance(node.iter, ast.Name) and \
+                    node.iter.id in tf.traced:
+                diags.append(src.diag(
+                    "SIM001", node,
+                    "Python `for` over a traced array inside a compiled "
+                    "function; use lax.scan / fori_loop"))
+            # Rule C — tracer concretization
+            if isinstance(node, ast.Call):
+                fname = dotted_name(node.func)
+                coercer = (isinstance(node.func, ast.Name)
+                           and node.func.id in ("float", "int", "bool"))
+                numpy_call = fname.split(".")[0] in ("np", "numpy")
+                if (coercer or numpy_call) and any(
+                        tf.is_traced_expr(a) for a in node.args):
+                    what = node.func.id if coercer else fname
+                    diags.append(src.diag(
+                        "SIM001", node,
+                        f"`{what}(...)` concretizes a traced value inside "
+                        "a compiled function; use jnp equivalents"))
+        return diags

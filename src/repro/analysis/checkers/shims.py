@@ -1,0 +1,100 @@
+"""SIM005 — the deprecation shims are frozen, not load-bearing.
+
+PR 4 pinned the legacy entry points (``simulate`` /
+``min_workers_for_slo`` in ``simulator.py``, ``simulate_disaggregated``
+/ ``min_cost_disagg`` in ``disagg.py``) bit-for-bit behind the
+``Scenario`` API and marked them ``.. deprecated::``.  They exist so old
+callers keep working — new ``src/`` code importing them re-entrenches
+the very surface the shims are meant to retire.  The deprecated set is
+derived from the ``.. deprecated::`` docstring markers themselves, so
+deprecating a new entry point automatically starts guarding it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis.core import (Checker, Project, SourceFile,
+                                 dotted_name)
+from repro.analysis.diagnostics import Diagnostic
+
+SHIM_MODULES = ("serving/simulator.py", "serving/disagg.py")
+# used only when the project under analysis doesn't contain the shim
+# modules themselves (e.g. single-file runs)
+DEFAULT_DEPRECATED = {"simulate", "min_workers_for_slo",
+                      "simulate_disaggregated", "min_cost_disagg"}
+ALLOWED_IMPORTERS = ("repro/serving/__init__.py",)
+
+
+def _deprecated_names(project: Project) -> Set[str]:
+    names: Set[str] = set()
+    saw_shim_module = False
+    for src in project.files:
+        if not any(src.rel.endswith(m) for m in SHIM_MODULES):
+            continue
+        saw_shim_module = True
+        for node in src.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                doc = ast.get_docstring(node) or ""
+                if ".. deprecated::" in doc:
+                    names.add(node.name)
+    return names if saw_shim_module else set(DEFAULT_DEPRECATED)
+
+
+class ShimFreeze(Checker):
+    code = "SIM005"
+    name = "shim-freeze"
+
+    def check_project(self, project: Project) -> List[Diagnostic]:
+        deprecated = _deprecated_names(project)
+        diags: List[Diagnostic] = []
+        for src in project.files:
+            if not src.rel.startswith("src/"):
+                continue
+            if any(src.rel.endswith(a) for a in ALLOWED_IMPORTERS):
+                continue
+            if any(src.rel.endswith(m) for m in SHIM_MODULES):
+                continue            # the shims may reference themselves
+            diags.extend(self._check_file(src, deprecated))
+        return diags
+
+    def _check_file(self, src: SourceFile,
+                    deprecated: Set[str]) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        # module aliases that resolve to the shim modules / the package
+        aliases: Dict[str, str] = {}
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name.startswith("repro.serving"):
+                        aliases[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if not (mod == "repro.serving"
+                        or mod.startswith("repro.serving.")):
+                    continue
+                for a in node.names:
+                    if a.name in deprecated:
+                        diags.append(src.diag(
+                            "SIM005", node,
+                            f"new src/ import of deprecated shim "
+                            f"`{a.name}` from `{mod}`; call the "
+                            "Scenario run()/optimize() API instead"))
+                    elif mod.split(".")[-1] in ("simulator", "disagg",
+                                                "serving"):
+                        aliases[a.asname or a.name] = f"{mod}.{a.name}"
+        if aliases:
+            for node in ast.walk(src.tree):
+                if not isinstance(node, ast.Attribute):
+                    continue
+                chain = dotted_name(node)
+                if not chain or node.attr not in deprecated:
+                    continue
+                head = chain.split(".")[0]
+                if head in aliases:
+                    diags.append(src.diag(
+                        "SIM005", node,
+                        f"new src/ use of deprecated shim "
+                        f"`{node.attr}` via `{chain}`; call the "
+                        "Scenario run()/optimize() API instead"))
+        return diags

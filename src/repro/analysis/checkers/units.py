@@ -1,0 +1,120 @@
+"""SIM003 — dimensional safety over the serving/core arithmetic.
+
+Both causal-clock bugs this repo has shipped (PR 2's constraint-(d)
+off-by-one, PR 6's resumed-victim ATGT hole) were unit/time arithmetic
+slips that type checkers cannot see because everything is a float.  The
+code already encodes dimensions in its naming conventions — ``t_*`` /
+``*_s`` / ``dur*`` are seconds, ``l_out`` / ``context`` / ``*_tokens``
+are token counts, ``*gpu_s`` / ``gpu_seconds`` are billed GPU-seconds,
+``price`` / ``*_cost`` are dollars — so this checker infers a dimension
+per name and flags additions, subtractions, comparisons, and augmented
+assignments whose two sides carry *different known* dimensions.
+Constants and computed intermediates are wildcards; multiplication and
+division legitimately change dimension and produce "unknown", so only a
+provable seconds-vs-tokens (etc.) mix is reported.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional
+
+from repro.analysis.core import Checker, SourceFile, dotted_name
+from repro.analysis.diagnostics import Diagnostic
+
+# precedence matters: `gpu_s` must resolve before the generic `*_s`
+DIM_PATTERNS = [
+    ("price", re.compile(r"(^price$|^cost$|_cost$|_price$)")),
+    ("gpu_seconds", re.compile(r"(gpu_s$|gpu_seconds$)")),
+    ("tokens", re.compile(
+        r"(^l_(in|out|real|pred)$|_tokens$|^tokens$"
+        r"|^(ctx|context|total_in|tot_in|newsum)$)")),
+    ("seconds", re.compile(
+        r"(^t$|^t[0-9]$|^t_|_s$|^dur|^ttft$|^atgt$|^arrival$|^horizon$"
+        r"|^heartbeat$|^hb$|^seg$|^tail$|^duration$|^elapsed$|^deadline$"
+        r"|^boot_delay$|^notice$)")),
+]
+
+_PASSTHROUGH = {"min", "max", "abs", "maximum", "minimum", "where",
+                "sum", "float", "round", "clip"}
+
+
+def dim_of_name(name: str) -> Optional[str]:
+    for dim, pat in DIM_PATTERNS:
+        if pat.search(name):
+            return dim
+    return None
+
+
+def dim_of(node: ast.AST) -> Optional[str]:
+    """Infer the dimension of an expression; None = unknown/wildcard."""
+    if isinstance(node, ast.Name):
+        return dim_of_name(node.id)
+    if isinstance(node, ast.Attribute):
+        return dim_of_name(node.attr)
+    if isinstance(node, ast.Subscript):
+        return dim_of(node.value)
+    if isinstance(node, ast.UnaryOp):
+        return dim_of(node.operand)
+    if isinstance(node, ast.Starred):
+        return dim_of(node.value)
+    if isinstance(node, ast.IfExp):
+        a, b = dim_of(node.body), dim_of(node.orelse)
+        return a if a == b else None
+    if isinstance(node, ast.Call):
+        tail = dotted_name(node.func).rsplit(".", 1)[-1]
+        if tail in _PASSTHROUGH:
+            dims = {d for d in (dim_of(a) for a in node.args)
+                    if d is not None}
+            return dims.pop() if len(dims) == 1 else None
+        return None
+    if isinstance(node, ast.BinOp):
+        if isinstance(node.op, (ast.Add, ast.Sub)):
+            a, b = dim_of(node.left), dim_of(node.right)
+            return a or b               # known-wins propagation
+        return None                     # mult/div change dimension
+    return None
+
+
+class UnitSafety(Checker):
+    code = "SIM003"
+    name = "unit-safety"
+
+    def applies(self, src: SourceFile) -> bool:
+        return "repro/serving/" in src.rel or "repro/core/" in src.rel
+
+    def _flag(self, src: SourceFile, node: ast.AST, a: str, b: str,
+              what: str) -> Diagnostic:
+        return src.diag(
+            "SIM003", node,
+            f"{what} mixes dimensions: {a} vs {b} (inferred from naming "
+            "conventions); convert explicitly or rename")
+
+    def check_file(self, src: SourceFile) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.BinOp) and \
+                    isinstance(node.op, (ast.Add, ast.Sub)):
+                a, b = dim_of(node.left), dim_of(node.right)
+                if a and b and a != b:
+                    op = "+" if isinstance(node.op, ast.Add) else "-"
+                    diags.append(self._flag(src, node, a, b, f"`{op}`"))
+            elif isinstance(node, ast.Compare):
+                left = node.left
+                for cmp_op, right in zip(node.ops, node.comparators):
+                    if isinstance(cmp_op, (ast.In, ast.NotIn, ast.Is,
+                                           ast.IsNot)):
+                        left = right
+                        continue
+                    a, b = dim_of(left), dim_of(right)
+                    if a and b and a != b:
+                        diags.append(self._flag(src, node, a, b,
+                                                "comparison"))
+                    left = right
+            elif isinstance(node, ast.AugAssign) and \
+                    isinstance(node.op, (ast.Add, ast.Sub)):
+                a, b = dim_of(node.target), dim_of(node.value)
+                if a and b and a != b:
+                    diags.append(self._flag(src, node, a, b,
+                                            "augmented assignment"))
+        return diags

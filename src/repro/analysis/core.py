@@ -1,0 +1,188 @@
+"""Framework core: parsed sources, checker base class, the run loop.
+
+A :class:`SourceFile` is one parsed module with parent links threaded
+through the AST (``node.parent``) so checkers can look outward from a
+match, plus the raw lines for suppression comments and baseline
+fingerprints.  A :class:`Checker` visits files it :meth:`applies` to;
+checkers that need the whole tree at once (envelope coverage) override
+:meth:`check_project` instead.  :func:`run_checkers` is the single entry
+the CLI and the tests share.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence
+
+from repro.analysis.diagnostics import (CODES, Diagnostic, is_suppressed,
+                                        parse_suppressions)
+
+
+def find_repo_root(start: Path) -> Path:
+    """Nearest ancestor containing a .git dir (or pyproject.toml)."""
+    cur = start.resolve()
+    if cur.is_file():
+        cur = cur.parent
+    for cand in (cur, *cur.parents):
+        if (cand / ".git").exists() or (cand / "pyproject.toml").exists():
+            return cand
+    return cur
+
+
+def _link_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child.parent = node  # type: ignore[attr-defined]
+
+
+class SourceFile:
+    """One parsed Python module."""
+
+    def __init__(self, rel: str, text: str,
+                 abspath: Optional[Path] = None):
+        self.rel = rel                      # repo-relative posix path
+        self.abspath = abspath
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=rel)
+        _link_parents(self.tree)
+        self.suppressions = parse_suppressions(self.lines)
+
+    @classmethod
+    def parse(cls, path: Path, root: Path) -> "SourceFile":
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+        return cls(rel, path.read_text(), abspath=path)
+
+    @classmethod
+    def from_source(cls, text: str, rel: str) -> "SourceFile":
+        """Build an in-memory file for fixture tests."""
+        return cls(rel, text)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def diag(self, code: str, node: ast.AST, message: str) -> Diagnostic:
+        assert code in CODES, f"unknown diagnostic code {code}"
+        lineno = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Diagnostic(code=code, path=self.rel, line=lineno, col=col,
+                          message=message,
+                          line_text=self.line_text(lineno))
+
+
+class Project:
+    """The set of files under analysis, with the repo root pinned."""
+
+    def __init__(self, files: Sequence[SourceFile], root: Path):
+        self.files = list(files)
+        self.root = root
+
+    @classmethod
+    def collect(cls, paths: Sequence[Path],
+                root: Optional[Path] = None) -> "Project":
+        root = root or find_repo_root(paths[0] if paths else Path.cwd())
+        seen = set()
+        files: List[SourceFile] = []
+        errors: List[str] = []
+        for p in paths:
+            candidates: Iterable[Path]
+            if p.is_dir():
+                candidates = sorted(p.rglob("*.py"))
+            else:
+                candidates = [p]
+            for f in candidates:
+                key = f.resolve()
+                if key in seen or "__pycache__" in f.parts:
+                    continue
+                seen.add(key)
+                try:
+                    files.append(SourceFile.parse(f, root))
+                except (SyntaxError, ValueError) as e:
+                    errors.append(f"{f}: {e}")
+        if errors:
+            raise RuntimeError("failed to parse:\n" + "\n".join(errors))
+        return cls(files, root)
+
+    def get(self, rel: str) -> Optional[SourceFile]:
+        for f in self.files:
+            if f.rel == rel:
+                return f
+        return None
+
+
+class Checker:
+    """Base class: one stable code, one invariant."""
+
+    code = ""        # SIM00x
+    name = ""        # short slug for --list-codes
+
+    def applies(self, src: SourceFile) -> bool:
+        return True
+
+    def check_file(self, src: SourceFile) -> List[Diagnostic]:
+        return []
+
+    def check_project(self, project: Project) -> List[Diagnostic]:
+        """Default: run check_file over every applicable file.  Checkers
+        needing cross-file state override this directly."""
+        out: List[Diagnostic] = []
+        for src in project.files:
+            if self.applies(src):
+                out.extend(self.check_file(src))
+        return out
+
+
+def run_checkers(project: Project,
+                 checkers: Sequence[Checker]) -> List[Diagnostic]:
+    """Run every checker, drop inline-suppressed findings, sort."""
+    diags: List[Diagnostic] = []
+    by_rel = {f.rel: f for f in project.files}
+    for checker in checkers:
+        for d in checker.check_project(project):
+            src = by_rel.get(d.path)
+            if src is not None and is_suppressed(d, src.suppressions):
+                continue
+            diags.append(d)
+    diags.sort(key=lambda d: (d.path, d.line, d.col, d.code))
+    return diags
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers used by several checkers.
+
+def qualname_of(node: ast.AST) -> str:
+    """Dotted name for a def/class, e.g. ``_Engine._advance``."""
+    parts: List[str] = []
+    cur: Optional[ast.AST] = node
+    while cur is not None and not isinstance(cur, ast.Module):
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            parts.append(cur.name)
+        cur = getattr(cur, "parent", None)
+    return ".".join(reversed(parts))
+
+
+def enclosing_function(node: ast.AST) -> Optional[ast.AST]:
+    cur = getattr(node, "parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            return cur
+        cur = getattr(cur, "parent", None)
+    return None
+
+
+def dotted_name(node: ast.AST) -> str:
+    """Render ``a.b.c`` attribute chains; '' when not a plain chain."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else ""
+    return ""
+
+
+def names_in(node: ast.AST) -> set:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}

@@ -85,6 +85,28 @@ def check_colocated_envelope(scenario) -> List:
     if not specs:
         raise ValueError("vectorized engine needs an explicit worker count "
                          "(elastic mode needs engine='reference')")
+    if scenario.workload is None:
+        raise ValueError("scenario needs a workload trace")
+    if scenario.slo.ttft <= 0 or scenario.slo.atgt <= 0:
+        raise ValueError("SLO targets must be positive "
+                         f"(ttft={scenario.slo.ttft}, "
+                         f"atgt={scenario.slo.atgt})")
+    if not topo.heartbeat > 0:
+        raise ValueError("heartbeat must be a positive interval "
+                         f"(got {topo.heartbeat})")
+    if not 0.0 < topo.theta <= 1.0:
+        raise ValueError(f"theta must be in (0, 1] (got {topo.theta})")
+    if not math.isfinite(topo.gamma):
+        raise ValueError(f"gamma must be finite (got {topo.gamma})")
+    if int(topo.max_batch) < 1:
+        raise ValueError(f"max_batch must be >= 1 (got {topo.max_batch})")
+    if not isinstance(topo.rebalance, bool):
+        raise ValueError("rebalance must be a bool "
+                         f"(got {topo.rebalance!r})")
+    if int(scenario.seed) < 0:
+        raise ValueError(f"seed must be non-negative (got {scenario.seed})")
+    if scenario.engine not in ("reference", "vectorized", "jax"):
+        raise ValueError(f"unknown engine {scenario.engine!r}")
     return specs
 
 

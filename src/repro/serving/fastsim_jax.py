@@ -451,6 +451,14 @@ def run_colocated_jax(scenario, seed: Optional[int] = None):
     specs = check_jax_envelope(scenario)
     trace = scenario.materialize()
     ordered, arrival, l_in, l_real = _trace_arrays(trace)
+    if len(ordered) == 0:
+        # nothing to simulate: XLA rejects gathers into a size-0 trace
+        # axis, and the reference drains immediately anyway
+        empty = np.array([])
+        rep = _report_from_arrays(scenario, specs, len(specs), empty,
+                                  empty, empty, empty, empty, empty)
+        rep.beats = 0
+        return rep
     # x64 is scoped, not a process-global flag: the serving models run in
     # jax's default 32-bit mode and must not see this engine's precision
     with enable_x64():

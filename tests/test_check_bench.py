@@ -1,0 +1,95 @@
+"""`check_bench.py --update` merge semantics: fresh metrics win, but
+positive us_per_call canaries survive untimed runs."""
+import importlib.util
+import json
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+spec = importlib.util.spec_from_file_location(
+    "check_bench", REPO_ROOT / "scripts" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_bench)
+
+
+def _write(path, rows):
+    path.write_text(json.dumps({"rows": rows}))
+
+
+def test_update_refreshes_metrics_and_timed_canary(tmp_path):
+    base_dir = tmp_path / "baselines"
+    base_dir.mkdir()
+    _write(base_dir / "BENCH_a.json",
+           [{"name": "hot_loop", "attainment": 0.99, "gpu_cost": 100.0,
+             "us_per_call": 30000.0}])
+    _write(tmp_path / "BENCH_a.json",
+           [{"name": "hot_loop", "attainment": 0.995, "gpu_cost": 90.0,
+             "us_per_call": 25000.0}])
+    assert check_bench.update_baselines(tmp_path, base_dir) == 0
+    rows = check_bench.load_rows(base_dir / "BENCH_a.json")
+    row = rows["hot_loop"]
+    assert row["attainment"] == 0.995
+    assert row["gpu_cost"] == 90.0
+    assert row["us_per_call"] == 25000.0   # timed run refreshes canary
+
+
+def test_update_keeps_canary_when_fresh_run_untimed(tmp_path):
+    base_dir = tmp_path / "baselines"
+    base_dir.mkdir()
+    _write(base_dir / "BENCH_a.json",
+           [{"name": "hot_loop", "attainment": 0.99, "gpu_cost": 100.0,
+             "us_per_call": 30000.0}])
+    _write(tmp_path / "BENCH_a.json",
+           [{"name": "hot_loop", "attainment": 0.98, "gpu_cost": 110.0,
+             "us_per_call": 0.0}])
+    check_bench.update_baselines(tmp_path, base_dir)
+    row = check_bench.load_rows(base_dir / "BENCH_a.json")["hot_loop"]
+    assert row["attainment"] == 0.98       # metrics still refreshed
+    assert row["us_per_call"] == 30000.0   # canary not zeroed
+
+
+def test_update_adopts_new_rows_and_new_files(tmp_path):
+    base_dir = tmp_path / "baselines"
+    base_dir.mkdir()
+    _write(base_dir / "BENCH_a.json",
+           [{"name": "old", "attainment": 0.9, "gpu_cost": 1.0,
+             "us_per_call": 0.0}])
+    _write(tmp_path / "BENCH_a.json",
+           [{"name": "old", "attainment": 0.9, "gpu_cost": 1.0,
+             "us_per_call": 0.0},
+            {"name": "new_row", "attainment": 0.95, "gpu_cost": 2.0,
+             "us_per_call": 123.0}])
+    _write(tmp_path / "BENCH_b.json",
+           [{"name": "fresh_file", "attainment": 1.0, "gpu_cost": 3.0,
+             "us_per_call": 0.0}])
+    check_bench.update_baselines(tmp_path, base_dir)
+    a = check_bench.load_rows(base_dir / "BENCH_a.json")
+    assert set(a) == {"old", "new_row"}
+    assert a["new_row"]["us_per_call"] == 123.0
+    b = check_bench.load_rows(base_dir / "BENCH_b.json")
+    assert b["fresh_file"]["gpu_cost"] == 3.0
+
+
+def test_update_leaves_orphan_baseline_untouched(tmp_path, capsys):
+    base_dir = tmp_path / "baselines"
+    base_dir.mkdir()
+    _write(base_dir / "BENCH_orphan.json",
+           [{"name": "r", "attainment": 0.5, "gpu_cost": 9.0,
+             "us_per_call": 777.0}])
+    check_bench.update_baselines(tmp_path, base_dir)
+    out = capsys.readouterr().out
+    assert "no fresh counterpart" in out
+    row = check_bench.load_rows(base_dir / "BENCH_orphan.json")["r"]
+    assert row["us_per_call"] == 777.0
+
+
+def test_gate_still_catches_regressions(tmp_path):
+    base = tmp_path / "BENCH_a.base.json"
+    fresh = tmp_path / "BENCH_a.json"
+    _write(base, [{"name": "r", "attainment": 0.99, "gpu_cost": 100.0,
+                   "us_per_call": 1000.0}])
+    _write(fresh, [{"name": "r", "attainment": 0.90, "gpu_cost": 150.0,
+                    "us_per_call": 2000.0}])
+    problems = check_bench.check_file(base, fresh, attain_tol=0.01,
+                                      cost_tol=0.10, time_tol=0.25)
+    assert len(problems) == 3

@@ -19,6 +19,7 @@ import pytest
 
 from repro.core.perf_model import (DecodeModel, KVModel, PerfModel,
                                    PrefillModel)
+from repro.core.request import Request
 from repro.core.slo import SLO
 from repro.core.worker_config import WorkerSpec
 from repro.serving import api
@@ -129,6 +130,32 @@ def test_congestion_with_unplaced_tail():
         _assert_bitwise(ref, vec, ref_t, vec_t)
 
 
+@pytest.mark.parametrize("kv", ["tight", "loose"])
+def test_zero_request_trace(kv):
+    # empty-trace beat loop: the engines must agree on an immediate drain
+    # with nan attainment rather than crash or spin
+    for policy in ("aladdin", "jsq", "po2"):
+        ref, vec, ref_t, vec_t = _run_both(
+            [], [api.PoolSpec(_spec(kv), 2)], policy)
+        assert ref.total == vec.total == 0
+        assert ref.finished == vec.finished == 0
+        _assert_bitwise(ref, vec, ref_t, vec_t)
+
+
+@pytest.mark.parametrize("arrival", [0.0, 1.7])
+def test_single_request_trace(arrival):
+    # one arrival exercises the event-skip path (the whole horizon after
+    # the lone prefill/decode is arrival-free) and the drain rule
+    for policy in ("aladdin", "jsq", "po2"):
+        trace = [Request(l_in=96, l_pred=0, l_real=40, arrival=arrival)]
+        ref, vec, ref_t, vec_t = _run_both(
+            trace, [api.PoolSpec(_spec("tight"), 2)], policy)
+        assert ref.finished == vec.finished == 1
+        assert vec_t[0].t_first_token is not None
+        assert vec_t[0].t_first_token >= arrival
+        _assert_bitwise(ref, vec, ref_t, vec_t)
+
+
 def test_optimize_parity_and_batched_evaluation():
     trace = generate_trace(WorkloadConfig(mean_rate=6.0, duration=30.0,
                                           seed=3))
@@ -203,6 +230,23 @@ def test_jax_engine_matches_reference(policy):
     assert jx.attainment == pytest.approx(ref.attainment)
     assert jx.p99_atgt == pytest.approx(ref.p99_atgt, rel=1e-9)
     assert jx.p99_ttft == pytest.approx(ref.p99_ttft, rel=1e-9)
+
+
+@pytest.mark.parametrize("n_req", [0, 1])
+def test_jax_engine_edge_traces(n_req):
+    # the compiled beat loop on an empty trace (drain on the first beat)
+    # and a lone arrival (the event skipper covers the whole tail gap)
+    pytest.importorskip("jax")
+    trace = [Request(l_in=96, l_pred=0, l_real=40, arrival=0.4)][:n_req]
+    for policy in ("aladdin", "jsq"):
+        ref, jx, ref_t, jx_t = _run_both(
+            trace, [api.PoolSpec(_jax_spec(), 2)], policy, engine="jax")
+        assert jx.total == ref.total == n_req
+        assert jx.finished == ref.finished == n_req
+        if n_req:
+            assert jx_t[0].l_out == ref_t[0].l_out
+            assert jx_t[0].t_finish == pytest.approx(ref_t[0].t_finish,
+                                                     rel=1e-12)
 
 
 def test_jax_candidate_batch_matches_singles():
