@@ -449,9 +449,49 @@ def _saving_row(scenario: str, base_label: str, base: RunReport,
                         + (f";{extra}" if extra else ""))}
 
 
+def _engine_rows(scenario: str, mk, repeats: int = 2,
+                 stress: str = "") -> List[Dict]:
+    """Timed engine rows for one pooled scenario: the per-object reference
+    loop against the numpy and compiled cores on the same construction.
+    ``mk(engine)`` must build a FRESH Scenario per call — stateful
+    ``PolicyScale`` policies cannot be shared across runs. The jax run is
+    timed after a compile warmup (best-of-``repeats``), and every row's
+    beats_per_s uses the compiled run's executed beat count (the engines
+    walk the same beat grid). ``stress`` annotates the derived string
+    when the cell runs a load-stressed variant of the scenario."""
+    walls: Dict[str, float] = {}
+    reps: Dict[str, RunReport] = {}
+    for engine in ("reference", "vectorized", "jax"):
+        if engine == "jax":
+            run_scenario(mk(engine))        # jit compile is a one-time cost
+        best, rep = float("inf"), None
+        for _ in range(1 if engine == "reference" else repeats):
+            t0 = time.perf_counter()
+            rep = run_scenario(mk(engine))
+            best = min(best, time.perf_counter() - t0)
+        walls[engine], reps[engine] = best, rep
+    beats = reps["jax"].beats
+    rows = []
+    for engine in ("reference", "vectorized", "jax"):
+        rep, wall = reps[engine], walls[engine]
+        rows.append({
+            "name": f"{scenario}_engine_{engine}",
+            "us_per_call": wall * 1e6, "scenario": scenario,
+            "policy": f"engine={engine}", "attainment": rep.attainment,
+            "gpu_cost": rep.gpu_seconds,
+            "derived": (f"wall_ms={wall * 1e3:.1f};beats={beats};"
+                        f"beats_per_s={beats / wall:.0f};"
+                        f"speedup_vs_ref={walls['reference'] / wall:.1f};"
+                        f"attain={rep.attainment:.4f};"
+                        f"gpu_s={rep.gpu_seconds:.0f}"
+                        + (f";{stress}" if stress else ""))})
+    return rows
+
+
 def _run_scaled(scenario: str, scenarios: Dict[str, Scenario],
                 base_label: str, verbose: bool, extra: str = "",
-                cand_label: Optional[str] = None) -> List[Dict]:
+                cand_label: Optional[str] = None,
+                extra_rows: Optional[List[Dict]] = None) -> List[Dict]:
     """Dispatch a dict of named Scenario constructions through api.run and
     write the bench file — the one code path every scaled scenario shares
     (no per-scenario result plumbing)."""
@@ -460,6 +500,7 @@ def _run_scaled(scenario: str, scenarios: Dict[str, Scenario],
     cand = cand_label or [lab for lab in reps if lab != base_label][-1]
     rows.append(_saving_row(scenario, base_label, reps[base_label],
                             reps[cand], extra))
+    rows.extend(extra_rows or [])
     if verbose:
         for row in rows:
             print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
@@ -514,7 +555,9 @@ def run_spot(verbose: bool = True, duration: float = 600.0,
              amplitude: float = 0.6, seed: int = 21,
              hazard: float = 1.0 / 600.0, discount: float = 0.35,
              event_frac: float = 0.25, event_seed: int = 13,
-             notice_s: float = 60.0) -> List[Dict]:
+             notice_s: float = 60.0, engine_repeats: int = 2,
+             engine_rate: float = 48.0,
+             engine_duration: float = 150.0) -> List[Dict]:
     """Spot-aware vs all-on-demand forecast scaling on the default diurnal
     trace. The spot pool bills at ``discount`` of on-demand but is reclaimed
     by a ``preemption_trace`` market (per-worker hazard ~ event_rate * frac);
@@ -557,6 +600,35 @@ def run_spot(verbose: bool = True, duration: float = 600.0,
                         slo=slo, topology=Colocated(),
                         scaling=PolicyScale(policy, scfg), market=market)
 
+    # engine rows on the colocated spot-mix cell: the full market + mix
+    # policy + reclaim pipeline through all three engines, timed. The cell
+    # runs at a stress rate (engine_rate >> rate) — the reference loop's
+    # per-beat cost grows with concurrent requests while the compiled
+    # kernel's is ~flat, so this is where the engines actually separate;
+    # the headline policy rows above keep the paper-scale rate
+    ewcfg = dataclasses.replace(wcfg, mean_rate=engine_rate,
+                                duration=engine_duration)
+    escfg = dataclasses.replace(
+        scfg, initial_workers=max(scfg.initial_workers, int(engine_rate)))
+    eevents = preemption_trace(engine_duration,
+                               event_rate=hazard / event_frac,
+                               frac=event_frac, seed=event_seed)
+
+    def mk_engine(engine: str) -> Scenario:
+        fc = SeasonalNaiveForecaster(ForecastConfig(period=period,
+                                                    bin_width=escfg.interval))
+        return Scenario(
+            workload=lambda: diurnal_trace(ewcfg, amplitude=amplitude,
+                                           period=period),
+            fleet=FleetSpec([PoolSpec(spec, escfg.initial_workers)]),
+            slo=slo, topology=Colocated(),
+            scaling=PolicyScale(ForecastPolicy(escfg, fc, spot_mix=mix),
+                                escfg),
+            market=SpotMarket(spot_spec, eevents), engine=engine)
+
+    engine_rows = _engine_rows("spot", mk_engine, repeats=engine_repeats,
+                               stress=f"rate={engine_rate:g}")
+
     return _run_scaled(
         "spot",
         {"on_demand": scaled(policy(None)),
@@ -565,13 +637,16 @@ def run_spot(verbose: bool = True, duration: float = 600.0,
                                SpotMarket(spot_spec, events,
                                           notice_s=notice_s))},
         base_label="on_demand", verbose=verbose,
-        extra=f"events={len(events)}", cand_label="spot_mix")
+        extra=f"events={len(events)}", cand_label="spot_mix",
+        extra_rows=engine_rows)
 
 
 def run_feedback(verbose: bool = True, duration: float = 900.0,
                  period: float = 150.0, rate: float = 6.0,
                  amplitude: float = 0.6, drift: float = 1.0,
-                 seed: int = 33) -> List[Dict]:
+                 seed: int = 33, engine_repeats: int = 2,
+                 engine_rate: float = 48.0,
+                 engine_duration: float = 150.0) -> List[Dict]:
     """Closed-loop SLO-feedback scaling on a drifted-seasonality trace.
 
     The trace's instantaneous period stretches by ``drift`` across the run
@@ -633,6 +708,23 @@ def run_feedback(verbose: bool = True, duration: float = 900.0,
         "derived": (f"params={params or 'declared'};evals={plan.evals};"
                     f"attain={plan.report.attainment:.4f};"
                     f"gpu_s={plan.cost:.0f};roundtrip_exact={exact}")})
+    # engine rows: the drift + feedback-scaled cell through all three
+    # engines, timed (the compiled core dispatches chunk kernels between
+    # the host-side epoch boundaries). Run at a stress rate so the
+    # per-object reference loop and the compiled kernel separate — the
+    # kernel's per-beat cost is ~flat in concurrent requests
+    ewcfg = dataclasses.replace(wcfg, mean_rate=engine_rate,
+                                duration=engine_duration)
+
+    def mk_engine(engine: str) -> Scenario:
+        return Scenario(
+            workload=lambda: drifting_diurnal_trace(
+                ewcfg, amplitude=amplitude, period=period, drift=drift),
+            fleet=FleetSpec([PoolSpec(spec, 5)]), slo=slo,
+            topology=Colocated(), scaling=feedback(), engine=engine)
+
+    rows.extend(_engine_rows("feedback", mk_engine, repeats=engine_repeats,
+                             stress=f"rate={engine_rate:g}"))
     if verbose:
         for row in rows:
             print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
@@ -714,10 +806,13 @@ SMOKE_PARAMS = {
     "burst": dict(duration=15.0),
     "forecast": dict(duration=150.0, period=75.0, rate=4.0),
     "spot": dict(duration=150.0, period=75.0, rate=4.0,
-                 hazard=1.0 / 150.0, event_seed=2),
+                 hazard=1.0 / 150.0, event_seed=2, engine_repeats=1,
+                 engine_rate=24.0, engine_duration=60.0),
     "disagg_spot": dict(duration=150.0, period=75.0, rate=4.0,
                         hazard=1.0 / 150.0, event_seed=2),
-    "feedback": dict(duration=300.0, period=75.0, rate=4.0),
+    "feedback": dict(duration=300.0, period=75.0, rate=4.0,
+                     engine_repeats=1, engine_rate=24.0,
+                     engine_duration=60.0),
 }
 
 

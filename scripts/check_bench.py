@@ -20,6 +20,11 @@ run fails the gate (a silently dropped scenario is a regression too). Rows
 whose baseline metric is missing/NaN are skipped for that metric. When a PR
 intentionally shifts the numbers, regenerate the baselines
 (`python scripts/check_bench.py --update`) and commit the diff.
+
+`--strict` additionally makes orphans hard failures in both directions:
+a committed baseline with no fresh counterpart (`--update` mode) and a
+fresh BENCH file with no committed baseline (check mode) — deleted
+scenarios cannot leave stale gates behind, new ones cannot ship ungated.
 """
 from __future__ import annotations
 
@@ -118,7 +123,8 @@ def merge_baseline(base_path: Path, fresh_path: Path) -> tuple:
     return payload, messages
 
 
-def update_baselines(fresh_dir: Path, baseline_dir: Path) -> int:
+def update_baselines(fresh_dir: Path, baseline_dir: Path,
+                     strict: bool = False) -> int:
     baseline_dir.mkdir(parents=True, exist_ok=True)
     fresh_files = sorted(fresh_dir.glob("BENCH_*.json"))
     fresh_names = {p.name for p in fresh_files}
@@ -130,12 +136,66 @@ def update_baselines(fresh_dir: Path, baseline_dir: Path) -> int:
         for m in messages:
             print(f"  {m}")
         updated += 1
-    for base_path in sorted(baseline_dir.glob("BENCH_*.json")):
-        if base_path.name not in fresh_names:
+    orphans = [p for p in sorted(baseline_dir.glob("BENCH_*.json"))
+               if p.name not in fresh_names]
+    for base_path in orphans:
+        if strict:
+            print(f"  FAIL {base_path.name}: orphan baseline — no fresh "
+                  f"counterpart (delete it if the scenario is gone)",
+                  file=sys.stderr)
+        else:
             print(f"  {base_path.name}: no fresh counterpart, baseline "
                   f"left untouched (delete it if the scenario is gone)")
     print(f"check_bench: baselines updated from {updated} fresh files")
+    if strict and orphans:
+        print(f"check_bench: --strict: {len(orphans)} orphan baseline(s) "
+              f"gate nothing — a deleted scenario must delete its "
+              f"baseline file too", file=sys.stderr)
+        return 1
     return 0
+
+
+def _fmt_delta(base, fresh, relative: bool) -> str:
+    if base is None or fresh is None:
+        return "—"
+    if relative:
+        if base == 0.0:
+            return "—"
+        return f"{(fresh / base - 1.0) * +100:+.1f}%"
+    return f"{fresh - base:+.4f}"
+
+
+def write_summary(baselines: list, fresh_dir: Path, out_path: Path,
+                  problems: list) -> None:
+    """Append a per-row markdown delta table (fresh vs committed baseline)
+    to ``out_path`` — written into ``$GITHUB_STEP_SUMMARY`` by CI so every
+    run shows how attainment / gpu_cost / us_per_call moved, not just
+    pass/fail."""
+    lines = ["## Bench delta vs committed baselines", "",
+             "| row | attainment | Δ | gpu_cost | Δ | us_per_call | Δ |",
+             "|---|---|---|---|---|---|---|"]
+    for base_path in baselines:
+        base = load_rows(base_path)
+        fresh_path = fresh_dir / base_path.name
+        fresh = load_rows(fresh_path) if fresh_path.exists() else {}
+        for name in list(base) + [n for n in fresh if n not in base]:
+            brow, frow = base.get(name, {}), fresh.get(name, {})
+            cells = [name]
+            for key, rel in (("attainment", False), ("gpu_cost", True),
+                             ("us_per_call", True)):
+                f_v = finite(frow, key)
+                cells.append("—" if f_v is None else f"{f_v:.4g}")
+                cells.append(_fmt_delta(finite(brow, key), f_v, rel))
+            lines.append("| " + " | ".join(cells) + " |")
+    lines.append("")
+    if problems:
+        lines.append(f"**{len(problems)} regression(s):**")
+        lines += [f"- `{p}`" for p in problems]
+    else:
+        lines.append("All rows within tolerances.")
+    lines.append("")
+    with open(out_path, "a") as f:
+        f.write("\n".join(lines))
 
 
 def main() -> int:
@@ -156,11 +216,21 @@ def main() -> int:
                     "instead of checking (for intentional shifts); "
                     "positive us_per_call canaries are refreshed only "
                     "by timed runs, never zeroed")
+    ap.add_argument("--strict", action="store_true",
+                    help="orphans are hard failures: committed baseline "
+                    "files with no fresh counterpart (--update), and "
+                    "fresh bench files with no committed baseline "
+                    "(check mode) — so a deleted scenario cannot leave a "
+                    "stale gate behind, and a new one cannot ship ungated")
+    ap.add_argument("--summary", type=Path, default=None,
+                    help="append a per-row markdown delta table to this "
+                    "file (CI passes $GITHUB_STEP_SUMMARY)")
     args = ap.parse_args()
 
     baselines = sorted(args.baseline_dir.glob("BENCH_*.json"))
     if args.update:
-        return update_baselines(args.fresh_dir, args.baseline_dir)
+        return update_baselines(args.fresh_dir, args.baseline_dir,
+                                strict=args.strict)
     if not baselines:
         print(f"check_bench: no baselines under {args.baseline_dir}; "
               f"run with --update after a smoke bench to create them",
@@ -173,6 +243,15 @@ def main() -> int:
         problems += check_file(base_path, args.fresh_dir / base_path.name,
                                args.attain_tol, args.cost_tol, args.time_tol)
         checked += 1
+    if args.strict:
+        base_names = {p.name for p in baselines}
+        for fresh_path in sorted(args.fresh_dir.glob("BENCH_*.json")):
+            if fresh_path.name not in base_names:
+                problems.append(
+                    f"{fresh_path.name}: fresh bench file has no committed "
+                    f"baseline (gate it: --update and commit the diff)")
+    if args.summary is not None:
+        write_summary(baselines, args.fresh_dir, args.summary, problems)
     if problems:
         print(f"check_bench: {len(problems)} regression(s) vs committed "
               f"baselines:", file=sys.stderr)

@@ -14,7 +14,9 @@
 #   5. scripts/check_bench.py — fresh BENCH_*.json rows vs the committed
 #      baselines (attainment may not drop, gpu_cost may not regress >10%,
 #      and the perf-canary rows' us_per_call may not grow >25% — the
-#      struct-of-arrays engines' speedups are gated, not just printed)
+#      struct-of-arrays engines' speedups are gated, not just printed);
+#      --strict: orphan baselines and unbaselined fresh files both fail,
+#      so scenario deletions/additions must move their gates in the same PR
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -57,4 +59,4 @@ fi
 echo "smoke bench took $(( $(date +%s) - start ))s"
 
 echo "== bench regression gate (check_bench.py) =="
-python scripts/check_bench.py --time-tol 0.25
+python scripts/check_bench.py --time-tol 0.25 --strict

@@ -27,8 +27,15 @@ CLOCK_ARRAYS = {"t_first", "t_fin", "tds", "t_w"}
 BLESSED = {
     "serving/simulator.py": {"SimWorker.advance_to"},
     "serving/fastsim.py": {"_Engine._advance", "_Engine._step",
-                           "_Engine.writeback"},
-    "serving/fastsim_jax.py": {"run_colocated_jax"},
+                           "_Engine.writeback",
+                           # pooled/scaled lanes: boot resets and the
+                           # per-beat lane-clock advance, pinned by the
+                           # engine equivalence grid
+                           "_Engine._spawn_lane", "_Engine._step_pooled"},
+    "serving/fastsim_jax.py": {"run_colocated_jax",
+                               # the chunked engine's writeback — the
+                               # jax counterpart of _Engine.writeback
+                               "_pooled_report"},
     "serving/disagg.py": {"PrefillSimWorker.advance_to"},
     "serving/lifecycle.py": {"mark_kv_loss", "mark_requeue"},
     "serving/engine.py": {"PagedEngine.step"},

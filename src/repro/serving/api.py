@@ -895,6 +895,31 @@ def _optimize_policy(scenario: Scenario, template, attain_target: float,
             evals[0] += 1
         return rep
 
+    def prefetch(assigns: Sequence[Dict]) -> None:
+        """On the jax engine, fill the cache for one coordinate's whole
+        candidate bracket with a single lockstep-batched compiled call
+        (``run_policy_candidate_batch``) instead of one run per value."""
+        if scenario.engine != "jax" \
+                or not isinstance(scenario.topology, Colocated):
+            return
+        seen = set()
+        uniq = []
+        for a in assigns:
+            k = key(a)
+            if k not in cache and k not in seen:
+                seen.add(k)
+                uniq.append((k, a))
+        if len(uniq) < 2:       # nothing to batch
+            return
+        from repro.serving import fastsim_jax
+        scs = [_apply_assignment(
+            dataclasses.replace(scenario, workload=clone_trace(template)),
+            a) for _, a in uniq]
+        for (k, _a), rep in zip(uniq,
+                                fastsim_jax.run_policy_candidate_batch(scs)):
+            cache[k] = rep
+            evals[0] += 1
+
     def attains(rep: RunReport) -> bool:
         return rep.attainment >= attain_target and rep.finished == rep.total
 
@@ -912,6 +937,8 @@ def _optimize_policy(scenario: Scenario, template, attain_target: float,
     for _ in range(max_rounds):
         improved = False
         for name, values in space.items():
+            prefetch([dict(current, **{name: v}) for v in values
+                      if current.get(name) != v])
             for v in values:
                 if current.get(name) == v:
                     continue

@@ -26,10 +26,19 @@ replicating the reference's floating-point operation order exactly:
 
 Supported envelope (everything else raises ``ValueError`` so ``api.run``
 can fall back or the caller can switch engines explicitly): ``Colocated``
-topology without ``split_phase``, ``FixedScale`` with an explicit worker
-count (no elastic mode), no spot market, no length predictor, no observer;
-policies ``aladdin`` / ``jsq`` / ``po2``. Heterogeneous fixed fleets are
-supported — every per-worker coefficient is an array.
+topology without ``split_phase``, no length predictor, no observer;
+policies ``aladdin`` / ``jsq`` / ``po2``. Fleets may be fixed (explicit
+worker count, heterogeneous allowed — every per-worker coefficient is an
+array) or policy-scaled (``Reactive`` / ``Forecast`` / ``FeedbackScale`` /
+``PolicyScale``): the engine keeps worker state in growable per-lane rows
+and plugs them into the REAL :class:`repro.serving.forecast.ManagedPool` /
+:class:`repro.serving.lifecycle.WorkerLifecycle` state machines through the
+same adapter protocol the reference uses, so every scaling decision (epoch
+targets, boots, drains, reclaim victim draws) is made by the reference code
+itself on bit-identical inputs. A ``SpotMarket`` is supported on both fixed
+and policy-scaled fleets (reclaims share the engine's Generator, which is
+consumed in the reference's exact draw order). Elastic fixed fleets
+(place-to-open) remain reference-only.
 """
 from __future__ import annotations
 
@@ -41,6 +50,7 @@ import numpy as np
 from repro.core.placement import (best_fit_order, decode_budget_arrays,
                                   jsq_order, kv_peak_arrays, slack_arrays)
 from repro.core.request import ReqState, Request
+from repro.serving.lifecycle import WorkerLifecycle
 
 DEFAULT_TAIL = 240.0
 
@@ -51,8 +61,9 @@ _SEG_VECTOR_MIN = 16
 
 def check_colocated_envelope(scenario) -> List:
     """Validate that ``scenario`` fits the vectorized engine's envelope and
-    return the expanded per-worker spec list. Raises ``ValueError`` with the
-    first unsupported feature otherwise."""
+    return the expanded *initial* per-worker spec list (the t=0 fleet — a
+    policy-scaled scenario boots and drains lanes from there). Raises
+    ``ValueError`` with the first unsupported feature otherwise."""
     from repro.serving import api
 
     if not isinstance(scenario.topology, api.Colocated):
@@ -64,11 +75,18 @@ def check_colocated_envelope(scenario) -> List:
                          "(decode-pool-only) simulation")
     if topo.policy not in ("aladdin", "jsq", "po2"):
         raise ValueError(f"unknown placement policy {topo.policy!r}")
-    if not isinstance(scenario.scaling, api.FixedScale):
-        raise ValueError("vectorized engine supports FixedScale only; "
-                         "autoscaled scenarios need engine='reference'")
-    if scenario.market is not None:
-        raise ValueError("vectorized engine does not support a spot market")
+    managed = not isinstance(scenario.scaling, api.FixedScale)
+    if managed and not isinstance(
+            scenario.scaling, (api.Reactive, api.Forecast, api.FeedbackScale,
+                               api.PolicyScale)):
+        raise ValueError("unknown scaling declaration "
+                         f"{type(scenario.scaling).__name__}")
+    market = scenario.market
+    if market is not None and (market.prefill_spec is not None
+                               or len(market.prefill_events) > 0):
+        raise ValueError("SpotMarket.prefill_spec/prefill_events describe "
+                         "the prefill side of a Disaggregated topology; a "
+                         "Colocated scenario would silently ignore them")
     if scenario.predictor is not None:
         raise ValueError("vectorized engine does not support length "
                          "predictors (l_pred must equal l_real)")
@@ -78,7 +96,10 @@ def check_colocated_envelope(scenario) -> List:
     pools = scenario.fleet.for_role("serve")
     if not pools:
         raise ValueError("colocated scenario needs at least one fleet pool")
-    if scenario.scaling.n is not None:
+    if managed:
+        scfg = _managed_scfg(scenario)
+        specs = [pools[0].spec] * max(scfg.initial_workers, scfg.min_workers)
+    elif scenario.scaling.n is not None:
         specs = [pools[0].spec] * int(scenario.scaling.n)
     else:
         specs = [p.spec for p in pools for _ in range(p.count)]
@@ -108,6 +129,42 @@ def check_colocated_envelope(scenario) -> List:
     if scenario.engine not in ("reference", "vectorized", "jax"):
         raise ValueError(f"unknown engine {scenario.engine!r}")
     return specs
+
+
+def _managed_scfg(scenario):
+    """The ``ScaleSimConfig`` a policy-scaled scenario resolves to (the same
+    resolution path ``api._run_colocated`` uses)."""
+    from repro.serving import api
+
+    if isinstance(scenario.scaling, api.PolicyScale):
+        return scenario.scaling.scfg
+    pools = scenario.fleet.for_role("serve")
+    return api._scale_cfg(scenario.scaling, sum(p.count for p in pools))
+
+
+def _managed_policy(scenario, scfg):
+    """Build the scaling policy instance exactly like the reference path."""
+    from repro.serving import api
+
+    if isinstance(scenario.scaling, api.PolicyScale):
+        return scenario.scaling.policy
+    spot = scenario.market.spec if scenario.market is not None else None
+    return api._build_policy(scenario.scaling, scfg, spot)
+
+
+class _Lane:
+    """Worker adapter handed to the real ``ManagedPool``/``WorkerLifecycle``
+    state machines: carries the identity (``id``/``spec``) the lifecycle
+    code keys on, plus the engine's row index for this worker."""
+
+    __slots__ = ("id", "spec", "idx", "draining", "alive")
+
+    def __init__(self, wid: int, spec, idx: int):
+        self.id = wid
+        self.spec = spec
+        self.idx = idx
+        self.draining = False       # only the fixed+market path sets this
+        self.alive = True
 
 
 class _Engine:
@@ -164,6 +221,8 @@ class _Engine:
         self.tds = np.zeros(n)                      # t_decode_spent
         self.t_first = np.full(n, np.nan)
         self.t_fin = np.full(n, np.nan)
+        self.t_pre = np.full(n, np.nan)             # t_preempted (KV loss)
+        self.preempt_n = np.zeros(n, dtype=np.int64)   # preempt_count delta
 
         # ---- mutable worker state ------------------------------------------
         Bcap = max(int(self.MAXB.max()), 1) if W else 1
@@ -178,10 +237,59 @@ class _Engine:
         self.newb: List[List[int]] = [[] for _ in range(W)]
         self.pre: List[List[int]] = [[] for _ in range(W)]
         self.newsum = np.zeros(W, dtype=np.int64)   # Σ l_in over newb
+        # Σ context over newb (differs from newsum for KV-loss re-entrants,
+        # whose retained l_out re-prefills too — what kv_now charges)
+        self.newctx = np.zeros(W, dtype=np.int64)
         self.queued: List[int] = []
         self.fin_order: List[int] = []      # finish order (oracle's order)
         self.preemptions = 0
         self.beats = 0
+        self.peak_lanes = W                 # topo.peak_workers twin
+        self.pool = None                    # worker container, if pooled
+        self._wid = 0                       # worker-id counter (pool lanes)
+
+    # ---- dynamic lanes (policy-scaled fleets) ------------------------------
+
+    def _alloc_lane(self, spec) -> int:
+        """Append one worker row to every per-lane array; returns its index.
+        Policy-scaled fleets boot lanes mid-run — lane rows are never
+        recycled, so a retired lane's (empty) row just stops being visited."""
+        idx = self.W
+        self.W += 1
+        self.specs.append(spec)
+        for name, val in (("K1", spec.perf.prefill.k1),
+                          ("C1", spec.perf.prefill.c1),
+                          ("K2", spec.perf.decode.k2),
+                          ("C2", spec.perf.decode.c2),
+                          ("C3", spec.perf.decode.c3),
+                          ("H", spec.perf.kv.h), ("J", spec.perf.kv.j),
+                          ("M", spec.kv_capacity)):
+            setattr(self, name, np.append(getattr(self, name), val))
+        self.MAXB = np.append(self.MAXB, np.int64(spec.max_batch))
+        self.maxb_norm.append(max(int(spec.max_batch), 1))
+        cmax = spec.perf.decode.max_total_context(1, self.slo.atgt) or 1.0
+        self.cmax_norm.append(max(cmax, 1.0))
+        self.coef.append((float(spec.perf.prefill.k1),
+                          float(spec.perf.prefill.c1),
+                          float(spec.perf.decode.k2),
+                          float(spec.perf.decode.c2),
+                          float(spec.perf.decode.c3), float(spec.perf.kv.h),
+                          float(spec.perf.kv.j), float(spec.kv_capacity),
+                          int(spec.max_batch)))
+        B = self.mem.shape[1] if idx else max(int(spec.max_batch), 1)
+        self.mem = np.vstack([self.mem,
+                              np.full((1, B), -1, dtype=np.int64)]) \
+            if idx else np.full((1, B), -1, dtype=np.int64)
+        for name in ("cnt", "bsz", "ctx", "newsum", "newctx"):
+            setattr(self, name,
+                    np.append(getattr(self, name), np.int64(0)))
+        self.t_w = np.append(self.t_w, 0.0)
+        self.wctx = np.append(self.wctx, 0.0)
+        self.norm = np.append(self.norm, 0.0)
+        self.dirty = np.append(self.dirty, True)
+        self.newb.append([])
+        self.pre.append([])
+        return idx
 
     def _grow_mem(self) -> None:
         # resumes can push a batch past max_batch (placement bounds only
@@ -213,8 +321,9 @@ class _Engine:
                 self.wctx[wi] = np.cumsum(vals)[-1]
             self.dirty[wi] = False
 
-    def _refresh_norms(self) -> None:
-        for wi in range(self.W):
+    def _refresh_norms(self, sel: Optional[np.ndarray] = None) -> None:
+        for wi in (range(self.W) if sel is None else sel):
+            wi = int(wi)
             self.norm[wi] = math.hypot(
                 self.bsz[wi] / self.maxb_norm[wi],
                 self.wctx[wi] / self.cmax_norm[wi])
@@ -234,42 +343,59 @@ class _Engine:
     def _place(self, wi: int, ridx: int, v: float, li: int) -> None:
         self.newb[wi].append(ridx)
         self.newsum[wi] += li
+        self.newctx[wi] += li + int(self.l_out[ridx])
         self.bsz[wi] += 1
         self.wctx[wi] += v
         self.norm[wi] = math.hypot(
             self.bsz[wi] / self.maxb_norm[wi],
             self.wctx[wi] / self.cmax_norm[wi])
 
-    def _place_all_aladdin(self) -> None:
+    # Placement runs over the *serving* lanes in serving-list order: ``sel``
+    # (None = every lane, the fixed-fleet fast path) maps serving position ->
+    # lane row, so best-fit/JSQ tie-breaks keep the reference's list order
+    # even when a pool boots, drains and reclaims lanes out of index order.
+
+    def _place_all_aladdin(self, sel: Optional[np.ndarray] = None) -> None:
         theta = self.theta
         atgt = self.slo.atgt
         ttft = self.slo.ttft
         g = self.gamma
         self._recompute_wctx()
-        self._refresh_norms()
+        self._refresh_norms(sel)
+        if sel is None:
+            def sub(a):
+                return a
+        else:
+            def sub(a):
+                return a[sel]
         # constraint (d) slack is over *ongoing* members only — fixed for
         # the whole placement pass
         B = self.mem.shape[1]
-        mask_slots = np.arange(B)[None, :] < self.cnt[:, None]
-        slack = slack_arrays(self.l_out[self.mem], self.tds[self.mem],
+        mem_s = sub(self.mem)
+        mask_slots = np.arange(B)[None, :] < sub(self.cnt)[:, None]
+        slack = slack_arrays(self.l_out[mem_s], self.tds[mem_s],
                              mask_slots, atgt)
         d_budget = theta * np.maximum(slack, 0.0)
+        K1_s, C1_s = sub(self.K1), sub(self.C1)
+        K2_s, C2_s, C3_s = sub(self.K2), sub(self.C2), sub(self.C3)
+        MAXB_s = sub(self.MAXB)
         still: List[int] = []
         for ridx in self.queued:
             li = int(self.l_in[ridx])
             v = li + g * int(self.l_pred[ridx])
-            bpost = self.bsz + 1
-            okb = (bpost <= self.MAXB) & (
-                self.wctx + v <= theta * decode_budget_arrays(
-                    bpost, atgt, self.K2, self.C2, self.C3))
-            pre_t = self.K1 * (self.newsum + li) + self.C1
+            bpost = sub(self.bsz) + 1
+            okb = (bpost <= MAXB_s) & (
+                sub(self.wctx) + v <= theta * decode_budget_arrays(
+                    bpost, atgt, K2_s, C2_s, C3_s))
+            pre_t = K1_s * (sub(self.newsum) + li) + C1_s
             mask = okb & (pre_t <= ttft) & (pre_t <= d_budget)
             placed = False
             if mask.any():
-                for wi in best_fit_order(self.norm):
-                    wi = int(wi)
-                    if not mask[wi]:
+                for p in best_fit_order(sub(self.norm)):
+                    p = int(p)
+                    if not mask[p]:
                         continue
+                    wi = p if sel is None else int(sel[p])
                     if self._kv_peak_with(wi, ridx) \
                             <= theta * self.coef[wi][7]:
                         self._place(wi, ridx, v, li)
@@ -279,18 +405,28 @@ class _Engine:
                 still.append(ridx)
         self.queued[:] = still
 
-    def _place_all_jsq(self) -> None:
+    def _place_all_jsq(self, sel: Optional[np.ndarray] = None) -> None:
+        if sel is None:
+            def sub(a):
+                return a
+        else:
+            def sub(a):
+                return a[sel]
+        H_s, J_s, M_s = sub(self.H), sub(self.J), sub(self.M)
+        MAXB_s = sub(self.MAXB)
         still: List[int] = []
         for ridx in self.queued:
             li = int(self.l_in[ridx])
-            csum = self.ctx + self.newsum       # Σ context incl. new_batch
-            kv_now = (self.H * csum + self.J * self.bsz) \
-                + (self.H * li + self.J)
-            mask = (kv_now <= self.M) & (self.bsz + 1 <= self.MAXB)
-            order = jsq_order(self.bsz)
+            # Σ context incl. new_batch (newctx: re-entrants count l_out too)
+            csum = sub(self.ctx) + sub(self.newctx)
+            bsz_s = sub(self.bsz)
+            kv_now = (H_s * csum + J_s * bsz_s) + (H_s * li + J_s)
+            mask = (kv_now <= M_s) & (bsz_s + 1 <= MAXB_s)
+            order = jsq_order(bsz_s)
             hit = np.nonzero(mask[order])[0]
             if hit.size:
-                wi = int(order[hit[0]])
+                p = int(order[hit[0]])
+                wi = p if sel is None else int(sel[p])
                 self._place(wi, ridx, li + self.gamma * int(
                     self.l_pred[ridx]), li)
             else:
@@ -299,36 +435,39 @@ class _Engine:
 
     def _admit_naive_scalar(self, wi: int, li: int) -> bool:
         _, _, _, _, _, h, j, M, maxb = self.coef[wi]
-        csum = int(self.ctx[wi]) + int(self.newsum[wi])
+        csum = int(self.ctx[wi]) + int(self.newctx[wi])
         own = int(self.bsz[wi])
         kv_now = (h * csum + j * own) + (h * li + j)
         return kv_now <= M and own + 1 <= maxb
 
-    def _place_all_po2(self) -> None:
+    def _place_all_po2(self, sel: Optional[np.ndarray] = None) -> None:
         self._recompute_wctx()
-        W = self.W
         g = self.gamma
+        nlive = self.W if sel is None else int(sel.size)
         still: List[int] = []
         for ridx in self.queued:
             li = int(self.l_in[ridx])
             v = li + g * int(self.l_pred[ridx])
-            if W >= 2:
-                i, jj = self.rng.choice(W, size=2, replace=False)
+            wctx_live = self.wctx if sel is None else self.wctx[sel]
+            if nlive >= 2:
+                i, jj = self.rng.choice(nlive, size=2, replace=False)
                 cands = sorted((int(i), int(jj)),
-                               key=lambda w: self.wctx[w])
+                               key=lambda p: wctx_live[p])
             else:
-                cands = list(range(W))
+                cands = list(range(nlive))
             placed = False
-            for wi in cands:
+            for p in cands:
+                wi = p if sel is None else int(sel[p])
                 if self._admit_naive_scalar(wi, li):
                     self._place(wi, ridx, v, li)
                     placed = True
                     break
             if not placed:
-                for wi in np.argsort(self.wctx, kind="stable"):
-                    wi = int(wi)
-                    if wi in cands:
+                for p in np.argsort(wctx_live, kind="stable"):
+                    p = int(p)
+                    if p in cands:
                         continue
+                    wi = p if sel is None else int(sel[p])
                     if self._admit_naive_scalar(wi, li):
                         self._place(wi, ridx, v, li)
                         placed = True
@@ -348,12 +487,17 @@ class _Engine:
         tds = self.tds
         t_first = self.t_first
         t_fin = self.t_fin
+        t_pre = self.t_pre
         arrival = self.arrival
         t = float(self.t_w[wi])
         cnt = int(self.cnt[wi])
         ctx = int(self.ctx[wi])
         newb = self.newb[wi]
         pre = self.pre[wi]
+        # a lane that sat booting/idle clamps to the beat start before any
+        # pending work runs (the reference's advance_to t_start clamp)
+        if (newb or pre) and t < t_start:
+            t = t_start
         resume_thr = 0.9 * M
         while t < t_end:
             # resume preempted requests when KV frees up (recompute: prompt
@@ -381,14 +525,20 @@ class _Engine:
                 for r in resume:
                     tds[r] += dur
                 for r in newb:
-                    t_first[r] = t
-                    l_out[r] = 1
+                    if math.isnan(t_first[r]):
+                        t_first[r] = t
+                        l_out[r] = 1
+                    elif not math.isnan(t_pre[r]):
+                        # KV-loss re-entrant: the stall since the reclaim
+                        # instant lands on its ATGT clock
+                        tds[r] += max(t - float(t_pre[r]), 0.0)
+                    t_pre[r] = np.nan
                     if cnt == mem.shape[1]:
                         self._grow_mem()
                         mem = self.mem
                     mem[wi, cnt] = r
                     cnt += 1
-                    ctx += int(l_in[r]) + 1
+                    ctx += int(l_in[r]) + int(l_out[r])
                 for r in resume:
                     if cnt == mem.shape[1]:
                         self._grow_mem()
@@ -398,6 +548,7 @@ class _Engine:
                     ctx += int(l_in[r]) + int(l_out[r])
                 newb.clear()
                 self.newsum[wi] = 0
+                self.newctx[wi] = 0
                 continue
             if cnt == 0:
                 t = t_end
@@ -497,6 +648,159 @@ class _Engine:
                 and all(not nb for nb in self.newb)
                 and all(not p for p in self.pre))
 
+    # ---- pool adapters (plugged into the REAL ManagedPool/WorkerLifecycle
+    # state machines, which make every boot/drain/kill decision) -------------
+
+    def _new_lane(self, spec) -> _Lane:
+        self._wid += 1
+        return _Lane(self._wid, spec, self._alloc_lane(spec))
+
+    def _spawn_lane(self, lane: _Lane, t: float) -> None:
+        # the reference arms a fresh SimWorker at the boot instant
+        self.t_w[lane.idx] = t
+
+    def _kill_lane(self, lane: _Lane) -> List[int]:
+        """Strip and return the lane's in-flight requests (ongoing,
+        new_batch, KV-preempted — the reference's extraction order)."""
+        wi = lane.idx
+        cnt = int(self.cnt[wi])
+        lost = [int(r) for r in self.mem[wi, :cnt]] \
+            + list(self.newb[wi]) + list(self.pre[wi])
+        self.cnt[wi] = 0
+        self.bsz[wi] = 0
+        self.ctx[wi] = 0
+        self.newsum[wi] = 0
+        self.newctx[wi] = 0
+        self.wctx[wi] = 0.0
+        self.newb[wi] = []
+        self.pre[wi] = []
+        self.dirty[wi] = True
+        return lost
+
+    def _mark_rid(self, rid: int, t: float) -> None:
+        # mark_kv_loss over array state: the stall clock arms at the
+        # reclaim instant; settled when the re-prefill completes
+        self.t_pre[rid] = t
+        self.preempt_n[rid] += 1
+
+    def _lane_load(self, lane: _Lane) -> int:
+        return int(self.bsz[lane.idx])
+
+    def _lane_idle(self, lane: _Lane) -> bool:
+        wi = lane.idx
+        return (int(self.cnt[wi]) == 0 and not self.newb[wi]
+                and not self.pre[wi])
+
+    # ---- the ColocatedTopology shim the pools call back into ---------------
+
+    def requeue(self, rids: Sequence[int], side: str = "serve") -> None:
+        self.queued.extend(rids)
+
+    def backlog_len(self, side: str = "serve") -> int:
+        return len(self.queued)
+
+    def slo_window(self, side: str, t_now: float, window: float,
+                   metric: str = "both") -> tuple:
+        """``core.slo.windowed_attainment`` over array state: (ok, total)
+        among requests finished in ``[t_now - window, t_now]``, plus
+        assured-miss pending requests whose TTFT budget already expired."""
+        t0 = t_now - window
+        inw = ~np.isnan(self.t_fin) & (self.t_fin >= t0)
+        ids = np.nonzero(inw)[0]
+        total = int(ids.size)
+        ok = 0
+        if total:
+            ttft_ok = (self.t_first[ids] - self.arrival[ids]) \
+                <= self.slo.ttft
+            has_dec = self.l_real[ids] > 1
+            atgt_ok = np.ones(total, dtype=bool)
+            d = ids[has_dec]
+            atgt_ok[has_dec] = (self.tds[d] / (self.l_real[d] - 1)) \
+                <= self.slo.atgt
+            if metric == "both":
+                okm = ttft_ok & atgt_ok
+            elif metric == "ttft":
+                okm = ttft_ok
+            elif metric == "atgt":
+                okm = atgt_ok
+            else:
+                raise ValueError(f"unknown SLO metric {metric!r}")
+            ok = int(okm.sum())
+        if metric != "atgt":
+            for rid in self.queued:
+                if math.isnan(self.t_first[rid]) \
+                        and t_now - float(self.arrival[rid]) > self.slo.ttft:
+                    total += 1
+        return ok, total
+
+    # ---- the pooled heartbeat loop (policy-scaled / fixed+market) ----------
+
+    def _step_pooled(self, t: float, t_next: float) -> None:
+        pool = self.pool
+        pool.begin_beat(self, t)
+        if self.queued:
+            sel = np.asarray([ln.idx for ln in pool.serving()
+                              if ln.alive and not ln.draining],
+                             dtype=np.int64)
+            if sel.size:
+                if self.policy == "aladdin":
+                    self._place_all_aladdin(sel)
+                elif self.policy == "jsq":
+                    self._place_all_jsq(sel)
+                else:
+                    self._place_all_po2(sel)
+        t_w = self.t_w
+        cnt = self.cnt
+        for ln in pool.active():
+            wi = ln.idx
+            if cnt[wi] == 0 and not self.newb[wi] and not self.pre[wi]:
+                if t_w[wi] < t_next:
+                    t_w[wi] = t_next
+                self.dirty[wi] = True
+            else:
+                self._advance(wi, t, t_next)
+        pool.end_beat(self, t, t_next)
+
+    def _drained_pooled(self) -> bool:
+        if self.queued:
+            return False
+        for ln in self.pool.active():
+            wi = ln.idx
+            if int(self.cnt[wi]) or self.newb[wi]:
+                return False
+        return all(not p for p in self.pre)
+
+    def run_pooled(self, events: Sequence) -> None:
+        """Heartbeat loop with the engine playing ``ColocatedTopology``
+        against ``self.pool`` (the real ManagedPool, or ``_FixedLanes`` for
+        a market over a fixed fleet). Reclaim events consume ``self.rng``
+        before placement draws, exactly like the reference's fire/step
+        ordering."""
+        pool = self.pool
+        n = self.n
+        horizon = (float(self.arrival[n - 1]) if n else 0.0) + self.tail
+        hb = self.hb
+        arr = self.arrival
+        nev = len(events)
+        t = 0.0
+        idx = 0
+        eidx = 0
+        queued = self.queued
+        while t < horizon:
+            t_next = t + hb
+            while idx < n and arr[idx] <= t:
+                queued.append(idx)
+                pool.note_arrival()
+                idx += 1
+            while eidx < nev and events[eidx].t <= t:
+                self.requeue(pool.on_reclaim(t, events[eidx]))
+                eidx += 1
+            self._step_pooled(t, t_next)
+            self.beats += 1
+            t = t_next
+            if idx >= n and self._drained_pooled():
+                break
+
     def run(self) -> None:
         n = self.n
         horizon = (float(self.arrival[n - 1]) if n else 0.0) + self.tail
@@ -530,11 +834,69 @@ class _Engine:
             r.t_decode_spent = float(self.tds[pos])
             tf = self.t_first[pos]
             r.t_first_token = None if math.isnan(tf) else float(tf)
+            tp = self.t_pre[pos]
+            r.t_preempted = None if math.isnan(tp) else float(tp)
+            pn = int(self.preempt_n[pos])
+            if pn:
+                r.preempt_count += pn
             te = self.t_fin[pos]
             if not math.isnan(te):
                 r.t_finish = float(te)
                 r.state = ReqState.FINISHED
         return [self.trace[i] for i in self.fin_order]
+
+
+class _FixedLanes:
+    """``simulator.FixedPool`` twin over engine lanes: a static fleet a spot
+    market may reclaim workers out of (they are not replaced). All condemn/
+    kill/reap decisions run through the shared ``WorkerLifecycle``."""
+
+    def __init__(self, eng: _Engine, lanes: List[_Lane], rng,
+                 notice_s: float):
+        self.workers = lanes
+        self.retired_cost = 0.0
+        self.life = WorkerLifecycle(
+            rng, notice_s=notice_s, extract=eng._kill_lane,
+            mark=eng._mark_rid, idle=eng._lane_idle, remove=self._remove,
+            on_condemn=lambda ln: setattr(ln, "draining", True))
+
+    def _remove(self, lane: _Lane) -> None:
+        self.workers.remove(lane)
+        self.retired_cost += lane.spec.n_accelerators
+
+    @property
+    def killed(self) -> int:
+        return self.life.killed
+
+    @property
+    def drained_ok(self) -> int:
+        return self.life.drained_ok
+
+    @property
+    def requeued(self) -> int:
+        return self.life.requeued
+
+    def note_arrival(self) -> None:
+        pass
+
+    def serving(self) -> List[_Lane]:
+        return self.workers
+
+    def active(self) -> List[_Lane]:
+        return self.workers
+
+    def begin_beat(self, topo, t: float) -> None:
+        if self.life.condemned:
+            topo.requeue(self.life.reap(t, self._lookup))
+
+    def end_beat(self, topo, t: float, t_next: float) -> None:
+        pass
+
+    def _lookup(self, wid: int) -> Optional[_Lane]:
+        return next((x for x in self.workers if x.id == wid), None)
+
+    def on_reclaim(self, t: float, ev) -> List[int]:
+        return self.life.reclaim(t, ev, self.life.eligible(self.workers))
 
 
 def run_colocated_vectorized(scenario, seed: Optional[int] = None,
@@ -543,19 +905,75 @@ def run_colocated_vectorized(scenario, seed: Optional[int] = None,
     return the same :class:`~repro.serving.api.RunReport` the reference
     engine would produce (bit-for-bit on the supported envelope)."""
     from repro.serving import api
+    from repro.serving.forecast import ManagedPool
 
     specs = check_colocated_envelope(scenario)
     s = seed if seed is not None else scenario.seed
     trace = scenario.materialize()
-    eng = _Engine(specs, trace, scenario.topology, scenario.slo, s,
-                  tail=tail)
-    eng.run()
-    finished = eng.writeback()
-    rep = api.RunReport(topology="colocated", scaling="fixed",
-                        **api._percentiles(finished, len(trace),
-                                           scenario.slo))
-    rep.peak_workers = eng.W
-    rep.gpu_cost = sum(sp.n_accelerators for sp in specs)
+    market = scenario.market
+    notice = market.notice_s if market is not None else 0.0
+    events = sorted(market.events, key=lambda e: e.t) \
+        if market is not None and market.events else []
+    managed = not isinstance(scenario.scaling, api.FixedScale)
+    if managed:
+        # lanes are booted by the pool itself (the ctor spawns the t=0
+        # fleet through the engine's new_worker adapter)
+        eng = _Engine([], trace, scenario.topology, scenario.slo, s,
+                      tail=tail)
+        scfg = _managed_scfg(scenario)
+        policy = _managed_policy(scenario, scfg)
+        pool = ManagedPool(
+            scenario.fleet.for_role("serve")[0].spec, scfg, policy,
+            eng.hb, eng.rng, new_worker=eng._new_lane,
+            on_spawn=eng._spawn_lane, on_kill=eng._kill_lane,
+            load=eng._lane_load, idle=eng._lane_idle, mark=eng._mark_rid,
+            spot_spec=market.spec if market is not None else None,
+            notice_s=notice, name="serve")
+        eng.pool = pool
+        eng.run_pooled(events)
+        finished = eng.writeback()
+        rep = api.RunReport(
+            topology="colocated",
+            scaling=getattr(policy, "name", type(policy).__name__),
+            **api._percentiles(finished, len(trace), scenario.slo))
+        rep.peak_workers = pool.peak
+        rep.gpu_seconds = pool.gpu_s
+        rep.gpu_cost = pool.gpu_s
+        rep.spot_gpu_seconds = pool.spot_gpu_s
+        rep.epochs = {"serve": pool.epochs}
+    elif market is not None:
+        eng = _Engine(specs, trace, scenario.topology, scenario.slo, s,
+                      tail=tail)
+        lanes = []
+        for wi, sp in enumerate(specs):
+            eng._wid += 1
+            lanes.append(_Lane(eng._wid, sp, wi))
+        pool = _FixedLanes(eng, lanes, eng.rng, notice)
+        eng.pool = pool
+        eng.run_pooled(events)
+        finished = eng.writeback()
+        rep = api.RunReport(topology="colocated", scaling="fixed",
+                            **api._percentiles(finished, len(trace),
+                                               scenario.slo))
+        rep.peak_workers = eng.peak_lanes
+        # every worker that served counts, including reclaimed ones
+        rep.gpu_cost = sum(ln.spec.n_accelerators
+                           for ln in pool.workers) + pool.retired_cost
+    else:
+        eng = _Engine(specs, trace, scenario.topology, scenario.slo, s,
+                      tail=tail)
+        pool = None
+        eng.run()
+        finished = eng.writeback()
+        rep = api.RunReport(topology="colocated", scaling="fixed",
+                            **api._percentiles(finished, len(trace),
+                                               scenario.slo))
+        rep.peak_workers = eng.W
+        rep.gpu_cost = sum(sp.n_accelerators for sp in specs)
+    if pool is not None:
+        rep.preempted_workers = pool.killed
+        rep.drained_ok = pool.drained_ok
+        rep.requeued = pool.requeued
     rep.moves = 0
     rep.beats = eng.beats       # benchmark side channel (not in row())
     return rep

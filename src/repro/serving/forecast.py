@@ -498,6 +498,38 @@ class ManagedPool:
             n_queued = topo.backlog_len(self.name)
             self._scale_epoch(topo, t_next, busy, n_queued)
 
+    def absorb_chunk(self, topo, t_next: float, dts: Sequence[float],
+                     retiring: dict, busy_final: int, busy_peak: int,
+                     arrivals: int, n_queued: int) -> None:
+        """Replay ``len(dts)`` beats of ``end_beat`` bookkeeping at once —
+        the settlement half of the compiled (jax) engine's chunked
+        execution. The kernel advanced the lanes; this replays the exact
+        per-beat billing order (retire drained workers *before* billing the
+        beat, each beat's ``dt`` accumulated left-to-right) so
+        ``gpu_seconds`` matches stepwise execution bit-for-bit.
+
+        ``retiring`` maps chunk-local beat index -> draining workers that
+        first emptied on that beat (in draining-list order); ``busy_peak``
+        / ``busy_final`` are the kernel's loaded-online-lane stats;
+        ``arrivals`` counts kernel-admitted requests. Chunks are cut at
+        epoch boundaries, so at most the final beat fires ``_scale_epoch``
+        — with exactly the state stepwise execution would have seen."""
+        self.acc["arrivals"] += arrivals
+        for j, dt in enumerate(dts):
+            for w in retiring.get(j, ()):
+                self.life.retire_if_idle(w)
+            billed = [w.spec for w in self.online] \
+                + [w.spec for w in self.draining] \
+                + [b[1].spec for b in self.booting]
+            self.acc["gpu_s"] += sum(s.gpu_cost for s in billed) * dt
+            self.acc["spot_gpu_s"] += sum(s.gpu_cost for s in billed
+                                          if s.is_spot) * dt
+        self.acc["busy_peak"] = max(self.acc["busy_peak"], busy_peak)
+        self.acc["peak"] = max(self.acc["peak"], len(self.online))
+        self.acc["beat"] += len(dts)
+        if self.acc["beat"] % self.beats_per_epoch == 0:
+            self._scale_epoch(topo, t_next, busy_final, n_queued)
+
     def _scale_epoch(self, topo, t_next: float, busy: int,
                      n_queued: int) -> None:
         scfg = self.scfg

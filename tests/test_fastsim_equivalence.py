@@ -8,9 +8,17 @@ tests pin **bit-for-bit** equality — identical per-request
 including preemption/resume churn and heterogeneous fleets (the same idiom
 ``test_shim_goldens.py`` uses to pin the legacy shims).
 
+The vectorized grid also covers the pooled envelope: policy-scaled fleets
+(``Reactive``/``Forecast``/``FeedbackScale``), spot markets with and
+without reclaim notice, and KV-pressure churn colliding with scale-downs —
+all still bit-for-bit against the reference.
+
 The jax engine (``serving.fastsim_jax``) compiles the same semantics; its
 grid runs under ``importorskip`` and allows last-ulp drift (XLA may fuse
-multiply-add chains), with integer outputs still exact.
+multiply-add chains), with integer outputs still exact. po2 on jax draws
+its two candidates from the jax PRNG rather than the reference's numpy
+Generator, so those cells pin determinism (same seed -> same rows) and
+coarse agreement instead of equality.
 """
 import dataclasses
 
@@ -21,10 +29,10 @@ from repro.core.perf_model import (DecodeModel, KVModel, PerfModel,
                                    PrefillModel)
 from repro.core.request import Request
 from repro.core.slo import SLO
-from repro.core.worker_config import WorkerSpec
+from repro.core.worker_config import WorkerSpec, spot_variant
 from repro.serving import api
 from repro.serving.workload import (WorkloadConfig, clone_trace,
-                                    generate_trace)
+                                    generate_trace, preemption_trace)
 
 SLO_GRID = SLO(ttft=2.0, atgt=0.2)
 
@@ -183,8 +191,14 @@ def test_envelope_rejects_unsupported_features():
     with pytest.raises(ValueError, match="split_phase"):
         api.run(dataclasses.replace(
             base, topology=api.Colocated(split_phase=True)))
-    with pytest.raises(ValueError, match="FixedScale"):
-        api.run(dataclasses.replace(base, scaling=api.Reactive()))
+    with pytest.raises(ValueError, match="predictor"):
+        api.run(dataclasses.replace(base, predictor=object()))
+    with pytest.raises(ValueError, match="observer"):
+        api.run(dataclasses.replace(base, observer=object()))
+    with pytest.raises(ValueError, match="prefill_spec"):
+        api.run(dataclasses.replace(
+            base, market=api.SpotMarket(_spec("loose"), [],
+                                        prefill_spec=_spec("loose"))))
     with pytest.raises(ValueError, match="elastic"):
         api.run(dataclasses.replace(
             base, fleet=api.FleetSpec([api.PoolSpec(_spec("loose"), 0)])))
@@ -194,11 +208,92 @@ def test_envelope_rejects_unsupported_features():
         api.run(dataclasses.replace(base, engine="warp"))
 
 
+# ---- the pooled envelope: policy-scaled fleets, markets, KV collisions -------
+
+
+SCALINGS = {
+    "reactive": lambda: api.Reactive(interval=5.0, min_workers=2),
+    "forecast": lambda: api.Forecast(period=30.0, min_workers=2),
+    "feedback": lambda: api.FeedbackScale(
+        base=api.Forecast(period=30.0, min_workers=2),
+        min_gain=0.85, max_gain=1.3, boost=1.2, decay=0.02, window=20.0),
+}
+
+
+def _pooled_trace(seed=21, rate=3.0):
+    return generate_trace(WorkloadConfig(
+        mean_rate=rate, duration=30.0, seed=seed, tail_frac=0.3,
+        in_mu=4.6, out_mu=4.4, out_sigma=1.0))
+
+
+def _mk_pooled(trace, scaling, engine, *, policy="aladdin", market=None,
+               spec=None, n=3, seed=0):
+    sp = spec if spec is not None else _spec("tight")
+    return api.Scenario(
+        workload=trace, fleet=api.FleetSpec([api.PoolSpec(sp, n)]),
+        slo=SLO_GRID, topology=api.Colocated(policy=policy),
+        scaling=scaling, market=market, seed=seed, engine=engine)
+
+
+@pytest.mark.parametrize("scaling", sorted(SCALINGS))
+def test_policy_scaled_fleet_matches_reference(scaling):
+    trace = _pooled_trace()
+    ref_t, vec_t = clone_trace(trace), clone_trace(trace)
+    ref = api.run(_mk_pooled(ref_t, SCALINGS[scaling](), "reference"))
+    vec = api.run(_mk_pooled(vec_t, SCALINGS[scaling](), "vectorized"))
+    assert ref.finished > 0
+    assert ref.epochs and ref.epochs.get("serve")
+    _assert_bitwise(ref, vec, ref_t, vec_t)
+
+
+def test_spot_market_reclaims_match_reference():
+    trace = _pooled_trace(seed=5)
+    events = preemption_trace(30.0, event_rate=1.0 / 8.0, frac=0.5, seed=13)
+    sspec = spot_variant(_spec("tight"), price=0.35,
+                         preempt_hazard=1.0 / 60.0)
+    churn = 0
+    for scaling, notice in ((api.FixedScale(), 0.0),
+                            (api.FixedScale(), 4.0),
+                            (api.Reactive(interval=5.0, min_workers=2),
+                             0.0)):
+        market = api.SpotMarket(sspec, events, notice_s=notice)
+        ref_t, vec_t = clone_trace(trace), clone_trace(trace)
+        ref = api.run(_mk_pooled(ref_t, scaling, "reference",
+                                 market=market, spec=sspec))
+        vec = api.run(_mk_pooled(vec_t, scaling, "vectorized",
+                                 market=market, spec=sspec))
+        churn += ref.preempted_workers + ref.drained_ok
+        _assert_bitwise(ref, vec, ref_t, vec_t)
+    assert churn > 0        # the reclaim machinery actually fired
+
+
+def test_kv_pressure_scale_down_collision():
+    # the chaos cell: a KV-crushed spec preempts rows mid-decode on the
+    # same beats Reactive scale-downs drain lanes and market events
+    # reclaim them — placement, lifecycle and KV paging interleave
+    trace = _pooled_trace(seed=9, rate=5.0)
+    events = preemption_trace(30.0, event_rate=1.0 / 6.0, frac=0.4,
+                              seed=2)
+    sspec = spot_variant(_spec("crush"), price=0.35,
+                         preempt_hazard=1.0 / 60.0)
+    scaling = api.Reactive(interval=4.0, min_workers=1, max_workers=5)
+    market = api.SpotMarket(sspec, events)
+    ref_t, vec_t = clone_trace(trace), clone_trace(trace)
+    ref = api.run(_mk_pooled(ref_t, scaling, "reference", market=market,
+                             spec=sspec))
+    vec = api.run(_mk_pooled(vec_t, scaling, "vectorized", market=market,
+                             spec=sspec))
+    assert ref.preempted_workers > 0        # market churn fired
+    assert any(r.t_first_token is not None and r.t_first_token
+               - r.arrival > SLO_GRID.ttft for r in ref_t)   # KV backlog
+    _assert_bitwise(ref, vec, ref_t, vec_t)
+
+
 # ---- the compiled engine (importorskip: CI images without jax skip) ----------
 
 
 def _jax_spec() -> WorkerSpec:
-    # the jax core requires inert KV (h == j == 0): the bench specs' regime
+    # inert KV (h == j == 0): the legacy whole-trace kernel's fast path
     perf = PerfModel(kv=KVModel(h=0.0, j=0.0),
                      prefill=PrefillModel(k1=2.2e-5, c1=8e-3),
                      decode=DecodeModel(k2=6e-6, c2=3.5e-4, c3=9e-3))
@@ -267,3 +362,109 @@ def test_jax_candidate_batch_matches_singles():
         assert rep.finished == single.finished
         assert rep.attainment == pytest.approx(single.attainment)
         assert rep.p99_atgt == pytest.approx(single.p99_atgt, rel=1e-9)
+
+
+def _assert_close_report(ref, jx, rel=1e-9):
+    ra, ja = ref.row(), jx.row()
+    for k in ra:
+        if isinstance(ra[k], float):
+            if np.isnan(ra[k]):
+                assert np.isnan(ja[k]), k
+            else:
+                assert ja[k] == pytest.approx(ra[k], rel=rel, abs=1e-12), k
+        else:
+            assert ra[k] == ja[k], k
+
+
+@pytest.mark.parametrize("scaling", sorted(SCALINGS))
+def test_jax_policy_scaled_fleet(scaling):
+    # the chunked kernel + host pool driver against the reference: lane
+    # activation masks, epoch replay, KV paging — tolerance-pinned (XLA
+    # may contract multiply-adds), integer counters exact
+    pytest.importorskip("jax")
+    trace = _pooled_trace()
+    ref_t, jx_t = clone_trace(trace), clone_trace(trace)
+    ref = api.run(_mk_pooled(ref_t, SCALINGS[scaling](), "reference"))
+    jx = api.run(_mk_pooled(jx_t, SCALINGS[scaling](), "jax"))
+    _assert_close_report(ref, jx)
+    key = lambda r: r.arrival
+    for a, b in zip(sorted(ref_t, key=key), sorted(jx_t, key=key)):
+        assert a.l_out == b.l_out
+        assert (a.t_finish is None) == (b.t_finish is None)
+        if a.t_finish is not None:
+            assert b.t_finish == pytest.approx(a.t_finish, rel=1e-9)
+
+
+def test_jax_spot_and_kv_collision():
+    # fixed spot fleet with reclaim notice, then the chaos cell (KV
+    # pressure + scale-down + reclaim on shared beats) on the compiled core
+    pytest.importorskip("jax")
+    trace = _pooled_trace(seed=5)
+    events = preemption_trace(30.0, event_rate=1.0 / 8.0, frac=0.5, seed=13)
+    sspec = spot_variant(_spec("tight"), price=0.35,
+                         preempt_hazard=1.0 / 60.0)
+    market = api.SpotMarket(sspec, events, notice_s=4.0)
+    ref_t, jx_t = clone_trace(trace), clone_trace(trace)
+    ref = api.run(_mk_pooled(ref_t, api.FixedScale(), "reference",
+                             market=market, spec=sspec))
+    jx = api.run(_mk_pooled(jx_t, api.FixedScale(), "jax",
+                            market=market, spec=sspec))
+    _assert_close_report(ref, jx)
+
+    chaos = _pooled_trace(seed=9, rate=5.0)
+    cspec = spot_variant(_spec("crush"), price=0.35,
+                         preempt_hazard=1.0 / 60.0)
+    scaling = api.Reactive(interval=4.0, min_workers=1, max_workers=5)
+    cmarket = api.SpotMarket(cspec, preemption_trace(
+        30.0, event_rate=1.0 / 6.0, frac=0.4, seed=2))
+    ref_t, jx_t = clone_trace(chaos), clone_trace(chaos)
+    ref = api.run(_mk_pooled(ref_t, scaling, "reference", market=cmarket,
+                             spec=cspec))
+    jx = api.run(_mk_pooled(jx_t, scaling, "jax", market=cmarket,
+                            spec=cspec))
+    assert ref.preempted_workers > 0
+    _assert_close_report(ref, jx)
+
+
+def test_jax_po2_pooled_deterministic():
+    # po2 on jax draws from its own PRNG: pinned as seed-deterministic
+    # (identical rows across runs) plus coarse agreement with the reference
+    pytest.importorskip("jax")
+    trace = _pooled_trace()
+    rows, finishes = [], []
+    for _ in range(2):
+        t = clone_trace(trace)
+        rep = api.run(_mk_pooled(
+            t, api.Reactive(interval=5.0, min_workers=2), "jax",
+            policy="po2"))
+        rows.append(rep.row())
+        finishes.append([(r.l_out, r.t_first_token, r.t_finish)
+                         for r in t])
+    assert rows[0] == rows[1]
+    assert finishes[0] == finishes[1]
+    ref = api.run(_mk_pooled(clone_trace(trace),
+                             api.Reactive(interval=5.0, min_workers=2),
+                             "reference", policy="po2"))
+    assert rows[0]["attainment"] == pytest.approx(ref.attainment, abs=0.15)
+
+
+def test_jax_policy_candidate_batch_matches_singles():
+    # the lockstep-batched theta bracket returns exactly what per-candidate
+    # chunked runs return (one vmapped call per round)
+    pytest.importorskip("jax")
+    from repro.serving import fastsim_jax
+
+    trace = _pooled_trace()
+
+    def mk(theta):
+        sc = _mk_pooled(clone_trace(trace),
+                        api.Reactive(interval=5.0, min_workers=2), "jax")
+        return dataclasses.replace(
+            sc, topology=dataclasses.replace(sc.topology, theta=theta))
+
+    thetas = (0.7, 0.85, 1.0)
+    batch = fastsim_jax.run_policy_candidate_batch(
+        [mk(th) for th in thetas])
+    for th, rep in zip(thetas, batch):
+        single = fastsim_jax.run_colocated_jax(mk(th))
+        assert rep.row() == single.row()
