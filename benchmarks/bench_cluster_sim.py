@@ -31,13 +31,13 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core.perf_model import PerfModel
 from repro.core.scaling import SpotMixConfig
-from repro.core.slo import PAPER_SLOS
+from repro.core.slo import PAPER_SLOS, SLO
 from repro.core.worker_config import (A100_80G, V100_32G, make_worker_spec,
                                       optimal_worker_config, spot_variant)
 from repro.serving.api import (Colocated, Disaggregated, FeedbackScale,
                                FixedScale, FleetSpec, Forecast, PolicyScale,
-                               PoolSpec, RunReport, Scenario, optimize,
-                               run as run_scenario)
+                               PoolSpec, RunReport, Scenario, TenantSpec,
+                               optimize, run as run_scenario)
 from repro.serving.disagg import DisaggConfig, min_cost_disagg
 from repro.serving.forecast import (ForecastConfig, ForecastPolicy,
                                     ReactivePolicy, ScaleSimConfig,
@@ -790,10 +790,119 @@ def run_disagg_spot(verbose: bool = True, duration: float = 600.0,
                        extra=f"decode_events={len(ev_d)}")
 
 
+def run_tenants(verbose: bool = True, duration: float = 120.0,
+                period: float = 60.0, amplitude: float = 0.5,
+                rates=(4.0, 3.0, 4.0), seed: int = 29,
+                hi: int = 12) -> List[Dict]:
+    """Multi-tenant joint placement vs per-tenant dedicated fleets.
+
+    Three tenant classes share one diurnal day — an interactive 8B LoRA
+    chat tenant (tight TTFT, adapter multiplexed on the shared base
+    workers), an interactive 70B assistant, and a loose batch eval tier —
+    and the question is Aladdin's: how many workers, and who shares a
+    pool.  ``optimize`` on the joint scenario searches the
+    shared-vs-dedicated partition lattice subject to EVERY class hitting
+    the attainment target; the baseline gives each tenant its own
+    independently right-sized fleet.  The headline ``tenants_saving`` row
+    records how much cheaper the joint placement is at equal per-class
+    attainment, plus the per-tenant rows of the winning plan."""
+    arch = get_arch(MODEL)
+    slo = PAPER_SLOS[MODEL]
+    spec = dataclasses.replace(
+        make_worker_spec(arch, A100_80G, slo, mean_context=450.0),
+        lora_slots=8, lora_overhead=64.0, lora_swap_s=0.02)
+
+    def wl(rate, s):
+        cfg = WorkloadConfig(mean_rate=rate, duration=duration, seed=s,
+                             in_mu=5.0, in_sigma=1.1, out_mu=5.3,
+                             out_sigma=0.9)
+        return lambda: diurnal_trace(cfg, amplitude=amplitude,
+                                     period=period)
+
+    tenants = [
+        TenantSpec(name="chat_8b_lora", workload=wl(rates[0], seed),
+                   # TTFT floor: a 2048-token prompt prefills in ~0.92 s
+                   # on this worker; tighter budgets make the tail
+                   # unplaceable (constraint (c)) at ANY fleet size
+                   slo=SLO(ttft=1.1, atgt=slo.atgt), priority=1,
+                   model="llama2-7b", lora="chat-v2", tier="interactive"),
+        TenantSpec(name="assist_70b", workload=wl(rates[1], seed + 1),
+                   slo=slo, priority=1, model=MODEL, tier="interactive"),
+        TenantSpec(name="eval_batch", workload=wl(rates[2], seed + 2),
+                   slo=SLO(ttft=4.0 * slo.ttft, atgt=2.0 * slo.atgt),
+                   priority=0, model=MODEL, tier="batch"),
+    ]
+
+    def mk(tens, engine="vectorized"):
+        return Scenario(fleet=FleetSpec([PoolSpec(spec, 1)]),
+                        tenants=tens,
+                        topology=Colocated(policy="aladdin"),
+                        scaling=FixedScale(), engine=engine)
+
+    joint = optimize(mk(tenants), attain_target=ATTAIN, lo=1, hi=hi)
+    assert joint.feasible, "joint multi-tenant plan infeasible"
+    dedicated = {}
+    for t in tenants:
+        # LoRA residency modeling is reference-engine only, and a lone
+        # tenant routes through the scalar optimizer (no engine override)
+        eng = "reference" if t.lora is not None else "vectorized"
+        dedicated[t.name] = optimize(mk([t], eng), attain_target=ATTAIN,
+                                     lo=1, hi=hi)
+        assert dedicated[t.name].feasible, f"dedicated {t.name} infeasible"
+    ded_cost = sum(p.cost for p in dedicated.values())
+    saving = 1.0 - joint.cost / ded_cost if ded_cost else 0.0
+
+    rows: List[Dict] = []
+    for t in tenants:
+        p = dedicated[t.name]
+        rows.append({
+            "name": f"tenants_dedicated_{t.name}", "us_per_call": 0.0,
+            "scenario": "tenants", "policy": "dedicated",
+            "gpu_cost": p.cost, "attainment": p.report.attainment,
+            "derived": (f"n_workers={p.n_workers};evals={p.evals};"
+                        f"attain={p.report.attainment:.4f}")})
+    part = ";".join("+".join(g) for g in joint.params["pools"])
+    rows.append({
+        "name": "tenants_joint", "us_per_call": 0.0,
+        "scenario": "tenants", "policy": "joint",
+        "gpu_cost": joint.cost, "attainment": joint.report.attainment,
+        "derived": (f"n_workers={joint.n_workers};evals={joint.evals};"
+                    f"pools={part};"
+                    f"lora_swaps={joint.report.lora_swaps};"
+                    f"attain={joint.report.attainment:.4f}")})
+    for trow in joint.report.tenant_rows:
+        rows.append({
+            "name": f"tenants_tenant_{trow['tenant']}", "us_per_call": 0.0,
+            "scenario": "tenants", "policy": "joint",
+            "gpu_cost": trow["gpu_cost"],
+            "attainment": trow["attainment"],
+            "derived": (f"tier={trow['tier']};prio={trow['priority']};"
+                        f"lora={trow['lora'] or '-'};"
+                        f"p99_ttft={trow['p99_ttft']:.3f};"
+                        f"p99_atgt={trow['p99_atgt']:.4f};"
+                        f"queue_delay={trow['mean_queue_delay']:.3f};"
+                        f"finished={trow['finished']}/{trow['total']};"
+                        f"cost_share={trow['gpu_cost_share']:.3f}")})
+    rows.append({
+        "name": "tenants_saving", "us_per_call": 0.0,
+        "scenario": "tenants", "gpu_cost": joint.cost,
+        "attainment": joint.report.attainment,
+        "derived": (f"save_vs_dedicated={saving:.3f};"
+                    f"dedicated_cost={ded_cost:.0f};"
+                    f"joint_cost={joint.cost:.0f};"
+                    f"attain_target={ATTAIN}")})
+    if verbose:
+        for row in rows:
+            print(f"{row['name']},{row['gpu_cost']},{row['derived']}")
+    _write_bench("tenants", rows)
+    return rows
+
+
 SCENARIOS = {"fig": run, "hetero": run_hetero, "disagg": run_disagg,
              "hot_loop": run_hot_loop, "scale": run_scale,
              "burst": run_burst, "forecast": run_forecast, "spot": run_spot,
-             "disagg_spot": run_disagg_spot, "feedback": run_feedback}
+             "disagg_spot": run_disagg_spot, "feedback": run_feedback,
+             "tenants": run_tenants}
 
 # shrunken per-scenario parameters for the CI canary (--smoke)
 SMOKE_PARAMS = {
@@ -813,6 +922,8 @@ SMOKE_PARAMS = {
     "feedback": dict(duration=300.0, period=75.0, rate=4.0,
                      engine_repeats=1, engine_rate=24.0,
                      engine_duration=60.0),
+    "tenants": dict(duration=40.0, period=20.0, rates=(3.0, 2.0, 1.5),
+                    hi=6),
 }
 
 

@@ -25,7 +25,11 @@ CLOCK_ARRAYS = {"t_first", "t_fin", "tds", "t_w"}
 
 # path suffix -> qualnames blessed to stamp clocks there
 BLESSED = {
-    "serving/simulator.py": {"SimWorker.advance_to"},
+    "serving/simulator.py": {"SimWorker.advance_to",
+                             # LoRA adapter fault-in: the swap stall
+                             # charges ongoing members' ATGT clocks a
+                             # non-negative delay (reference engine only)
+                             "ColocatedTopology._lora_admit"},
     "serving/fastsim.py": {"_Engine._advance", "_Engine._step",
                            "_Engine.writeback",
                            # pooled/scaled lanes: boot resets and the

@@ -24,8 +24,12 @@ VALIDATOR_RE = re.compile(r"^check_\w+_envelope$")
 # the dataclasses whose every field must be validator-inspected: the
 # Scenario root plus the topology/scaling classes the compiled cores
 # accept (other topologies are rejected wholesale by isinstance checks,
-# so their fields never reach a compiled core)
-ENFORCED = ("Scenario", "Colocated", "FixedScale")
+# so their fields never reach a compiled core), and the multi-tenant
+# TenantSpec (serving/tenants.py) whose per-class knobs feed the merged
+# trace the compiled cores replay
+ENFORCED = ("Scenario", "Colocated", "FixedScale", "TenantSpec")
+# the modules whose ENFORCED dataclass definitions are scanned
+ENFORCED_MODULES = ("serving/api.py", "serving/tenants.py")
 
 
 def _validator_reads(project: Project) -> Set[str]:
@@ -45,9 +49,9 @@ class EnvelopeCoverage(Checker):
     name = "envelope-coverage"
 
     def check_project(self, project: Project) -> List[Diagnostic]:
-        api = next((f for f in project.files
-                    if f.rel.endswith("serving/api.py")), None)
-        if api is None:
+        mods = [f for f in project.files
+                if any(f.rel.endswith(m) for m in ENFORCED_MODULES)]
+        if not any(m.rel.endswith("serving/api.py") for m in mods):
             return []
         reads = _validator_reads(project)
         if not reads:
@@ -55,11 +59,12 @@ class EnvelopeCoverage(Checker):
             # (the run() plumbing is gone), not per-field coverage
             return []
         diags: List[Diagnostic] = []
-        for cls in api.tree.body:
-            if not isinstance(cls, ast.ClassDef) or \
-                    cls.name not in ENFORCED:
-                continue
-            diags.extend(self._check_class(api, cls, reads))
+        for mod in mods:
+            for cls in mod.tree.body:
+                if not isinstance(cls, ast.ClassDef) or \
+                        cls.name not in ENFORCED:
+                    continue
+                diags.extend(self._check_class(mod, cls, reads))
         return diags
 
     def _check_class(self, api: SourceFile, cls: ast.ClassDef,

@@ -98,11 +98,34 @@ class WorkerState:
         return math.hypot(b, c)
 
     # ---- constraints ---------------------------------------------------------
+    #
+    # Multi-tenant traces stamp per-request SLO budgets (Request.slo_ttft /
+    # slo_atgt); constraints (b)-(d) then budget each decision against the
+    # strictest budget among the requests it actually affects. Untagged
+    # requests carry ``inf`` budgets and every path below short-circuits to
+    # the scalar ``self.slo`` arithmetic — the legacy float image is
+    # untouched (and for a single tenant the tagged budgets *equal* the
+    # planning SLO, so the comparisons see identical floats either way).
+
+    def _tagged(self, reqs: Sequence[Request]) -> bool:
+        return any(r.slo_atgt != math.inf for r in reqs)
+
     def _constraint_b(self, reqs: Sequence[Request]) -> bool:
         b = self.batch_size + len(reqs)
         if b > self.cfg.max_batch:
             return False
-        budget = self.perf.decode.max_total_context(b, self.slo.atgt)
+        if self._tagged(reqs):
+            # Eq. 4's budget holds for the whole batch at the strictest
+            # member ATGT: min over ongoing + new batch + candidates
+            atgt = min(min((r.slo_atgt for r in reqs)),
+                       min((m.slo_atgt for m in
+                            self.ongoing + self.new_batch),
+                           default=math.inf))
+            if atgt == math.inf:
+                atgt = self.slo.atgt
+        else:
+            atgt = self.slo.atgt
+        budget = self.perf.decode.max_total_context(b, atgt)
         w = self.weighted_context() + sum(
             r.l_in + self.cfg.gamma * r.l_pred for r in reqs)
         return w <= self.cfg.theta * budget
@@ -114,7 +137,17 @@ class WorkerState:
     def _constraint_c(self, reqs: Sequence[Request]) -> bool:
         total_new = sum(r.l_in for r in self.new_batch) + \
             sum(r.l_in for r in reqs)
-        return self._prefill_time(total_new) <= self.slo.ttft
+        if self._tagged(reqs):
+            # the joint prefill delays every new-batch member, so it must
+            # fit the tightest TTFT budget among them and the candidates
+            ttft = min(min((r.slo_ttft for r in reqs)),
+                       min((m.slo_ttft for m in self.new_batch),
+                           default=math.inf))
+            if ttft == math.inf:
+                ttft = self.slo.ttft
+        else:
+            ttft = self.slo.ttft
+        return self._prefill_time(total_new) <= ttft
 
     def _constraint_d(self, reqs: Sequence[Request]) -> bool:
         if not self.ongoing:
@@ -123,8 +156,13 @@ class WorkerState:
         # by TTFT — so the banked slack is atgt*(l_out - 1), not atgt*l_out:
         # budgeting against l_out lets every stalled request finish up to
         # l_real/(l_real-1) over the SLO (a scale-invariant miss tail)
-        slack = min(self.slo.atgt * max(r.l_out - 1, 0) - r.t_decode_spent
-                    for r in self.ongoing)
+        if self._tagged(reqs):
+            slack = min((self.slo.atgt if m.slo_atgt == math.inf
+                         else m.slo_atgt) * max(m.l_out - 1, 0)
+                        - m.t_decode_spent for m in self.ongoing)
+        else:
+            slack = min(self.slo.atgt * max(r.l_out - 1, 0)
+                        - r.t_decode_spent for r in self.ongoing)
         total_new = sum(r.l_in for r in self.new_batch) + \
             sum(r.l_in for r in reqs)
         return self._prefill_time(total_new) <= \
@@ -243,24 +281,29 @@ def kv_peak_arrays(rem: np.ndarray, ctx: np.ndarray, h: float,
     return peak
 
 
-def decode_budget_arrays(batch: np.ndarray, atgt: float, k2: np.ndarray,
+def decode_budget_arrays(batch: np.ndarray, atgt, k2: np.ndarray,
                          c2: np.ndarray, c3: np.ndarray) -> np.ndarray:
     """Vectorized Eq. 4 across workers: ``max_total_context(batch, atgt)``
     per worker (inf where k2 <= 0), matching the scalar op order
-    ``((atgt - c3) - c2*b) / k2`` then ``max(. , 0.0)``."""
+    ``((atgt - c3) - c2*b) / k2`` then ``max(. , 0.0)``. ``atgt`` is a
+    scalar, or a per-worker vector of effective (strictest-member) ATGT
+    budgets in multi-tenant runs."""
     out = np.full(batch.shape, np.inf)
     pos = k2 > 0
     if pos.any():
+        a = atgt[pos] if np.ndim(atgt) else atgt
         out[pos] = np.maximum(
-            (atgt - c3[pos] - c2[pos] * batch[pos]) / k2[pos], 0.0)
+            (a - c3[pos] - c2[pos] * batch[pos]) / k2[pos], 0.0)
     return out
 
 
 def slack_arrays(l_out: np.ndarray, tds: np.ndarray, mask: np.ndarray,
-                 atgt: float) -> np.ndarray:
+                 atgt) -> np.ndarray:
     """Vectorized constraint-(d) banked slack: per-worker min over ongoing
     members of ``atgt*max(l_out-1, 0) - t_decode_spent`` for a padded
-    (W, B) member layout; +inf where a worker has no ongoing requests."""
+    (W, B) member layout; +inf where a worker has no ongoing requests.
+    ``atgt`` is a scalar, or a (W, B) per-member budget array in
+    multi-tenant runs (broadcast leaves the scalar image unchanged)."""
     vals = atgt * np.maximum(l_out - 1, 0) - tds
     vals = np.where(mask, vals, np.inf)
     return vals.min(axis=1)

@@ -4,6 +4,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import itertools
+import math
 from typing import Optional
 
 _ids = itertools.count()
@@ -42,8 +43,25 @@ class Request:
     # re-prefill completion is charged against the ATGT clock.
     preempt_count: int = 0                 # times reclaimed mid-flight
     t_preempted: Optional[float] = None    # pending reclaim stall start
+    # multi-tenant serving: which TenantSpec this request belongs to (index
+    # into Scenario.tenants), its admission priority (higher places first),
+    # and its tenant's own SLO budgets. ``inf`` budgets mean "untagged":
+    # every constraint falls back to the scenario-level planning SLO, so a
+    # legacy scalar-SLO trace is arithmetically untouched by the tenant
+    # plumbing.
+    tenant: int = 0
+    priority: int = 0
+    slo_ttft: float = math.inf             # tenant TTFT budget, seconds
+    slo_atgt: float = math.inf             # tenant ATGT budget, s/token
 
     # ---- derived ------------------------------------------------------------
+    @property
+    def deadline(self) -> float:
+        """Absolute EDF deadline (arrival + tenant TTFT budget); ordering
+        key only — constraints use the relative ``slo_ttft`` budget so the
+        float image of a single-tenant run matches the scalar path."""
+        return self.arrival + self.slo_ttft
+
     @property
     def context(self) -> int:
         """Current context length (prompt + generated)."""

@@ -83,6 +83,15 @@ class WorkerSpec:
     kv_bytes_per_token: float = 0.0
     price: float = 1.0               # $/accelerator-s relative to on-demand
     preempt_hazard: float = 0.0      # per-second reclaim rate (0 = on-demand)
+    # LoRA multiplexing (multi-tenant serving): a base-model worker can hold
+    # up to ``lora_slots`` resident adapters; each resident adapter eats
+    # ``lora_overhead`` of ``kv_capacity`` (same units) for its weights, and
+    # faulting a non-resident adapter in stalls the worker ``lora_swap_s``
+    # seconds (weight fetch + load). ``lora_slots=0`` means the worker
+    # cannot serve LoRA-tenant traffic at all.
+    lora_slots: int = 0              # max resident adapters (0 = no LoRA)
+    lora_overhead: float = 0.0       # kv_capacity units per resident adapter
+    lora_swap_s: float = 0.0         # stall per adapter fault-in, seconds
 
     @property
     def gpu_cost(self) -> float:

@@ -7,7 +7,7 @@ from repro.serving.api import (Colocated, Disaggregated,             # noqa: F40
                                FeedbackScale, FixedScale, FleetSpec,
                                Forecast, Plan, PolicyScale, PoolSpec,
                                Reactive, RunReport, Scenario, SideOverride,
-                               optimize, run)
+                               TenantSpec, optimize, run)
 from repro.serving.cluster import ClusterConfig, ServingCluster      # noqa: F401
 from repro.serving.disagg import (DisaggConfig, DisaggResult,        # noqa: F401
                                   min_cost_disagg, ratio_pool_fn,
@@ -22,13 +22,14 @@ from repro.serving.length_predictor import LengthPredictor           # noqa: F40
 from repro.serving.simulator import (SimConfig, SimResult,           # noqa: F401
                                      min_workers_for_slo,
                                      run_heartbeat_loop, simulate)
+from repro.serving.tenants import (planning_slo, tenant_rows)        # noqa: F401
 from repro.serving.workload import (PreemptionEvent, WorkloadConfig,  # noqa: F401
                                     burst_trace, clone_trace,
                                     diurnal_rate_fn, diurnal_trace,
                                     drifting_diurnal_rate_fn,
                                     drifting_diurnal_trace, generate_trace,
-                                    nonhomogeneous_trace, preemption_trace,
-                                    sample_lengths)
+                                    mixture_trace, nonhomogeneous_trace,
+                                    preemption_trace, sample_lengths)
 
 # The documented public surface (README "Scenario API" + ROADMAP PR-4/5).
 __all__ = [
@@ -36,6 +37,8 @@ __all__ = [
     "Scenario", "FleetSpec", "PoolSpec", "Colocated", "Disaggregated",
     "FixedScale", "Reactive", "Forecast", "FeedbackScale", "SideOverride",
     "PolicyScale", "RunReport", "Plan", "run", "optimize",
+    # multi-tenant serving (repro.serving.tenants)
+    "TenantSpec", "planning_slo", "tenant_rows",
     # markets + scaling policies
     "SpotMarket", "ScaleSimConfig", "ScaleSimResult", "ReactivePolicy",
     "ForecastPolicy", "FeedbackPolicy", "SeasonalNaiveForecaster",
@@ -50,6 +53,7 @@ __all__ = [
     "burst_trace", "diurnal_trace", "diurnal_rate_fn",
     "drifting_diurnal_trace", "drifting_diurnal_rate_fn",
     "preemption_trace", "PreemptionEvent", "sample_lengths", "clone_trace",
+    "mixture_trace",
     # engine + cluster + prediction
     "EngineConfig", "PagedEngine", "ClusterConfig", "ServingCluster",
     "LengthPredictor",

@@ -31,6 +31,7 @@ bit-for-bit (tests/test_shim_goldens.py pins them).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -52,6 +53,9 @@ from repro.serving.length_predictor import LengthPredictor
 from repro.serving.simulator import (ColocatedTopology, FixedPool, SimConfig,
                                      SimResult, SimWorker,
                                      make_worker_state, run_heartbeat_loop)
+from repro.serving.tenants import (TenantSpec, materialize_tenants,
+                                   planning_slo, tenant_attainment,
+                                   tenant_rows)
 from repro.serving.workload import clone_trace
 
 # ---- scenario vocabulary -----------------------------------------------------
@@ -63,10 +67,17 @@ class PoolSpec:
     which tier it serves (``serve`` for colocated, ``prefill``/``decode``
     for a disaggregated topology). Under ``FixedScale`` the count IS the
     pool size; under ``Reactive``/``Forecast`` it seeds ``initial_workers``
-    and the policy owns the count from there."""
+    and the policy owns the count from there.
+
+    ``tenants`` expresses LoRA/multi-tenant *placement as a decision*: None
+    (the default) is a shared pool every tenant may place on; a list of
+    tenant names makes the pool dedicated — only those tenants' requests
+    are eligible for its workers. ``optimize()`` on a multi-tenant scenario
+    searches shared-vs-dedicated pool assignments through this field."""
     spec: WorkerSpec
     count: int = 0
     role: str = "serve"
+    tenants: Optional[Sequence[str]] = None
 
 
 @dataclasses.dataclass
@@ -222,10 +233,19 @@ class Scenario:
     what arrives (``workload``: a concrete trace or a zero-arg trace
     factory), what it runs on (``fleet``), how the tiers are arranged
     (``topology``), who owns the worker counts (``scaling``), whether a
-    preemptible market exists (``market``), and the SLO it is judged by."""
-    workload: object                   # Sequence[Request] | () -> Sequence
-    fleet: FleetSpec
-    slo: SLO
+    preemptible market exists (``market``), and the SLO it is judged by.
+
+    Multi-tenant scenarios pass ``tenants=[TenantSpec(...), ...]`` in
+    place of the scalar ``workload``/``slo`` pair: the merged trace tags
+    every request with its tenant, the queue becomes priority-then-EDF,
+    attainment is judged per tenant against its own SLO, and ``slo``
+    defaults to the *planning* SLO (the strictest across tenants; an
+    explicit ``slo`` overrides that planning value only). ``workload``
+    may still be set alongside ``tenants`` when it is an already-merged,
+    already-tagged trace (``optimize`` replays candidates this way)."""
+    workload: object = None            # Sequence[Request] | () -> Sequence
+    fleet: Optional[FleetSpec] = None
+    slo: Optional[SLO] = None
     topology: TopologyLike = dataclasses.field(default_factory=Colocated)
     scaling: ScalingLike = dataclasses.field(default_factory=FixedScale)
     market: Optional[SpotMarket] = None
@@ -241,12 +261,46 @@ class Scenario:
     #                fixed colocated aladdin/jsq fleets with inert KV;
     #                optimize() evaluates candidate batches in one call
     engine: str = "reference"
+    # multi-tenant form: a list of TenantSpec in place of workload/slo
+    tenants: Optional[Sequence[TenantSpec]] = None
 
     def materialize(self) -> List:
         """The workload as a concrete request list (evaluating a trace
-        factory once); use ``workload.clone_trace`` to replay it."""
+        factory once); use ``workload.clone_trace`` to replay it. A
+        multi-tenant scenario without an explicit merged ``workload``
+        materializes every tenant stream and merges them
+        (:func:`repro.serving.tenants.materialize_tenants`)."""
+        if self.workload is None:
+            if self.tenants is None:
+                raise ValueError("Scenario needs a workload (or tenants)")
+            return materialize_tenants(self.tenants)
         w = self.workload
         return list(w() if callable(w) else w)
+
+
+def resolve_scenario(sc: Scenario) -> Scenario:
+    """The scalar view of a scenario: validate the workload/slo vs tenants
+    contract and, for a multi-tenant scenario without an explicit ``slo``,
+    fill in the planning SLO (strictest TTFT/ATGT across tenants) that
+    parameterizes worker-level placement scoring. Idempotent; every engine
+    entry point calls this first so direct engine calls see the same
+    contract as ``run()``."""
+    if sc.fleet is None:
+        raise ValueError("Scenario needs a fleet")
+    if sc.tenants is not None:
+        if not isinstance(sc.topology, Colocated):
+            raise ValueError("Scenario.tenants is a Colocated-topology "
+                             "feature; a disaggregated multi-tenant fleet "
+                             "is not modeled")
+        if not sc.tenants:
+            raise ValueError("Scenario.tenants must be non-empty when set")
+        if sc.slo is None:
+            sc = dataclasses.replace(sc, slo=planning_slo(sc.tenants))
+    if sc.slo is None:
+        raise ValueError("Scenario needs an slo (or tenants)")
+    if sc.workload is None and sc.tenants is None:
+        raise ValueError("Scenario needs a workload (or tenants)")
+    return sc
 
 
 # ---- the unified run record --------------------------------------------------
@@ -280,12 +334,19 @@ class RunReport:
     preempted_workers: int = 0         # instant/deadline kills with loss
     drained_ok: int = 0                # reclaims that drained in the notice
     requeued: int = 0
+    lora_swaps: int = 0                # adapter fault-ins (LoRA tenants)
     epochs: Dict[str, List[EpochStat]] = dataclasses.field(
         default_factory=dict)
+    # per-tenant breakdown (multi-tenant scenarios): attainment vs the
+    # tenant's own SLO, p99 TTFT/ATGT, queue delay, gpu-cost share. Like
+    # ``epochs`` it is excluded from ``row()`` — benchmarks that want the
+    # breakdown write it explicitly.
+    tenant_rows: List[Dict] = dataclasses.field(default_factory=list)
 
     def row(self) -> Dict:
         d = dataclasses.asdict(self)
         d.pop("epochs")
+        d.pop("tenant_rows")
         return d
 
     # ---- legacy adapters (deprecation shims) --------------------------------
@@ -435,6 +496,15 @@ def _run_colocated(sc: Scenario, seed: int) -> RunReport:
     if not pools:
         raise ValueError("colocated scenario needs at least one fleet pool "
                          "(role='serve')")
+    tenants = list(sc.tenants) if sc.tenants is not None else None
+    dedicated = any(p.tenants is not None for p in pools)
+    if dedicated and tenants is None:
+        raise ValueError("PoolSpec.tenants names tenants of a multi-tenant "
+                         "scenario; set Scenario.tenants")
+    lora = tenants is not None and any(t.lora is not None for t in tenants)
+    # restricted fleets (dedicated pools / LoRA adapters) fence placement
+    # per worker — only meaningful with explicit fixed pool counts
+    restricted = dedicated or lora
     sims: Dict[int, SimWorker] = {}
     wid = [0]
 
@@ -450,18 +520,35 @@ def _run_colocated(sc: Scenario, seed: int) -> RunReport:
                          "Colocated scenario would silently ignore them")
     notice = market.notice_s if market is not None else 0.0
     scaling = sc.scaling
+    if restricted and not isinstance(scaling, FixedScale):
+        raise ValueError("dedicated tenant pools / LoRA adapters need a "
+                         "FixedScale fleet (autoscaling policies size one "
+                         "undifferentiated pool)")
     if isinstance(scaling, FixedScale):
         if scaling.n is not None:
-            specs = [pools[0].spec] * int(scaling.n)
+            src = [(pools[0], pools[0].spec)] * int(scaling.n)
         else:
-            specs = [p.spec for p in pools for _ in range(p.count)]
+            src = [(p, p.spec) for p in pools for _ in range(p.count)]
+        name_idx = {t.name: i for i, t in enumerate(tenants)} \
+            if tenants is not None else {}
         workers = []
-        for s in specs:
+        for p, s in src:
             w = new_worker(s)
+            if p.tenants is not None:
+                unknown = [nm for nm in p.tenants if nm not in name_idx]
+                if unknown:
+                    raise ValueError(f"PoolSpec.tenants names unknown "
+                                     f"tenant(s) {unknown}")
+                w.allowed_tenants = frozenset(name_idx[nm]
+                                              for nm in p.tenants)
             workers.append(w)
             sims[w.id] = SimWorker(w, w.perf, 0.0, cfg.split_phase)
         factory = None
         if not workers:                # elastic: the min-cost oracle mode
+            if restricted:
+                raise ValueError("a restricted (dedicated/LoRA) fleet "
+                                 "needs explicit pool counts; the elastic "
+                                 "oracle opens undifferentiated workers")
             def factory():
                 return new_worker(pools[0].spec)
         pool = FixedPool(workers, sims, rng, factory=factory,
@@ -498,7 +585,9 @@ def _run_colocated(sc: Scenario, seed: int) -> RunReport:
 
     managed = isinstance(pool, ManagedPool)
     topo = ColocatedTopology(sc.slo, cfg, pool, rng, predictor=sc.predictor,
-                             observer=sc.observer, tracking=not managed)
+                             observer=sc.observer, tracking=not managed,
+                             tenants=tenants)
+    topo.restricted = restricted
     trace = sc.materialize()
     trace = run_heartbeat_loop(
         trace, cfg.heartbeat, topo.admit, topo.step, topo.drained,
@@ -523,6 +612,13 @@ def _run_colocated(sc: Scenario, seed: int) -> RunReport:
     rep.preempted_workers = pool.killed
     rep.drained_ok = pool.drained_ok
     rep.requeued = pool.requeued
+    if tenants is not None:
+        # the multi-tenant headline judges every request against its OWN
+        # tenant SLO (identical to the scalar number for one tenant, whose
+        # budgets equal the planning SLO)
+        rep.attainment = tenant_attainment(trace)
+        rep.tenant_rows = tenant_rows(trace, tenants, rep.gpu_cost)
+        rep.lora_swaps = topo.lora_swaps
     return rep
 
 
@@ -715,6 +811,7 @@ def run(scenario: Scenario, seed: Optional[int] = None) -> RunReport:
     concrete trace is simulated in place (its requests carry the outcome),
     exactly like the legacy entry points."""
     s = seed if seed is not None else scenario.seed
+    scenario = resolve_scenario(scenario)
     if isinstance(scenario.topology, Colocated):
         if scenario.engine == "vectorized":
             from repro.serving import fastsim
@@ -780,6 +877,7 @@ def optimize(scenario: Scenario, objective: str = "cost", *,
         raise ValueError("optimize() cannot search a PolicyScale escape "
                          "hatch (the policy instance is prebuilt); declare "
                          "the scaling as Reactive/Forecast/FeedbackScale")
+    scenario = resolve_scenario(scenario)
     template = scenario.materialize()
     if not isinstance(scenario.scaling, FixedScale):
         return _optimize_policy(scenario, template, attain_target,
@@ -787,6 +885,11 @@ def optimize(scenario: Scenario, objective: str = "cost", *,
     if policy_space is not None:
         raise ValueError("policy_space searches autoscaled scenarios; a "
                          "FixedScale scenario has no scaling policy to tune")
+    if scenario.tenants is not None and len(scenario.tenants) > 1:
+        if fleet_fn is not None:
+            raise ValueError("fleet_fn and the multi-tenant pool-partition "
+                             "search are mutually exclusive")
+        return _optimize_tenants(scenario, template, attain_target, lo, hi)
     if isinstance(scenario.topology, Colocated):
         return _optimize_colocated(scenario, template, attain_target, lo, hi,
                                    fleet_fn)
@@ -865,6 +968,27 @@ def _apply_assignment(scenario: Scenario,
     return sc
 
 
+def _attains(rep: RunReport, attain_target: float,
+             tenants: Optional[Sequence[TenantSpec]] = None) -> bool:
+    """The optimize() feasibility test. Scalar scenarios: headline
+    attainment >= target with nothing left unfinished. Multi-tenant
+    scenarios: EVERY tenant's per-tenant attainment must reach its own
+    target (``TenantSpec.attain_target`` overrides the argument). When an
+    engine path yields no per-tenant rows (batched jax candidates do not
+    write the trace back), the headline — judged against the strictest
+    planning SLO — stands in, compared against the strictest target."""
+    if rep.finished != rep.total:
+        return False
+    if tenants is not None:
+        targets = [t.attain_target if t.attain_target is not None
+                   else attain_target for t in tenants]
+        if len(rep.tenant_rows) == len(tenants):
+            return all(row["attainment"] >= tg
+                       for row, tg in zip(rep.tenant_rows, targets))
+        return rep.attainment >= max(targets)
+    return rep.attainment >= attain_target
+
+
 def _optimize_policy(scenario: Scenario, template, attain_target: float,
                      policy_space: Optional[Dict[str, Sequence]],
                      max_rounds: int) -> Plan:
@@ -921,7 +1045,7 @@ def _optimize_policy(scenario: Scenario, template, attain_target: float,
             evals[0] += 1
 
     def attains(rep: RunReport) -> bool:
-        return rep.attainment >= attain_target and rep.finished == rep.total
+        return _attains(rep, attain_target, scenario.tenants)
 
     def better(cand: RunReport, best: RunReport) -> bool:
         if attains(cand) != attains(best):
@@ -984,7 +1108,9 @@ def _optimize_colocated(scenario: Scenario, template, attain_target: float,
         ns = [n for n in ns if n not in reports]
         if not ns:
             return
-        if scenario.engine == "jax" and fleet_fn is None and len(ns) > 1:
+        multi = scenario.tenants is not None and len(scenario.tenants) > 1
+        if scenario.engine == "jax" and fleet_fn is None and not multi \
+                and len(ns) > 1:
             from repro.serving import fastsim_jax
             batch = fastsim_jax.run_candidate_batch(
                 [scenario_for(n) for n in ns])
@@ -1001,7 +1127,7 @@ def _optimize_colocated(scenario: Scenario, template, attain_target: float,
             evaluate([n])
         rep = reports[n]
         attain_hist.append((n, rep.attainment))
-        return rep.attainment >= attain_target and rep.finished == rep.total
+        return _attains(rep, attain_target, scenario.tenants)
 
     escalations = 0
     while not ok(hi):
@@ -1044,6 +1170,122 @@ def _optimize_colocated(scenario: Scenario, template, attain_target: float,
         rep = reports[lo]
     return Plan(objective="cost", scenario=scenario_for(lo), report=rep,
                 n_workers=lo, cost=rep.gpu_cost, evals=evals[0])
+
+
+def _tenant_partitions(n: int, tenants) -> List[List[Tuple[int, ...]]]:
+    """Candidate pool partitions of the tenant index set: for <= 4 tenants
+    every set partition (Bell numbers stay tiny: B(4) = 15); beyond that,
+    the three canonical assignments — fully shared, fully dedicated, and
+    one pool per tier."""
+    if n <= 4:
+        parts: List[List[Tuple[int, ...]]] = []
+
+        def rec(i: int, groups: List[List[int]]) -> None:
+            if i == n:
+                parts.append([tuple(g) for g in groups])
+                return
+            for g in groups:
+                g.append(i)
+                rec(i + 1, groups)
+                g.pop()
+            groups.append([i])
+            rec(i + 1, groups)
+            groups.pop()
+
+        rec(0, [])
+        return parts
+    shared = [tuple(range(n))]
+    dedicated = [(i,) for i in range(n)]
+    tiers: Dict[str, List[int]] = {}
+    for i, t in enumerate(tenants):
+        tiers.setdefault(t.tier, []).append(i)
+    by_tier = [tuple(v) for v in tiers.values()]
+    cands = [shared, dedicated]
+    if by_tier not in cands:
+        cands.append(by_tier)
+    return cands
+
+
+def _optimize_tenants(scenario: Scenario, template, attain_target: float,
+                      lo: int, hi: int) -> Plan:
+    """The joint multi-tenant placement search: which tenants *share* a
+    pool versus get a dedicated one, and how many workers each pool gets,
+    subject to EVERY tenant reaching its attainment target.
+
+    Dedicated pools do not interact — placement is fenced per pool and
+    rebalance is disabled on restricted fleets — so each group of a
+    candidate partition is sized independently with the scalar binary
+    search on the group's merged sub-trace, groups are cached across
+    partitions (the singleton {k} appears in many partitions), and the
+    cheapest feasible partition wins. The winning plan's fleet records the
+    pool->tenant assignment (``PoolSpec.tenants``; the fully-shared
+    partition keeps one undifferentiated pool) and a final combined run —
+    on the reference engine when the fleet is restricted — verifies the
+    joint scenario and supplies the per-tenant report."""
+    tenants = list(scenario.tenants)
+    pools = scenario.fleet.for_role("serve")
+    if not pools:
+        raise ValueError("optimize needs a fleet pool to size")
+    base_spec = pools[0].spec
+    group_plans: Dict[Tuple[int, ...], Plan] = {}
+
+    def size_group(group: Tuple[int, ...]) -> Plan:
+        plan = group_plans.get(group)
+        if plan is None:
+            specs = [tenants[i] for i in group]
+            remap = {g: i for i, g in enumerate(group)}
+            sub = clone_trace([r for r in template if r.tenant in remap])
+            for r in sub:
+                r.tenant = remap[r.tenant]
+            sub_sc = resolve_scenario(dataclasses.replace(
+                scenario, workload=sub, slo=None, tenants=specs))
+            if any(s.lora is not None for s in specs):
+                # LoRA residency/swap modeling lives in the reference
+                # engine; the compiled envelopes reject it
+                sub_sc = dataclasses.replace(sub_sc, engine="reference")
+            try:
+                plan = _optimize_colocated(sub_sc, sub, attain_target,
+                                           lo, hi, None)
+            except RuntimeError:
+                # this group cannot attain at any size (plateau / cap) —
+                # the partition is infeasible, not the whole search
+                plan = Plan(objective="cost", scenario=None, report=None)
+            group_plans[group] = plan
+        return plan
+
+    best_part: Optional[List[Tuple[int, ...]]] = None
+    best_cost = math.inf
+    best_plans: Optional[List[Plan]] = None
+    for part in _tenant_partitions(len(tenants), tenants):
+        plans = [size_group(g) for g in part]
+        if not all(p.feasible for p in plans):
+            continue
+        cost = sum(p.cost for p in plans)
+        if cost < best_cost:
+            best_part, best_cost, best_plans = part, cost, plans
+    n_evals = sum(p.evals for p in group_plans.values())
+    if best_part is None:
+        return Plan(objective="cost", scenario=None, report=None,
+                    evals=n_evals)
+    fleet = FleetSpec([
+        PoolSpec(base_spec, p.n_workers,
+                 tenants=([tenants[i].name for i in g]
+                          if len(best_part) > 1 else None))
+        for g, p in zip(best_part, best_plans)])
+    win = dataclasses.replace(scenario, workload=clone_trace(template),
+                              fleet=fleet, scaling=FixedScale())
+    if len(best_part) > 1 or any(t.lora is not None for t in tenants):
+        # restricted fleets (dedicated pools / LoRA) run on the reference
+        # engine only
+        win = dataclasses.replace(win, engine="reference")
+    rep = run(win)
+    n_evals += 1
+    win = dataclasses.replace(win, workload=lambda: clone_trace(template))
+    return Plan(objective="cost", scenario=win, report=rep,
+                n_workers=sum(p.n_workers for p in best_plans),
+                cost=rep.gpu_cost, evals=n_evals,
+                params={"pools": [tuple(tenants[i].name for i in g)
+                                  for g in best_part]})
 
 
 def _optimize_disagg(scenario: Scenario, template, attain_target: float,
@@ -1131,5 +1373,6 @@ def _optimize_disagg(scenario: Scenario, template, attain_target: float,
 __all__ = [
     "Colocated", "Disaggregated", "FeedbackScale", "FixedScale", "FleetSpec",
     "Forecast", "Plan", "PolicyScale", "PoolSpec", "Reactive", "RunReport",
-    "Scenario", "SideOverride", "SpotMarket", "optimize", "run",
+    "Scenario", "SideOverride", "SpotMarket", "TenantSpec", "optimize",
+    "run",
 ]

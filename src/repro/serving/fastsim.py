@@ -66,6 +66,7 @@ def check_colocated_envelope(scenario) -> List:
     ``ValueError`` with the first unsupported feature otherwise."""
     from repro.serving import api
 
+    scenario = api.resolve_scenario(scenario)
     if not isinstance(scenario.topology, api.Colocated):
         raise ValueError("vectorized engine supports Colocated topologies "
                          f"only, not {type(scenario.topology).__name__}")
@@ -106,7 +107,41 @@ def check_colocated_envelope(scenario) -> List:
     if not specs:
         raise ValueError("vectorized engine needs an explicit worker count "
                          "(elastic mode needs engine='reference')")
-    if scenario.workload is None:
+    tenants = scenario.tenants
+    if tenants is not None:
+        names = []
+        for tn in tenants:
+            names.append(tn.name)
+            if tn.workload is None and scenario.workload is None:
+                raise ValueError(f"tenant {tn.name!r} needs a workload")
+            if tn.lora is not None:
+                raise ValueError(
+                    "LoRA adapter residency/swap modeling is reference-"
+                    f"engine only (tenant {tn.name!r} sets "
+                    f"lora={tn.lora!r})")
+            if tn.tier not in ("interactive", "batch"):
+                raise ValueError(f"tenant {tn.name!r}: tier must be "
+                                 "'interactive' or 'batch', got "
+                                 f"{tn.tier!r}")
+            if tn.slo.ttft <= 0 or tn.slo.atgt <= 0:
+                raise ValueError(f"tenant {tn.name!r}: SLO targets must "
+                                 "be positive")
+            if tn.attain_target is not None \
+                    and not 0.0 < tn.attain_target <= 1.0:
+                raise ValueError(f"tenant {tn.name!r}: attain_target "
+                                 "must be in (0, 1]")
+            if int(tn.priority) != tn.priority:
+                raise ValueError(f"tenant {tn.name!r}: priority must be "
+                                 "an integer")
+            if not isinstance(tn.model, str):
+                raise ValueError(f"tenant {tn.name!r}: model is a string "
+                                 "label")
+        if len(set(names)) != len(names):
+            raise ValueError(f"tenant names must be unique (got {names})")
+    if any(p.tenants is not None for p in pools):
+        raise ValueError("dedicated tenant pools (PoolSpec.tenants) fence "
+                         "placement per worker — reference engine only")
+    if scenario.workload is None and tenants is None:
         raise ValueError("scenario needs a workload trace")
     if scenario.slo.ttft <= 0 or scenario.slo.atgt <= 0:
         raise ValueError("SLO targets must be positive "
@@ -217,6 +252,24 @@ class _Engine:
                                dtype=np.int64)
         # no predictor in the envelope: admit() sets l_pred = l_real
         self.l_pred = self.l_real
+        # multi-tenant tagging: raw per-request tenant budgets (inf =
+        # untagged -> constraints fall back to the planning SLO), the EDF
+        # ordering key (arrival + tenant TTFT budget) and the admission
+        # priority. ``edf`` (>1 tenant; set by run_colocated_vectorized)
+        # orders the queue priority-then-deadline before each placement
+        # pass — a single tenant keeps the legacy FIFO walk bit-for-bit.
+        self.prio = np.array([r.priority for r in self.trace],
+                             dtype=np.int64)
+        self.dl = np.array([r.deadline for r in self.trace])
+        self.raw_ttft = np.array([r.slo_ttft for r in self.trace])
+        self.raw_atgt = np.array([r.slo_atgt for r in self.trace])
+        self.tagged = bool(np.isfinite(self.raw_atgt).any()) if n else False
+        self.edf = False
+        # running per-worker tenant-budget mins for constraints (b)/(c):
+        # min tenant ATGT over ongoing+new_batch, min tenant TTFT over
+        # new_batch — rebuilt each aladdin pass, updated per placement
+        self._amin = np.full(W, np.inf)
+        self._tmin = np.full(W, np.inf)
         self.l_out = np.zeros(n, dtype=np.int64)
         self.tds = np.zeros(n)                      # t_decode_spent
         self.t_first = np.full(n, np.nan)
@@ -287,6 +340,8 @@ class _Engine:
         self.wctx = np.append(self.wctx, 0.0)
         self.norm = np.append(self.norm, 0.0)
         self.dirty = np.append(self.dirty, True)
+        self._amin = np.append(self._amin, np.inf)
+        self._tmin = np.append(self._tmin, np.inf)
         self.newb.append([])
         self.pre.append([])
         return idx
@@ -349,6 +404,13 @@ class _Engine:
         self.norm[wi] = math.hypot(
             self.bsz[wi] / self.maxb_norm[wi],
             self.wctx[wi] / self.cmax_norm[wi])
+        if self.tagged:
+            # the new member's tenant budgets tighten the worker's running
+            # constraint-(b)/(c) mins for the rest of the pass
+            if self.raw_atgt[ridx] < self._amin[wi]:
+                self._amin[wi] = self.raw_atgt[ridx]
+            if self.raw_ttft[ridx] < self._tmin[wi]:
+                self._tmin[wi] = self.raw_ttft[ridx]
 
     # Placement runs over the *serving* lanes in serving-list order: ``sel``
     # (None = every lane, the fixed-fleet fast path) maps serving position ->
@@ -376,6 +438,28 @@ class _Engine:
         slack = slack_arrays(self.l_out[mem_s], self.tds[mem_s],
                              mask_slots, atgt)
         d_budget = theta * np.maximum(slack, 0.0)
+        tagged = self.tagged
+        d_budget_tag = None
+        if tagged:
+            # per-member tenant ATGT budgets (inf -> planning SLO) for the
+            # tagged-candidate variant of the (d) slack, plus the rebuilt
+            # running (b)/(c) mins over ongoing + any pending new batch
+            raw_am = self.raw_atgt[mem_s]
+            atgt_mem = np.where(np.isinf(raw_am), atgt, raw_am)
+            slack_t = slack_arrays(self.l_out[mem_s], self.tds[mem_s],
+                                   mask_slots, atgt_mem)
+            d_budget_tag = theta * np.maximum(slack_t, 0.0)
+            live = np.arange(self.W) if sel is None else sel
+            amin = np.where(mask_slots, raw_am, np.inf).min(axis=1)
+            tmin = np.full(live.size, np.inf)
+            for p, wi in enumerate(live):
+                for rid in self.newb[int(wi)]:
+                    if self.raw_atgt[rid] < amin[p]:
+                        amin[p] = self.raw_atgt[rid]
+                    if self.raw_ttft[rid] < tmin[p]:
+                        tmin[p] = self.raw_ttft[rid]
+            self._amin[live] = amin
+            self._tmin[live] = tmin
         K1_s, C1_s = sub(self.K1), sub(self.C1)
         K2_s, C2_s, C3_s = sub(self.K2), sub(self.C2), sub(self.C3)
         MAXB_s = sub(self.MAXB)
@@ -384,11 +468,22 @@ class _Engine:
             li = int(self.l_in[ridx])
             v = li + g * int(self.l_pred[ridx])
             bpost = sub(self.bsz) + 1
+            if tagged and math.isfinite(self.raw_atgt[ridx]):
+                # tagged candidate: constraints budget against the
+                # strictest tenant among candidate + affected members,
+                # mirroring WorkerState._constraint_{b,c,d}
+                a_eff = np.minimum(sub(self._amin), self.raw_atgt[ridx])
+                a_eff = np.where(np.isinf(a_eff), atgt, a_eff)
+                t_eff = np.minimum(sub(self._tmin), self.raw_ttft[ridx])
+                t_eff = np.where(np.isinf(t_eff), ttft, t_eff)
+                d_eff = d_budget_tag
+            else:
+                a_eff, t_eff, d_eff = atgt, ttft, d_budget
             okb = (bpost <= MAXB_s) & (
                 sub(self.wctx) + v <= theta * decode_budget_arrays(
-                    bpost, atgt, K2_s, C2_s, C3_s))
+                    bpost, a_eff, K2_s, C2_s, C3_s))
             pre_t = K1_s * (sub(self.newsum) + li) + C1_s
-            mask = okb & (pre_t <= ttft) & (pre_t <= d_budget)
+            mask = okb & (pre_t <= t_eff) & (pre_t <= d_eff)
             placed = False
             if mask.any():
                 for p in best_fit_order(sub(self.norm)):
@@ -624,8 +719,17 @@ class _Engine:
 
     # ---- the heartbeat loop ------------------------------------------------
 
+    def _edf_sort(self) -> None:
+        """Priority-then-EDF queue ordering (>1 tenant only): stable sort
+        by (-priority, deadline), so equal keys keep FIFO/requeue order —
+        the same ``list.sort`` the reference topology runs."""
+        prio, dl = self.prio, self.dl
+        self.queued.sort(key=lambda i: (-prio[i], dl[i]))
+
     def _step(self, t: float, t_next: float) -> None:
         if self.queued:
+            if self.edf:
+                self._edf_sort()
             if self.policy == "aladdin":
                 self._place_all_aladdin()
             elif self.policy == "jsq":
@@ -739,6 +843,8 @@ class _Engine:
         pool = self.pool
         pool.begin_beat(self, t)
         if self.queued:
+            if self.edf:
+                self._edf_sort()
             sel = np.asarray([ln.idx for ln in pool.serving()
                               if ln.alive and not ln.draining],
                              dtype=np.int64)
@@ -907,8 +1013,10 @@ def run_colocated_vectorized(scenario, seed: Optional[int] = None,
     from repro.serving import api
     from repro.serving.forecast import ManagedPool
 
+    scenario = api.resolve_scenario(scenario)
     specs = check_colocated_envelope(scenario)
     s = seed if seed is not None else scenario.seed
+    edf = scenario.tenants is not None and len(scenario.tenants) > 1
     trace = scenario.materialize()
     market = scenario.market
     notice = market.notice_s if market is not None else 0.0
@@ -920,6 +1028,7 @@ def run_colocated_vectorized(scenario, seed: Optional[int] = None,
         # fleet through the engine's new_worker adapter)
         eng = _Engine([], trace, scenario.topology, scenario.slo, s,
                       tail=tail)
+        eng.edf = edf
         scfg = _managed_scfg(scenario)
         policy = _managed_policy(scenario, scfg)
         pool = ManagedPool(
@@ -944,6 +1053,7 @@ def run_colocated_vectorized(scenario, seed: Optional[int] = None,
     elif market is not None:
         eng = _Engine(specs, trace, scenario.topology, scenario.slo, s,
                       tail=tail)
+        eng.edf = edf
         lanes = []
         for wi, sp in enumerate(specs):
             eng._wid += 1
@@ -962,6 +1072,7 @@ def run_colocated_vectorized(scenario, seed: Optional[int] = None,
     else:
         eng = _Engine(specs, trace, scenario.topology, scenario.slo, s,
                       tail=tail)
+        eng.edf = edf
         pool = None
         eng.run()
         finished = eng.writeback()
@@ -976,4 +1087,9 @@ def run_colocated_vectorized(scenario, seed: Optional[int] = None,
         rep.requeued = pool.requeued
     rep.moves = 0
     rep.beats = eng.beats       # benchmark side channel (not in row())
+    if scenario.tenants is not None:
+        from repro.serving.tenants import tenant_attainment, tenant_rows
+        rep.attainment = tenant_attainment(trace)
+        rep.tenant_rows = tenant_rows(trace, list(scenario.tenants),
+                                      rep.gpu_cost)
     return rep

@@ -187,16 +187,26 @@ def _make_simulate(n: int, W: int, B: int, hb: float, horizon: float,
                    coefs: Tuple[Tuple[float, ...], ...],
                    maxb: Tuple[int, ...],
                    maxb_norm: Tuple[float, ...],
-                   cmax_norm: Tuple[float, ...]):
+                   cmax_norm: Tuple[float, ...],
+                   edf: bool = False, tagged: bool = False):
     """Close over the static configuration and return the whole-trace
-    simulation ``fn(arrival, l_in, l_real, n_active)`` (jit/vmap-able)."""
+    simulation ``fn(arrival, l_in, l_real, n_active, rank_r, ttft_r,
+    atgt_r)`` (jit/vmap-able). ``rank_r``/``ttft_r``/``atgt_r`` are
+    read-only per-request operands for multi-tenant scenarios: ``rank_r``
+    is the host-computed total queue order (priority desc, deadline asc,
+    arrival index) that ``edf=True`` sorts the admission queue by each
+    beat, and the raw per-request SLO budgets drive the tagged
+    constraint-(b)/(c)/(d) math when ``tagged=True`` (``inf`` falls back
+    to the planning SLO, like the reference). With both flags False the
+    operands are ignored and the compiled graph is unchanged."""
     K1, C1, K2, C2, C3 = (jnp.asarray(c) for c in coefs)
     MAXB = jnp.asarray(maxb, dtype=jnp.int64)
     MAXBN = jnp.asarray(maxb_norm)
     CMAXN = jnp.asarray(cmax_norm)
     is_aladdin = policy == "aladdin"
+    tag_a = tagged and is_aladdin
 
-    def simulate(arrival, l_in, l_real, n_active):
+    def simulate(arrival, l_in, l_real, n_active, rank_r, ttft_r, atgt_r):
         alive = jnp.arange(W) < n_active
 
         def place_pass(qlen, q, mem, active, started, lane_li, lane_lr,
@@ -209,8 +219,24 @@ def _make_simulate(n: int, W: int, B: int, hb: float, horizon: float,
                     on, atgt * jnp.maximum(lane_lo - 1, 0) - lane_tds,
                     jnp.inf), axis=1)
                 d_budget = theta * jnp.maximum(slack, 0.0)
+                if tag_a:
+                    # per-member budgets: each ongoing row's own tenant
+                    # ATGT (inf -> planning SLO), selected per candidate
+                    am = atgt_r[mem]
+                    am = jnp.where(jnp.isinf(am), atgt, am)
+                    slack_t = jnp.min(jnp.where(
+                        on, am * jnp.maximum(lane_lo - 1, 0) - lane_tds,
+                        jnp.inf), axis=1)
+                    d_budget_t = theta * jnp.maximum(slack_t, 0.0)
             else:
                 d_budget = jnp.zeros(W)
+            if tag_a:
+                # running raw-budget mins over members (b: ongoing + new
+                # batch; c: new batch only), updated as placements land
+                amin0 = jnp.min(jnp.where(active, atgt_r[mem], jnp.inf),
+                                axis=1)
+                tmin0 = jnp.min(jnp.where(active & ~started,
+                                          ttft_r[mem], jnp.inf), axis=1)
             # l_pred == l_real inside the envelope (no predictor); sums of
             # integers (x gamma), so slot order cannot perturb them
             wctx0 = jnp.sum(jnp.where(
@@ -222,22 +248,38 @@ def _make_simulate(n: int, W: int, B: int, hb: float, horizon: float,
             def pbody(st):
                 (i, keep, q, mem, active, started, lane_li, lane_lr,
                  lane_lo, lane_tds, lane_tf1, lane_tfn, cnt, newsum,
-                 wctx) = st
+                 wctx) = st[:15]
+                if tag_a:
+                    amin, tmin = st[15], st[16]
                 rid = q[i]
                 liv = l_in[rid]
                 lrv = l_real[rid]
                 v = liv + gamma * lrv
                 bpost = cnt + 1
                 if is_aladdin:
+                    if tag_a:
+                        # an untagged candidate takes the scalar branch
+                        # even among tagged members (reference _tagged)
+                        ct = jnp.isfinite(atgt_r[rid])
+                        a0 = jnp.minimum(amin, atgt_r[rid])
+                        a_eff = jnp.where(
+                            ct, jnp.where(jnp.isinf(a0), atgt, a0), atgt)
+                        t0_ = jnp.minimum(tmin, ttft_r[rid])
+                        t_eff = jnp.where(
+                            ct, jnp.where(jnp.isinf(t0_), ttft, t0_),
+                            ttft)
+                        d_eff = jnp.where(ct, d_budget_t, d_budget)
+                    else:
+                        a_eff, t_eff, d_eff = atgt, ttft, d_budget
                     budget = jnp.where(
                         K2 > 0,
-                        jnp.maximum(((atgt - C3) - C2 * bpost)
+                        jnp.maximum(((a_eff - C3) - C2 * bpost)
                                     / jnp.where(K2 > 0, K2, 1.0), 0.0),
                         jnp.inf)
                     pre_t = K1 * (newsum + liv) + C1
                     ok = ((bpost <= MAXB)
                           & (wctx + v <= theta * budget)
-                          & (pre_t <= ttft) & (pre_t <= d_budget) & alive)
+                          & (pre_t <= t_eff) & (pre_t <= d_eff) & alive)
                     # best-fit: max capacity_norm, ties to the lowest index
                     # (argmax returns the first maximum, like stable sort)
                     norm = jnp.hypot(cnt / MAXBN, wctx / CMAXN)
@@ -267,15 +309,23 @@ def _make_simulate(n: int, W: int, B: int, hb: float, horizon: float,
                 qslot = jnp.where(placed, jnp.int64(n), keep)
                 q = q.at[qslot].set(rid, mode="drop")
                 keep = keep + jnp.where(placed, 0, 1)
-                return (i + 1, keep, q, mem, active, started, lane_li,
-                        lane_lr, lane_lo, lane_tds, lane_tf1, lane_tfn,
-                        cnt, newsum, wctx)
+                out = (i + 1, keep, q, mem, active, started, lane_li,
+                       lane_lr, lane_lo, lane_tds, lane_tf1, lane_tfn,
+                       cnt, newsum, wctx)
+                if tag_a:
+                    amin = amin.at[w].min(
+                        jnp.where(placed, atgt_r[rid], jnp.inf))
+                    tmin = tmin.at[w].min(
+                        jnp.where(placed, ttft_r[rid], jnp.inf))
+                    out = out + (amin, tmin)
+                return out
 
-            st = lax.while_loop(
-                lambda st: st[0] < qlen, pbody,
-                (jnp.int64(0), jnp.int64(0), q, mem, active, started,
-                 lane_li, lane_lr, lane_lo, lane_tds, lane_tf1, lane_tfn,
-                 cnt0, newsum0, wctx0))
+            st0p = (jnp.int64(0), jnp.int64(0), q, mem, active, started,
+                    lane_li, lane_lr, lane_lo, lane_tds, lane_tf1,
+                    lane_tfn, cnt0, newsum0, wctx0)
+            if tag_a:
+                st0p = st0p + (amin0, tmin0)
+            st = lax.while_loop(lambda st: st[0] < qlen, pbody, st0p)
             return st[1:12]
 
         def beat_body(st):
@@ -291,6 +341,13 @@ def _make_simulate(n: int, W: int, B: int, hb: float, horizon: float,
             idx, qlen, q = lax.while_loop(
                 lambda ast: (ast[0] < n) & (arrival[ast[0]] <= t),
                 adm_body, (idx, qlen, q))
+            if edf:
+                # priority-then-EDF admission order: sort the backlog by
+                # the host-computed total rank (stable because ranks are
+                # unique); entries past qlen sort to the tail
+                ii = jnp.arange(q.shape[0])
+                keys = jnp.where(ii < qlen, rank_r[q], _BIG_I)
+                q = jnp.take(q, jnp.argsort(keys))
             (qlen, q, mem, active, started, lane_li, lane_lr, lane_lo,
              lane_tds, lane_tf1, lane_tfn) = place_pass(
                 qlen, q, mem, active, started, lane_li, lane_lr, lane_lo,
@@ -548,10 +605,17 @@ def _advance_lane_kv(t0, t_start, t_end, sst0, rli, rlr, rnsq, rarr, lo0,
 
 
 def _make_chunk(n: int, W: int, B: int, Q: int, hb: float,
-                gamma: float, ttft: float, atgt: float, policy: str):
+                gamma: float, ttft: float, atgt: float, policy: str,
+                edf: bool = False, tagged: bool = False):
     """Close over the static shape/config and return the chunk kernel
-    ``fn(st, arrival, l_in, l_real, s_lo, s_tds, s_tf1, s_tpe) -> st``
+    ``fn(st, arrival, l_in, l_real, s_lo, s_tds, s_tf1, s_tpe, rank_r,
+    ttft_r, atgt_r) -> st``
     advancing up to ``st['K']`` beats of a FIXED fleet configuration.
+    The three trailing operands are the multi-tenant per-request arrays
+    (see :func:`_tenant_arrays`): ``edf=True`` sorts the backlog by
+    ``rank_r`` each beat, ``tagged=True`` swaps the aladdin constraint
+    budgets for the per-request ones; both False ignores them and leaves
+    the compiled graph unchanged.
     Fleet composition is traced state (activation masks + per-lane
     coefficient arrays), so boots, drains and reclaims never recompile;
     only lane-capacity growth does. ``st['theta']`` is traced too, which
@@ -567,9 +631,11 @@ def _make_chunk(n: int, W: int, B: int, Q: int, hb: float,
     which is what the candidate-batch throughput lives or dies on."""
     is_aladdin = policy == "aladdin"
     is_jsq = policy == "jsq"
+    tag_a = tagged and is_aladdin
     lane_ids = jnp.arange(W)
 
-    def chunk(st, arrival, l_in, l_real, s_lo, s_tds, s_tf1, s_tpe):
+    def chunk(st, arrival, l_in, l_real, s_lo, s_tds, s_tf1, s_tpe,
+              rank_r, ttft_r, atgt_r):
 
         def place_pass(st):
             theta = st["theta"]
@@ -593,14 +659,32 @@ def _make_chunk(n: int, W: int, B: int, Q: int, hb: float,
                     on, atgt * jnp.maximum(rlo - 1, 0) - rtds,
                     jnp.inf), axis=1)
                 d_budget = theta * jnp.maximum(slack, 0.0)
+                if tag_a:
+                    # per-member ATGT budgets (inf -> planning SLO),
+                    # selected per candidate like the reference
+                    am = atgt_r[st["rid"]]
+                    am = jnp.where(jnp.isinf(am), atgt, am)
+                    slack_t = jnp.min(jnp.where(
+                        on, am * jnp.maximum(rlo - 1, 0) - rtds,
+                        jnp.inf), axis=1)
+                    d_budget_t = theta * jnp.maximum(slack_t, 0.0)
             else:
                 d_budget = jnp.zeros(W)
+            if tag_a:
+                # running raw-budget mins over members (b: ongoing + new
+                # batch; c: new batch only), updated as placements land
+                amin0 = jnp.min(jnp.where(members, atgt_r[st["rid"]],
+                                          jnp.inf), axis=1)
+                tmin0 = jnp.min(jnp.where(sst == 1, ttft_r[st["rid"]],
+                                          jnp.inf), axis=1)
             nserv = jnp.sum(online)
 
             def pbody(ps):
                 (i, keep, q, sst, rid, rli, rlr, rlo, rtds, rtf1, rtpe,
                  rtfn, rarr, rnsq, rjsq, rpsq, cnt, newsum, newctx, wctx,
-                 seqc, key, ovf) = ps
+                 seqc, key, ovf) = ps[:23]
+                if tag_a:
+                    amin, tmin = ps[23], ps[24]
                 r = q[i]
                 liv = l_in[r]
                 lrv = l_real[r]
@@ -609,15 +693,29 @@ def _make_chunk(n: int, W: int, B: int, Q: int, hb: float,
                 bpost = cnt + 1
                 if is_aladdin:
                     K2a = st["K2"]
+                    if tag_a:
+                        # an untagged candidate takes the scalar branch
+                        # even among tagged members (reference _tagged)
+                        ct = jnp.isfinite(atgt_r[r])
+                        a0 = jnp.minimum(amin, atgt_r[r])
+                        a_eff = jnp.where(
+                            ct, jnp.where(jnp.isinf(a0), atgt, a0), atgt)
+                        t0_ = jnp.minimum(tmin, ttft_r[r])
+                        t_eff = jnp.where(
+                            ct, jnp.where(jnp.isinf(t0_), ttft, t0_),
+                            ttft)
+                        d_eff = jnp.where(ct, d_budget_t, d_budget)
+                    else:
+                        a_eff, t_eff, d_eff = atgt, ttft, d_budget
                     budget = jnp.where(
                         K2a > 0,
-                        jnp.maximum(((atgt - st["C3"]) - st["C2"] * bpost)
+                        jnp.maximum(((a_eff - st["C3"]) - st["C2"] * bpost)
                                     / jnp.where(K2a > 0, K2a, 1.0), 0.0),
                         jnp.inf)
                     pre_t = st["K1"] * (newsum + liv) + st["C1"]
                     ok = ((bpost <= st["MAXB"])
                           & (wctx + v <= theta * budget)
-                          & (pre_t <= ttft) & (pre_t <= d_budget) & online)
+                          & (pre_t <= t_eff) & (pre_t <= d_eff) & online)
                     norm = jnp.hypot(cnt / st["MAXBN"], wctx / st["CMAXN"])
                     # lazy best-fit: walk candidates by (norm desc, serving
                     # order), testing constraint (e)'s KV peak per lane
@@ -726,17 +824,25 @@ def _make_chunk(n: int, W: int, B: int, Q: int, hb: float,
                 qslot = jnp.where(do, jnp.int64(Q), keep)
                 q = q.at[qslot].set(r, mode="drop")
                 keep = keep + jnp.where(do, 0, 1)
-                return (i + 1, keep, q, sst, rid, rli, rlr, rlo, rtds,
-                        rtf1, rtpe, rtfn, rarr, rnsq, rjsq, rpsq, cnt,
-                        newsum, newctx, wctx, seqc, key2, ovf)
+                out = (i + 1, keep, q, sst, rid, rli, rlr, rlo, rtds,
+                       rtf1, rtpe, rtfn, rarr, rnsq, rjsq, rpsq, cnt,
+                       newsum, newctx, wctx, seqc, key2, ovf)
+                if tag_a:
+                    amin = amin.at[w].min(
+                        jnp.where(do, atgt_r[r], jnp.inf))
+                    tmin = tmin.at[w].min(
+                        jnp.where(do, ttft_r[r], jnp.inf))
+                    out = out + (amin, tmin)
+                return out
 
-            ps = lax.while_loop(
-                lambda ps: ps[0] < st["qlen"], pbody,
-                (jnp.int64(0), jnp.int64(0), st["q"], sst, st["rid"], rli,
-                 rlr, rlo, rtds, st["rtf1"], st["rtpe"], st["rtfn"],
-                 st["rarr"], st["rnsq"], st["rjsq"], st["rpsq"], cnt0,
-                 newsum0, newctx0, wctx0, st["seqc"], st["key"],
-                 st["ovf"]))
+            ps0 = (jnp.int64(0), jnp.int64(0), st["q"], sst, st["rid"],
+                   rli, rlr, rlo, rtds, st["rtf1"], st["rtpe"],
+                   st["rtfn"], st["rarr"], st["rnsq"], st["rjsq"],
+                   st["rpsq"], cnt0, newsum0, newctx0, wctx0, st["seqc"],
+                   st["key"], st["ovf"])
+            if tag_a:
+                ps0 = ps0 + (amin0, tmin0)
+            ps = lax.while_loop(lambda ps: ps[0] < st["qlen"], pbody, ps0)
             out = dict(st)
             (out["qlen"], out["q"], out["sst"], out["rid"], out["rli"],
              out["rlr"], out["rlo"], out["rtds"], out["rtf1"],
@@ -759,6 +865,13 @@ def _make_chunk(n: int, W: int, B: int, Q: int, hb: float,
                 st["idx"] + ii, mode="drop")
             st = dict(st)
             st["idx"], st["qlen"], st["q"] = hi, st["qlen"] + na, q
+            if edf:
+                # priority-then-EDF admission order: sort the backlog by
+                # the host-computed total rank (unique per request);
+                # entries past qlen sort to the tail
+                keys = jnp.where(ii < st["qlen"], rank_r[st["q"]],
+                                 _BIG_I)
+                st["q"] = jnp.take(st["q"], jnp.argsort(keys))
             st = place_pass(st)
             t_next = t + hb
             adv = (st["mode"] == 2) | (st["mode"] == 3)
@@ -811,7 +924,8 @@ def _make_chunk(n: int, W: int, B: int, Q: int, hb: float,
 _KERNELS: Dict[Tuple, object] = {}
 
 
-def _kernel_for(scenario, specs, trace, batched: bool):
+def _kernel_for(scenario, specs, trace, batched: bool,
+                edf: bool = False, tagged: bool = False):
     from repro.serving import api
 
     topo = scenario.topology
@@ -830,7 +944,7 @@ def _kernel_for(scenario, specs, trace, batched: bool):
            tuple((float(s.perf.prefill.k1), float(s.perf.prefill.c1),
                   float(s.perf.decode.k2), float(s.perf.decode.c2),
                   float(s.perf.decode.c3), int(s.max_batch)) for s in specs),
-           batched)
+           batched, edf, tagged)
     fn = _KERNELS.get(key)
     if fn is None:
         coefs = tuple(tuple(getattr(s.perf.prefill, a) for s in specs)
@@ -843,9 +957,10 @@ def _kernel_for(scenario, specs, trace, batched: bool):
             float(scenario.slo.atgt), topo.policy, coefs,
             tuple(int(s.max_batch) for s in specs),
             tuple(max(int(s.max_batch), 1) for s in specs),
-            tuple(cmax_norm))
+            tuple(cmax_norm), edf, tagged)
         if batched:
-            fn = jax.jit(jax.vmap(sim, in_axes=(None, None, None, 0)))
+            fn = jax.jit(jax.vmap(sim, in_axes=(None, None, None, 0,
+                                                None, None, None)))
         else:
             fn = jax.jit(sim)
         _KERNELS[key] = fn
@@ -859,6 +974,25 @@ def _trace_arrays(trace):
     l_in = np.array([r.l_in for r in ordered], dtype=np.int64)
     l_real = np.array([r.l_real for r in ordered], dtype=np.int64)
     return ordered, arrival, l_in, l_real
+
+
+def _tenant_arrays(ordered):
+    """Per-request multi-tenant operands for the kernels: the total queue
+    rank (priority desc, deadline asc, arrival index — the order a stable
+    reference sort converges to; after a requeue an exact-key tie can
+    differ, which the tolerance pins absorb) and the RAW per-request SLO
+    budgets (``inf`` = untagged; the kernels resolve the fallback to the
+    planning SLO in-branch, like the reference). ``tagged`` mirrors the
+    reference's trace-level gate (any finite ATGT budget)."""
+    n = len(ordered)
+    prio = np.array([int(r.priority) for r in ordered], dtype=np.int64)
+    dl = np.array([r.deadline for r in ordered])
+    rank = np.empty(n, dtype=np.int64)
+    rank[np.lexsort((dl, -prio))] = np.arange(n, dtype=np.int64)
+    ttft_r = np.array([r.slo_ttft for r in ordered])
+    atgt_r = np.array([r.slo_atgt for r in ordered])
+    tagged = bool(np.isfinite(atgt_r).any()) if n else False
+    return rank, ttft_r, atgt_r, tagged
 
 
 def _report_from_arrays(scenario, specs, n_active, arrival, l_real, l_out,
@@ -895,14 +1029,17 @@ def _report_from_arrays(scenario, specs, n_active, arrival, l_real, l_out,
 
 def _chunk_kernel(n: int, W: int, B: int, Q: int, hb: float,
                   gamma: float, ttft: float, atgt: float, policy: str,
-                  batched: bool):
-    key = ("chunk", n, W, B, Q, hb, gamma, ttft, atgt, policy, batched)
+                  batched: bool, edf: bool = False, tagged: bool = False):
+    key = ("chunk", n, W, B, Q, hb, gamma, ttft, atgt, policy, batched,
+           edf, tagged)
     fn = _KERNELS.get(key)
     if fn is None:
-        sim = _make_chunk(n, W, B, Q, hb, gamma, ttft, atgt, policy)
+        sim = _make_chunk(n, W, B, Q, hb, gamma, ttft, atgt, policy,
+                          edf, tagged)
         if batched:
             fn = jax.jit(jax.vmap(sim,
-                                  in_axes=(0, None, None, None, 0, 0, 0, 0)))
+                                  in_axes=(0, None, None, None, 0, 0, 0, 0,
+                                           None, None, None)))
         else:
             fn = jax.jit(sim)
         _KERNELS[key] = fn
@@ -944,6 +1081,7 @@ class _PooledSim:
                                            _managed_scfg)
         from repro.serving.forecast import ManagedPool
 
+        scenario = api.resolve_scenario(scenario)
         self.scenario = scenario
         self.specs0 = check_jax_envelope(scenario)
         topo = scenario.topology
@@ -958,6 +1096,10 @@ class _PooledSim:
         self.trace, self.arrival, self.l_in, self.l_real = \
             _trace_arrays(trace)
         self.n = len(self.trace)
+        self.rank_r, self.ttft_r, self.atgt_r, self.tagged = \
+            _tenant_arrays(self.trace)
+        self.edf = (scenario.tenants is not None
+                    and len(scenario.tenants) > 1 and self.n > 0)
         horizon = (float(self.arrival[-1]) if self.n else 0.0) + tail
         grid = [0.0]
         while grid[-1] < horizon:    # the reference's sequential t += hb
@@ -1363,12 +1505,14 @@ class _PooledSim:
                                  self.hb, self.gamma,
                                  float(self.slo.ttft),
                                  float(self.slo.atgt), self.policy_name,
-                                 batched=False)
+                                 batched=False, edf=self.edf,
+                                 tagged=self.tagged)
 
         def call(kern, st):
             m = self.m
             return kern(st, self.arrival, self.l_in, self.l_real,
-                        m["s_lo"], m["s_tds"], m["s_tf1"], m["s_tpe"])
+                        m["s_lo"], m["s_tds"], m["s_tf1"], m["s_tpe"],
+                        self.rank_r, self.ttft_r, self.atgt_r)
 
         sig = None
         kern = None
@@ -1452,6 +1596,12 @@ def _pooled_report(sim: _PooledSim, writeback: bool):
     rep.requeued = pool.requeued
     rep.moves = 0
     rep.beats = sim.beat        # benchmark side channel (not in row())
+    if writeback and sim.scenario.tenants is not None:
+        from repro.serving.tenants import tenant_attainment, tenant_rows
+        rep.attainment = tenant_attainment(sim.trace)
+        rep.tenant_rows = tenant_rows(sim.trace,
+                                      list(sim.scenario.tenants),
+                                      rep.gpu_cost)
     return rep
 
 
@@ -1467,9 +1617,13 @@ def run_colocated_jax(scenario, seed: Optional[int] = None):
     other engines) and return the ``RunReport``. Also returns the executed
     beat count via the report-side channel ``rep.beats`` attribute used by
     the benchmarks."""
+    from repro.serving import api
+
+    scenario = api.resolve_scenario(scenario)
     specs = check_jax_envelope(scenario)
     trace = scenario.materialize()
     ordered, arrival, l_in, l_real = _trace_arrays(trace)
+    multi = scenario.tenants is not None and len(scenario.tenants) > 1
     if len(ordered) == 0:
         if not _legacy_ok(scenario, specs):
             # pooled fleets still accrue billing/epochs on an empty trace;
@@ -1487,12 +1641,15 @@ def run_colocated_jax(scenario, seed: Optional[int] = None):
         # KV pressure / po2 / managed fleets / spot markets: the chunked
         # kernel with the host-side pool driver
         return _run_pooled(scenario, seed)
+    rank_r, ttft_r, atgt_r, tagged = _tenant_arrays(ordered)
     # x64 is scoped, not a process-global flag: the serving models run in
     # jax's default 32-bit mode and must not see this engine's precision
     with enable_x64():
-        fn = _kernel_for(scenario, specs, trace, batched=False)
+        fn = _kernel_for(scenario, specs, trace, batched=False,
+                         edf=multi, tagged=tagged)
         l_out, tds, t_first, t_fin, beats = (
-            np.asarray(x) for x in fn(arrival, l_in, l_real, len(specs)))
+            np.asarray(x) for x in fn(arrival, l_in, l_real, len(specs),
+                                      rank_r, ttft_r, atgt_r))
     for pos, r in enumerate(ordered):
         r.l_pred = int(l_real[pos])
         r.l_out = int(l_out[pos])
@@ -1506,6 +1663,11 @@ def run_colocated_jax(scenario, seed: Optional[int] = None):
     rep = _report_from_arrays(scenario, specs, len(specs), arrival, l_real,
                               l_out, tds, t_first, t_fin)
     rep.beats = int(beats)      # benchmark side channel (not in row())
+    if scenario.tenants is not None:
+        from repro.serving.tenants import tenant_attainment, tenant_rows
+        rep.attainment = tenant_attainment(ordered)
+        rep.tenant_rows = tenant_rows(ordered, list(scenario.tenants),
+                                      rep.gpu_cost)
     return rep
 
 
@@ -1513,9 +1675,15 @@ def run_candidate_batch(scenarios) -> List:
     """Evaluate a batch of fleet-size candidates of the SAME workload /
     spec / policy in one vmapped compiled call — the whole bracket of
     ``optimize``'s search at once. Returns one ``RunReport`` per scenario
-    (candidate traces are not mutated; the search only reads reports)."""
+    (candidate traces are not mutated; the search only reads reports —
+    which is also why multi-tenant candidates keep the planning-SLO
+    headline attainment and carry no per-tenant rows: ``optimize``
+    evaluates multi-tenant scenarios sequentially instead)."""
+    from repro.serving import api
+
     if not scenarios:
         return []
+    scenarios = [api.resolve_scenario(sc) for sc in scenarios]
     spec_lists = [check_jax_envelope(sc) for sc in scenarios]
     if not all(_legacy_ok(sc, sl)
                for sc, sl in zip(scenarios, spec_lists)):
@@ -1539,12 +1707,16 @@ def run_candidate_batch(scenarios) -> List:
     W_max = max(len(sl) for sl in spec_lists)
     trace = base.materialize()
     _ordered, arrival, l_in, l_real = _trace_arrays(trace)
+    multi = base.tenants is not None and len(base.tenants) > 1
+    rank_r, ttft_r, atgt_r, tagged = _tenant_arrays(_ordered)
     padded = [base_spec] * W_max
     n_active = np.array([len(sl) for sl in spec_lists], dtype=np.int64)
     with enable_x64():
-        fn = _kernel_for(base, padded, trace, batched=True)
+        fn = _kernel_for(base, padded, trace, batched=True,
+                         edf=multi, tagged=tagged)
         l_out, tds, t_first, t_fin, beats = (
-            np.asarray(x) for x in fn(arrival, l_in, l_real, n_active))
+            np.asarray(x) for x in fn(arrival, l_in, l_real, n_active,
+                                      rank_r, ttft_r, atgt_r))
     reps = []
     for i in range(len(scenarios)):
         rep = _report_from_arrays(base, padded, int(n_active[i]), arrival,
@@ -1577,6 +1749,7 @@ def run_policy_candidate_batch(scenarios) -> List:
         and s.gamma == s0.gamma and s.policy_name == s0.policy_name
         and float(s.slo.ttft) == float(s0.slo.ttft)
         and float(s.slo.atgt) == float(s0.slo.atgt)
+        and s.edf == s0.edf and s.tagged == s0.tagged
         for s in sims[1:])
     if not homog:
         # heterogeneous statics cannot share one compiled kernel
@@ -1611,10 +1784,11 @@ def run_policy_candidate_batch(scenarios) -> List:
                                      s0.hb, s0.gamma,
                                      float(s0.slo.ttft),
                                      float(s0.slo.atgt),
-                                     s0.policy_name, batched=True)
+                                     s0.policy_name, batched=True,
+                                     edf=s0.edf, tagged=s0.tagged)
                 out = kern(stb, s0.arrival, s0.l_in, s0.l_real,
                            ops["s_lo"], ops["s_tds"], ops["s_tf1"],
-                           ops["s_tpe"])
+                           ops["s_tpe"], s0.rank_r, s0.ttft_r, s0.atgt_r)
                 return {k: np.asarray(v) for k, v in out.items()}
 
             outs = round_out()

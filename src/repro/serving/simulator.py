@@ -365,7 +365,8 @@ class ColocatedTopology:
 
     def __init__(self, slo: SLO, cfg: SimConfig, pool, rng,
                  predictor: Optional[LengthPredictor] = None,
-                 observer: Optional[Callable] = None, tracking: bool = True):
+                 observer: Optional[Callable] = None, tracking: bool = True,
+                 tenants: Optional[Sequence] = None):
         self.slo = slo
         self.cfg = cfg
         self.pool = pool
@@ -378,6 +379,18 @@ class ColocatedTopology:
         self.finished: List[Request] = []
         self.moves = 0
         self.peak_workers = len(pool.serving())
+        # multi-tenant serving: with >1 tenant the queue is ordered
+        # priority-then-EDF before every placement pass; a single tenant
+        # resolves to the legacy FIFO walk (bit-for-bit the scalar path).
+        # ``restricted`` marks fleets where not every worker may serve
+        # every request (dedicated pools / LoRA-capable workers) — it
+        # filters placement candidates and disables cross-worker
+        # rebalance moves (which do not re-check eligibility).
+        self.tenants = list(tenants) if tenants is not None else None
+        self.edf = self.tenants is not None and len(self.tenants) > 1
+        self.restricted = False
+        self.lora_swaps = 0
+        self._lora: Dict[int, List[str]] = {}   # wid -> resident adapters
 
     def admit(self, r: Request) -> None:
         r.l_pred = self.predictor.predict(r.l_in) if self.predictor \
@@ -402,9 +415,55 @@ class ColocatedTopology:
     def fire(self, t: float, ev) -> None:
         self.requeue(self.pool.on_reclaim(t, ev))
 
+    def _eligible(self, w: WorkerState, r: Request) -> bool:
+        """Dedicated-pool / LoRA placement fence: a worker tagged with
+        ``allowed_tenants`` only serves those tenants, and LoRA-tenant
+        traffic needs a worker with adapter slots."""
+        allowed = getattr(w, "allowed_tenants", None)
+        if allowed is not None and r.tenant not in allowed:
+            return False
+        if self.tenants is not None \
+                and self.tenants[r.tenant].lora is not None \
+                and w.spec.lora_slots <= 0:
+            return False
+        return True
+
+    def _lora_admit(self, w: WorkerState, r: Request, t: float) -> None:
+        """Adapter residency accounting after a LoRA-tenant placement:
+        fault the adapter in (LRU-evicting at ``lora_slots``), charge the
+        worker's KV budget ``lora_overhead`` per resident adapter, and
+        stall the worker ``lora_swap_s`` for the weight fetch (ongoing
+        requests' ATGT clocks burn through the stall, like a prefill)."""
+        adapter = self.tenants[r.tenant].lora if self.tenants else None
+        if adapter is None:
+            return
+        res = self._lora.setdefault(w.id, [])
+        if adapter in res:
+            res.remove(adapter)
+            res.append(adapter)         # LRU touch
+            return
+        spec = w.spec
+        if len(res) >= spec.lora_slots:
+            res.pop(0)
+            w.cfg.kv_capacity += spec.lora_overhead
+        res.append(adapter)
+        w.cfg.kv_capacity -= spec.lora_overhead
+        self.lora_swaps += 1
+        if spec.lora_swap_s > 0.0:
+            sim = self.pool.sims.get(w.id)
+            if sim is not None:
+                sim.t = max(sim.t, t) + spec.lora_swap_s
+            for m in w.ongoing:
+                m.t_decode_spent += spec.lora_swap_s
+
     def _place_one(self, r: Request) -> Optional[WorkerState]:
         workers = self.pool.serving()
         fac = self.pool.factory
+        if self.restricted:
+            # pass a filtered copy: restricted fleets are fixed-size, so
+            # the factory append path is never taken on the copy
+            workers = [w for w in workers if self._eligible(w, r)]
+            fac = None
         if self.cfg.policy == "aladdin":
             return best_fit_place(workers, r, allow_new=fac is not None,
                                   new_worker_factory=fac)
@@ -426,7 +485,13 @@ class ColocatedTopology:
                         self.tracker.on_underrun(
                             r, self.predictor.repredict(r.l_in, r.l_out))
                         w.mark_dirty()
-        # placement
+        # placement — multi-tenant queues order priority-then-EDF first
+        # (stable sort: equal keys keep FIFO/requeue order), so interactive
+        # traffic places ahead of batch tier every beat while unplaced
+        # requests simply stay queued (no starvation under bounded load:
+        # every queued request is retried every beat)
+        if self.edf:
+            self.queued.sort(key=lambda r: (-r.priority, r.deadline))
         still: List[Request] = []
         for r in self.queued:
             w = self._place_one(r)
@@ -437,8 +502,10 @@ class ColocatedTopology:
                 if w.id not in pool.sims:
                     pool.sims[w.id] = SimWorker(w, w.perf, t,
                                                 self.cfg.split_phase)
+                if self.restricted:
+                    self._lora_admit(w, r, t)
         self.queued = still
-        if self.tracking and self.cfg.rebalance \
+        if self.tracking and self.cfg.rebalance and not self.restricted \
                 and self.cfg.policy == "aladdin":
             self.moves += rebalance(pool.serving(), self.tracker)
             self.tracker.decay()

@@ -57,7 +57,33 @@ def clone_trace(trace) -> List[Request]:
     cloned per simulation, instead of implicitly re-sampled via a trace
     factory."""
     return [Request(l_in=r.l_in, l_pred=0, l_real=r.l_real,
-                    arrival=r.arrival) for r in trace]
+                    arrival=r.arrival, tenant=r.tenant,
+                    priority=r.priority, slo_ttft=r.slo_ttft,
+                    slo_atgt=r.slo_atgt) for r in trace]
+
+
+def mixture_trace(tenant_traces) -> List[Request]:
+    """Merge per-tenant arrival streams into one trace, tagging every
+    request with its tenant index.
+
+    ``tenant_traces`` is a sequence of per-tenant request lists (already
+    materialized). Each request's ``tenant`` field is set to its stream's
+    position in ``tenant_traces``; the merged trace is ordered by arrival
+    time with a stable, documented tie-break: at equal arrival times, the
+    lower tenant index comes first, and within one tenant the original
+    stream order is preserved. The merge is a pure reorder of the input
+    objects — deterministic for a given input, so a merged trace replays
+    identically across all three engines and across reseeds of the
+    underlying per-tenant generators."""
+    merged: List[Request] = []
+    for k, trace in enumerate(tenant_traces):
+        for r in trace:
+            r.tenant = k
+            merged.append(r)
+    # sorted() is stable, so equal arrivals keep concatenation order:
+    # the effective key is (arrival, tenant index, within-tenant position)
+    merged.sort(key=lambda r: r.arrival)
+    return merged
 
 
 def generate_trace(cfg: WorkloadConfig,

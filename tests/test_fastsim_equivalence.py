@@ -31,6 +31,7 @@ from repro.core.request import Request
 from repro.core.slo import SLO
 from repro.core.worker_config import WorkerSpec, spot_variant
 from repro.serving import api
+from repro.serving.tenants import materialize_tenants
 from repro.serving.workload import (WorkloadConfig, clone_trace,
                                     generate_trace, preemption_trace)
 
@@ -468,3 +469,167 @@ def test_jax_policy_candidate_batch_matches_singles():
     for th, rep in zip(thetas, batch):
         single = fastsim_jax.run_colocated_jax(mk(th))
         assert rep.row() == single.row()
+
+
+# ---- multi-tenant: EDF admission, tagged constraints, per-tenant rows --------
+
+
+def _solo_tenants(trace, slo=SLO_GRID):
+    # the tenant-form of a scalar scenario: one TenantSpec carrying the
+    # scenario SLO, pre-merged so the test holds the simulated requests
+    tenants = [api.TenantSpec(name="solo", workload=lambda: trace,
+                              slo=slo)]
+    return tenants, materialize_tenants(tenants)
+
+
+def _two_tenants(rate=(2.0, 1.5)):
+    chat = api.TenantSpec(
+        name="chat",
+        workload=lambda: generate_trace(WorkloadConfig(
+            mean_rate=rate[0], duration=20.0, seed=17, tail_frac=0.2,
+            in_mu=4.6, out_mu=4.2, out_sigma=1.0)),
+        slo=SLO(ttft=0.6, atgt=0.060), priority=1, tier="interactive")
+    ev = api.TenantSpec(
+        name="eval",
+        workload=lambda: generate_trace(WorkloadConfig(
+            mean_rate=rate[1], duration=20.0, seed=23, tail_frac=0.3,
+            in_mu=5.0, out_mu=4.8, out_sigma=1.1)),
+        slo=SLO(ttft=5.0, atgt=0.200), priority=0, tier="batch")
+    tenants = [chat, ev]
+    return tenants, materialize_tenants(tenants)
+
+
+def _tenant_scenario(merged, tenants, pools, policy, engine):
+    # merged workload passed explicitly (clone keeps the tenant stamps)
+    # so each engine run mutates a trace the test can inspect
+    return api.Scenario(
+        workload=merged, fleet=api.FleetSpec(pools), tenants=tenants,
+        topology=api.Colocated(policy=policy), scaling=api.FixedScale(),
+        engine=engine)
+
+
+@pytest.mark.parametrize("policy", ["aladdin", "jsq"])
+@pytest.mark.parametrize("kv", ["tight", "crush", "loose"])
+def test_single_tenant_pin_matches_scalar(policy, kv):
+    # Scenario(tenants=[one]) must reproduce the scalar path bit-for-bit:
+    # the tagged per-request budgets all equal the planning SLO, so the
+    # constraint arithmetic is float-identical even though every request
+    # carries finite budgets through the tenant plumbing
+    trace = generate_trace(WorkloadConfig(
+        mean_rate=3.0, duration=20.0, seed=11, tail_frac=0.3,
+        in_mu=4.6, out_mu=4.4, out_sigma=1.0))
+    pools = [api.PoolSpec(_spec(kv), 2)]
+    tenants, merged = _solo_tenants(trace)
+    for engine in ("reference", "vectorized"):
+        base_t = clone_trace(trace)
+        base = api.run(_scenario(base_t, pools, policy, engine))
+        ten_t = clone_trace(merged)
+        ten = api.run(_tenant_scenario(ten_t, tenants, pools, policy,
+                                       engine))
+        _assert_bitwise(base, ten, base_t, ten_t)
+        assert len(ten.tenant_rows) == 1
+        assert ten.tenant_rows[0]["finished"] == base.finished
+
+
+@pytest.mark.parametrize("policy", ["aladdin", "jsq"])
+def test_single_tenant_pin_jax(policy):
+    # the compiled core: the tenant form flips the tagged/EDF static flags
+    # off for a single tenant, so the graph — and the floats — are the
+    # scalar path's exactly, on both the legacy and the chunked kernel
+    pytest.importorskip("jax")
+    trace = generate_trace(WorkloadConfig(
+        mean_rate=3.0, duration=20.0, seed=11, tail_frac=0.3,
+        in_mu=4.6, out_mu=4.4, out_sigma=1.0))
+    tenants, merged = _solo_tenants(trace)
+    for spec in (_jax_spec(), _spec("tight")):
+        pools = [api.PoolSpec(spec, 2)]
+        base_t = clone_trace(trace)
+        base = api.run(_scenario(base_t, pools, policy, "jax"))
+        ten_t = clone_trace(merged)
+        ten = api.run(_tenant_scenario(ten_t, tenants, pools, policy,
+                                       "jax"))
+        _assert_bitwise(base, ten, base_t, ten_t)
+
+
+@pytest.mark.parametrize("policy", ["aladdin", "jsq", "po2"])
+@pytest.mark.parametrize("kv", ["tight", "crush", "loose"])
+def test_multi_tenant_vectorized_matches_reference(policy, kv):
+    # two tenants with different SLOs and priorities: EDF queue ordering
+    # and per-request tagged constraint budgets, still bit-for-bit between
+    # the reference loop and the numpy core — per-tenant rows included
+    tenants, merged = _two_tenants()
+    pools = [api.PoolSpec(_spec(kv), 2)]
+    ref_t, vec_t = clone_trace(merged), clone_trace(merged)
+    ref = api.run(_tenant_scenario(ref_t, tenants, pools, policy,
+                                   "reference"))
+    vec = api.run(_tenant_scenario(vec_t, tenants, pools, policy,
+                                   "vectorized"))
+    assert ref.finished > 0
+    _assert_bitwise(ref, vec, ref_t, vec_t)
+    assert [r["tenant"] for r in ref.tenant_rows] == ["chat", "eval"]
+    for rr, vr in zip(ref.tenant_rows, vec.tenant_rows):
+        for k in rr:
+            if isinstance(rr[k], float) and np.isnan(rr[k]):
+                assert np.isnan(vr[k]), k
+            else:
+                assert rr[k] == vr[k], k
+
+
+@pytest.mark.parametrize("policy", ["aladdin", "jsq"])
+def test_multi_tenant_jax_matches_reference(policy):
+    # the compiled core with the EDF + tagged static flags on, against the
+    # reference: the legacy whole-trace kernel (inert KV) and the chunked
+    # kernel (live KV) both replay the merged two-tenant trace within the
+    # usual last-ulp tolerance, integers exact
+    pytest.importorskip("jax")
+    from repro.serving import fastsim_jax
+    tenants, merged = _two_tenants()
+    for spec in (_jax_spec(), _spec("tight")):
+        pools = [api.PoolSpec(spec, 2)]
+        sc = _tenant_scenario(clone_trace(merged), tenants, pools,
+                              policy, "jax")
+        want_legacy = spec.perf.kv.h == 0.0
+        assert fastsim_jax._legacy_ok(
+            api.resolve_scenario(sc),
+            [p.spec for p in pools for _ in range(p.count)]) \
+            == want_legacy
+        ref_t, jx_t = clone_trace(merged), clone_trace(merged)
+        ref = api.run(_tenant_scenario(ref_t, tenants, pools, policy,
+                                       "reference"))
+        jx = api.run(_tenant_scenario(jx_t, tenants, pools, policy,
+                                      "jax"))
+        key = lambda r: r.arrival
+        for a, b in zip(sorted(ref_t, key=key), sorted(jx_t, key=key)):
+            assert a.l_out == b.l_out
+            assert a.tenant == b.tenant
+            assert (a.t_finish is None) == (b.t_finish is None)
+            if a.t_first_token is not None:
+                assert b.t_first_token == pytest.approx(
+                    a.t_first_token, rel=1e-12)
+            if a.t_finish is not None:
+                assert b.t_finish == pytest.approx(a.t_finish, rel=1e-12)
+        _assert_close_report(ref, jx)
+        for rr, jr in zip(ref.tenant_rows, jx.tenant_rows):
+            for k in rr:
+                if isinstance(rr[k], float):
+                    if np.isnan(rr[k]):
+                        assert np.isnan(jr[k]), k
+                    else:
+                        assert jr[k] == pytest.approx(rr[k], rel=1e-9), k
+                else:
+                    assert rr[k] == jr[k], k
+
+
+def test_multi_tenant_priority_bites():
+    # under contention the high-priority interactive tenant must beat the
+    # batch tenant's queueing delay — the EDF admission order is not a
+    # no-op on a congested fleet
+    tenants, merged = _two_tenants(rate=(4.0, 4.0))
+    pools = [api.PoolSpec(_spec("tight"), 1)]
+    t = clone_trace(merged)
+    rep = api.run(_tenant_scenario(t, tenants, pools, "aladdin",
+                                   "vectorized"))
+    rows = {r["tenant"]: r for r in rep.tenant_rows}
+    assert rep.p99_ttft > SLO_GRID.ttft          # fleet is congested
+    assert rows["chat"]["mean_queue_delay"] \
+        < rows["eval"]["mean_queue_delay"]

@@ -1,0 +1,320 @@
+"""Multi-tenant serving: TenantSpec validation, trace merging, dedicated
+pools, LoRA adapter accounting, the joint placement search, and the
+hypothesis-backed behavioral properties of EDF admission (token
+conservation, no batch-tier starvation under bounded load, interactive
+attainment monotone in priority)."""
+import dataclasses
+
+import pytest
+
+from repro.core.perf_model import (DecodeModel, KVModel, PerfModel,
+                                   PrefillModel)
+from repro.core.request import Request
+from repro.core.slo import SLO
+from repro.core.worker_config import WorkerSpec
+from repro.serving import api
+from repro.serving.tenants import (materialize_tenants, planning_slo,
+                                   tenant_attainment)
+from repro.serving.workload import (WorkloadConfig, clone_trace,
+                                    generate_trace, mixture_trace)
+
+
+def _spec(**over) -> WorkerSpec:
+    perf = PerfModel(kv=KVModel(h=0.0, j=0.0),
+                     prefill=PrefillModel(k1=2.2e-5, c1=8e-3),
+                     decode=DecodeModel(k2=6e-6, c2=3.5e-4, c3=9e-3))
+    kw = dict(perf=perf, kv_capacity=1e18, max_batch=24,
+              n_accelerators=2, name="mt")
+    kw.update(over)
+    return WorkerSpec(**kw)
+
+
+def _wl(seed, rate=2.0, duration=20.0, **over):
+    kw = dict(mean_rate=rate, duration=duration, seed=seed, tail_frac=0.2,
+              in_mu=4.6, out_mu=4.2, out_sigma=1.0)
+    kw.update(over)
+    return lambda: generate_trace(WorkloadConfig(**kw))
+
+
+def _pair(chat_priority=1, chat_rate=2.0, eval_rate=1.5, lora=(None, None),
+          duration=20.0):
+    return [
+        api.TenantSpec(name="chat", workload=_wl(17, chat_rate, duration),
+                       slo=SLO(ttft=0.6, atgt=0.060),
+                       priority=chat_priority, lora=lora[0],
+                       tier="interactive"),
+        api.TenantSpec(name="eval", workload=_wl(23, eval_rate, duration),
+                       slo=SLO(ttft=5.0, atgt=0.200), priority=0,
+                       lora=lora[1], tier="batch"),
+    ]
+
+
+def _sc(tenants, pools, engine="reference", **over):
+    kw = dict(fleet=api.FleetSpec(pools), tenants=tenants,
+              topology=api.Colocated(policy="aladdin"),
+              scaling=api.FixedScale(), engine=engine)
+    kw.update(over)
+    return api.Scenario(**kw)
+
+
+# ---- the merge and the planning SLO ------------------------------------------
+
+
+def test_mixture_trace_stable_tie_break():
+    # equal arrivals: lower tenant index first, then within-tenant stream
+    # order — the documented total order the engines all replay
+    t0 = [Request(l_in=8, l_pred=0, l_real=4, arrival=a)
+          for a in (0.5, 1.0, 1.0)]
+    t1 = [Request(l_in=8, l_pred=0, l_real=4, arrival=a)
+          for a in (1.0, 0.5)]
+    merged = mixture_trace([t0, t1])
+    assert merged == [t0[0], t1[1], t0[1], t0[2], t1[0]]
+    assert [r.tenant for r in merged] == [0, 1, 0, 0, 1]
+    # pure reorder: same objects, each exactly once
+    assert sorted(map(id, merged)) == sorted(map(id, t0 + t1))
+
+
+def test_planning_slo_is_strictest_per_axis():
+    tens = [api.TenantSpec(name="a", workload=_wl(1),
+                           slo=SLO(ttft=0.5, atgt=0.2)),
+            api.TenantSpec(name="b", workload=_wl(2),
+                           slo=SLO(ttft=2.0, atgt=0.05))]
+    assert planning_slo(tens) == SLO(ttft=0.5, atgt=0.05)
+    assert planning_slo(tens[:1]) == tens[0].slo
+
+
+def test_materialize_tenants_stamps_budgets():
+    tens = _pair()
+    merged = materialize_tenants(tens)
+    assert all(r.arrival <= s.arrival for r, s in zip(merged, merged[1:]))
+    for r in merged:
+        spec = tens[r.tenant]
+        assert r.priority == spec.priority
+        assert r.slo_ttft == spec.slo.ttft
+        assert r.slo_atgt == spec.slo.atgt
+        assert r.deadline == r.arrival + spec.slo.ttft
+    assert {r.tenant for r in merged} == {0, 1}
+
+
+# ---- validation --------------------------------------------------------------
+
+
+def test_tenant_scenario_validation():
+    pools = [api.PoolSpec(_spec(), 2)]
+    with pytest.raises(ValueError, match="non-empty"):
+        api.run(_sc([], pools))
+    with pytest.raises(ValueError, match="Colocated"):
+        api.run(_sc(_pair(), pools, topology=api.Disaggregated()))
+    with pytest.raises(ValueError, match="unique"):
+        api.run(_sc([_pair()[0], _pair()[0]], pools, engine="vectorized"))
+    with pytest.raises(ValueError, match="tier"):
+        bad = dataclasses.replace(_pair()[0], tier="offline")
+        api.run(_sc([bad, _pair()[1]], pools, engine="vectorized"))
+    with pytest.raises(ValueError, match="positive"):
+        bad = dataclasses.replace(_pair()[0], slo=SLO(ttft=0.0, atgt=0.1))
+        api.run(_sc([bad, _pair()[1]], pools, engine="vectorized"))
+    with pytest.raises(ValueError, match="attain_target"):
+        bad = dataclasses.replace(_pair()[0], attain_target=1.5)
+        api.run(_sc([bad, _pair()[1]], pools, engine="vectorized"))
+    with pytest.raises(ValueError, match="unknown"):
+        api.run(_sc(_pair(), [api.PoolSpec(_spec(), 2,
+                                           tenants=["nobody"])]))
+    with pytest.raises(ValueError, match="Scenario.tenants"):
+        api.run(api.Scenario(
+            workload=_wl(3), fleet=api.FleetSpec(
+                [api.PoolSpec(_spec(), 2, tenants=["chat"])]),
+            slo=SLO(ttft=1.0, atgt=0.1), scaling=api.FixedScale()))
+    with pytest.raises(ValueError, match="FixedScale"):
+        api.run(_sc(_pair(lora=("ad-a", None)), pools,
+                    scaling=api.Reactive(interval=5.0, min_workers=1)))
+
+
+@pytest.mark.parametrize("engine", ["vectorized", "jax"])
+def test_compiled_engines_reject_restricted_fleets(engine):
+    if engine == "jax":
+        pytest.importorskip("jax")
+    with pytest.raises(ValueError, match="[Ll]o[Rr][Aa]"):
+        api.run(_sc(_pair(lora=("ad-a", None)),
+                    [api.PoolSpec(_spec(lora_slots=4), 2)], engine=engine))
+    with pytest.raises(ValueError, match="dedicated"):
+        api.run(_sc(_pair(), [api.PoolSpec(_spec(), 1, tenants=["chat"]),
+                              api.PoolSpec(_spec(), 1)], engine=engine))
+
+
+# ---- dedicated pools and LoRA residency (reference engine) -------------------
+
+
+def test_dedicated_pool_fences_placement():
+    # a fleet whose only pool is dedicated to chat: eval traffic has no
+    # eligible worker and starves; chat is unaffected
+    tens = _pair()
+    rep = api.run(_sc(tens, [api.PoolSpec(_spec(), 2,
+                                          tenants=["chat"])]))
+    rows = {r["tenant"]: r for r in rep.tenant_rows}
+    assert rows["eval"]["finished"] == 0
+    assert rows["chat"]["finished"] == rows["chat"]["total"] > 0
+    # give eval its own pool and both classes drain
+    rep2 = api.run(_sc(tens, [
+        api.PoolSpec(_spec(), 2, tenants=["chat"]),
+        api.PoolSpec(_spec(), 2, tenants=["eval"])]))
+    rows2 = {r["tenant"]: r for r in rep2.tenant_rows}
+    assert rows2["chat"]["finished"] == rows2["chat"]["total"]
+    assert rows2["eval"]["finished"] == rows2["eval"]["total"] > 0
+
+
+def test_lora_fence_and_swap_accounting():
+    # two LoRA tenants multiplexed on one single-slot worker: every
+    # cross-tenant placement faults the other adapter in (LRU eviction),
+    # so swaps well exceed the two cold loads; a two-slot worker loads
+    # each adapter exactly once
+    tens = _pair(lora=("ad-chat", "ad-eval"), chat_rate=1.5, eval_rate=1.5)
+    one_slot = _spec(lora_slots=1, lora_overhead=50.0, lora_swap_s=0.002)
+    rep = api.run(_sc(tens, [api.PoolSpec(one_slot, 1)]))
+    assert rep.lora_swaps > 2
+    assert rep.row()["lora_swaps"] == rep.lora_swaps
+    two_slot = _spec(lora_slots=2, lora_overhead=50.0, lora_swap_s=0.002)
+    rep2 = api.run(_sc(tens, [api.PoolSpec(two_slot, 1)]))
+    assert rep2.lora_swaps == 2
+    # adapter-less workers are ineligible for LoRA traffic: a fleet with
+    # no slots anywhere starves both tenants
+    rep3 = api.run(_sc(tens, [api.PoolSpec(_spec(lora_slots=0), 2)]))
+    assert rep3.finished == 0
+
+
+def test_lora_swap_stall_charges_atgt():
+    tens = _pair(lora=("ad-chat", "ad-eval"), chat_rate=1.5, eval_rate=1.5)
+    mk = lambda swap_s: _sc(
+        tens, [api.PoolSpec(_spec(lora_slots=1, lora_overhead=50.0,
+                                  lora_swap_s=swap_s), 1)])
+    fast = api.run(mk(0.0))
+    slow = api.run(mk(0.05))
+    assert slow.mean_atgt > fast.mean_atgt
+
+
+# ---- the joint placement search ----------------------------------------------
+
+
+def test_optimize_tenants_joint_search():
+    tens = _pair()
+    plan = api.optimize(_sc(tens, [api.PoolSpec(_spec(), 1)],
+                            engine="vectorized"),
+                        attain_target=0.95, lo=1, hi=16)
+    assert plan.feasible
+    assert plan.n_workers >= 1
+    assert plan.cost == plan.report.gpu_cost
+    assert "pools" in plan.params          # the winning partition
+    rows = {r["tenant"]: r for r in plan.report.tenant_rows}
+    assert rows["chat"]["attainment"] >= 0.95
+    assert rows["eval"]["attainment"] >= 0.95
+    # per-tenant attain_target overrides the blanket target
+    tight = [dataclasses.replace(tens[0], attain_target=0.99), tens[1]]
+    plan2 = api.optimize(_sc(tight, [api.PoolSpec(_spec(), 1)],
+                             engine="vectorized"),
+                         attain_target=0.9, lo=1, hi=16)
+    assert plan2.feasible
+    rows2 = {r["tenant"]: r for r in plan2.report.tenant_rows}
+    assert rows2["chat"]["attainment"] >= 0.99
+
+
+def test_optimize_single_tenant_matches_scalar():
+    # tenants=[one] routes through the scalar optimizer: same worker
+    # count as the equivalent scalar scenario
+    slo = SLO(ttft=1.0, atgt=0.1)
+    wl = _wl(3, rate=4.0)
+    trace = wl()
+    scalar = api.optimize(api.Scenario(
+        workload=clone_trace(trace),
+        fleet=api.FleetSpec([api.PoolSpec(_spec(), 1)]), slo=slo,
+        topology=api.Colocated(policy="aladdin"),
+        scaling=api.FixedScale(), engine="vectorized"),
+        attain_target=0.95, lo=1, hi=16)
+    solo = api.optimize(_sc(
+        [api.TenantSpec(name="solo", workload=lambda: clone_trace(trace),
+                        slo=slo)],
+        [api.PoolSpec(_spec(), 1)], engine="vectorized"),
+        attain_target=0.95, lo=1, hi=16)
+    assert solo.feasible and scalar.feasible
+    assert solo.n_workers == scalar.n_workers
+
+
+# ---- behavioral properties ---------------------------------------------------
+#
+# Property-based when hypothesis is installed (derandomized so CI is
+# stable); otherwise the same properties run over a fixed seed set — the
+# image this repo targets does not ship hypothesis, and the properties
+# are worth checking either way.
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _property_seeds(fn):
+    if HAVE_HYPOTHESIS:
+        return settings(max_examples=12, deadline=None, derandomize=True)(
+            given(seed=st.integers(min_value=0, max_value=10**6))(fn))
+    return pytest.mark.parametrize(
+        "seed", [0, 7, 101, 5552, 90210, 424242])(fn)
+
+
+def _seeded_pair(seed, chat_priority=1, rate=2.0):
+    return [
+        api.TenantSpec(name="chat", workload=_wl(seed, rate),
+                       slo=SLO(ttft=0.6, atgt=0.060),
+                       priority=chat_priority),
+        api.TenantSpec(name="eval", workload=_wl(seed + 1000, rate),
+                       slo=SLO(ttft=5.0, atgt=0.200), priority=0,
+                       tier="batch"),
+    ]
+
+
+@_property_seeds
+def test_edf_conserves_tokens(seed):
+    # the priority/EDF reorder is an ordering, not a scheduler with loss:
+    # every request appears once in exactly one terminal state, finished
+    # requests generated exactly their ground-truth lengths, and the
+    # per-tenant rows partition the fleet totals
+    tens = _seeded_pair(seed, rate=3.0)
+    merged = materialize_tenants(tens)
+    trace = clone_trace(merged)
+    rep = api.run(_sc(tens, [api.PoolSpec(_spec(max_batch=8), 1)],
+                      engine="vectorized", workload=trace))
+    assert rep.total == len(trace)
+    for r in trace:
+        if r.t_finish is not None:
+            assert r.l_out == r.l_real
+        else:
+            assert 0 <= r.l_out <= r.l_real
+    assert sum(row["finished"] for row in rep.tenant_rows) == rep.finished
+    assert sum(row["total"] for row in rep.tenant_rows) == rep.total
+    assert rep.attainment == pytest.approx(tenant_attainment(trace))
+
+
+@_property_seeds
+def test_batch_tier_not_starved_under_bounded_load(seed):
+    # bounded load (fleet capacity comfortably above the offered rate):
+    # priority admission must not starve the batch tier — every eval
+    # request still finishes
+    tens = _seeded_pair(seed, rate=1.5)
+    rep = api.run(_sc(tens, [api.PoolSpec(_spec(), 2)],
+                      engine="vectorized"))
+    rows = {r["tenant"]: r for r in rep.tenant_rows}
+    assert rows["eval"]["total"] > 0
+    assert rows["eval"]["finished"] == rows["eval"]["total"]
+
+
+@_property_seeds
+def test_interactive_attainment_monotone_in_priority(seed):
+    # raising the interactive tenant's priority (all else equal, same
+    # arrivals) never hurts its own attainment: priority 2 places chat
+    # strictly ahead of priority-0 ties in the EDF order
+    def attain(prio):
+        tens = _seeded_pair(seed, chat_priority=prio, rate=3.5)
+        rep = api.run(_sc(tens, [api.PoolSpec(_spec(max_batch=8), 1)],
+                          engine="vectorized"))
+        return {r["tenant"]: r["attainment"] for r in rep.tenant_rows}
+
+    lo, hi = attain(0), attain(2)
+    assert hi["chat"] >= lo["chat"]
