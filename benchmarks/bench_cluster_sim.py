@@ -45,10 +45,12 @@ from repro.serving.forecast import (ForecastConfig, ForecastPolicy,
 from repro.serving.length_predictor import LengthPredictor
 from repro.serving.simulator import (SimConfig, min_workers_for_slo,
                                      simulate)
-from repro.serving.workload import (PreemptionEvent, WorkloadConfig,
-                                    burst_trace, diurnal_trace,
+from repro.serving.workload import (PreemptionEvent, SessionSpec,
+                                    WorkloadConfig, burst_trace,
+                                    clone_trace, diurnal_trace,
                                     drifting_diurnal_trace, generate_trace,
-                                    preemption_trace, sample_lengths)
+                                    preemption_trace, sample_lengths,
+                                    session_trace)
 
 MODEL = "llama2-70b"
 ATTAIN = 0.98
@@ -898,11 +900,89 @@ def run_tenants(verbose: bool = True, duration: float = 120.0,
     return rows
 
 
+def run_sessions(verbose: bool = True, duration: float = 120.0,
+                 rate: float = 1.2, seed: int = 31, hi: int = 14,
+                 notice: float = 45.0,
+                 events=((90.0, 0.5), (220.0, 0.5))) -> List[Dict]:
+    """Multi-turn sessions: sticky prefix-cache routing vs affinity-blind
+    placement, priced at equal SLO attainment (reference engine only —
+    the compiled cores reject session traces).
+
+    Every later turn of a session re-submits the whole conversation; a
+    worker still holding that prefix in its KV pages re-prefills only the
+    new tokens. ``optimize`` sizes the minimum fleet for >= 0.99
+    attainment under each router: sticky must be strictly cheaper in
+    GPU-seconds. A second pair of rows replays the same trace under spot
+    reclaim events (notice-window drains, which vaporize the drained
+    workers' caches): returning turns repay full prefills wherever their
+    home died, so the hazard narrows the sticky-vs-blind gap — the
+    headline ``sessions_saving`` row records both gaps."""
+    arch = get_arch(MODEL)
+    slo = PAPER_SLOS[MODEL]
+    spec = make_worker_spec(arch, A100_80G, slo, mean_context=450.0)
+    sess = SessionSpec(mean_rate=rate, duration=duration, seed=seed)
+    trace = session_trace(sess)
+    horizon = max(r.arrival for r in trace)   # think times stretch arrivals
+    # reclaimable twin at the on-demand price: the hazard makes it
+    # market-eligible without confounding the cost comparison
+    rspec = dataclasses.replace(spec, name=f"{spec.name}-reclaim",
+                                preempt_hazard=1.0 / 600.0)
+    evs = [PreemptionEvent(t=t, frac=f) for t, f in events]
+
+    def mk(router, market=None, pspec=spec):
+        return Scenario(workload=lambda: clone_trace(trace),
+                        fleet=FleetSpec([PoolSpec(pspec, 1)]), slo=slo,
+                        topology=Colocated(router=router),
+                        scaling=FixedScale(), market=market, seed=seed)
+
+    rows: List[Dict] = []
+    cost = {}
+    for hazard in (False, True):
+        for router in ("blind", "sticky"):
+            market = SpotMarket(rspec, evs, notice_s=notice) \
+                if hazard else None
+            plan = optimize(mk(router, market,
+                               rspec if hazard else spec),
+                            attain_target=0.99, lo=1, hi=hi)
+            assert plan.feasible, f"sessions {router} hazard={hazard}"
+            rep = plan.report
+            tag = f"{router}_hazard" if hazard else router
+            cost[tag] = plan.cost
+            rows.append({
+                "name": f"sessions_{tag}", "us_per_call": 0.0,
+                "scenario": "sessions", "policy": router,
+                "gpu_cost": plan.cost, "attainment": rep.attainment,
+                "derived": (f"n_workers={plan.n_workers};"
+                            f"gpu_seconds={plan.cost * horizon:.0f};"
+                            f"hit_rate={rep.cache_hit_rate:.3f};"
+                            f"evictions={rep.prefix_evictions};"
+                            f"drained={rep.drained_ok};"
+                            f"killed={rep.preempted_workers};"
+                            f"attain={rep.attainment:.4f}")})
+    gap0 = cost["blind"] - cost["sticky"]
+    gap_h = cost["blind_hazard"] - cost["sticky_hazard"]
+    assert gap0 > 0, "sticky must be strictly cheaper without hazard"
+    assert gap_h <= gap0, "reclaim hazard must narrow the sticky gap"
+    rows.append({
+        "name": "sessions_saving", "us_per_call": 0.0,
+        "scenario": "sessions", "gpu_cost": cost["sticky"],
+        "attainment": None,
+        "derived": (f"gap_gpu={gap0:.0f};gap_gpu_hazard={gap_h:.0f};"
+                    f"gap_gpu_seconds={gap0 * horizon:.0f};"
+                    f"sessions={len({r.session_id for r in trace})};"
+                    f"turns={len(trace)};attain_target=0.99")})
+    if verbose:
+        for row in rows:
+            print(f"{row['name']},{row['gpu_cost']},{row['derived']}")
+    _write_bench("sessions", rows)
+    return rows
+
+
 SCENARIOS = {"fig": run, "hetero": run_hetero, "disagg": run_disagg,
              "hot_loop": run_hot_loop, "scale": run_scale,
              "burst": run_burst, "forecast": run_forecast, "spot": run_spot,
              "disagg_spot": run_disagg_spot, "feedback": run_feedback,
-             "tenants": run_tenants}
+             "tenants": run_tenants, "sessions": run_sessions}
 
 # shrunken per-scenario parameters for the CI canary (--smoke)
 SMOKE_PARAMS = {
@@ -924,6 +1004,8 @@ SMOKE_PARAMS = {
                      engine_duration=60.0),
     "tenants": dict(duration=40.0, period=20.0, rates=(3.0, 2.0, 1.5),
                     hi=6),
+    "sessions": dict(duration=60.0, rate=1.2, notice=30.0,
+                     events=((45.0, 0.5), (130.0, 0.5))),
 }
 
 

@@ -27,9 +27,13 @@ VALIDATOR_RE = re.compile(r"^check_\w+_envelope$")
 # so their fields never reach a compiled core), and the multi-tenant
 # TenantSpec (serving/tenants.py) whose per-class knobs feed the merged
 # trace the compiled cores replay
-ENFORCED = ("Scenario", "Colocated", "FixedScale", "TenantSpec")
+# and the multi-turn SessionSpec (serving/workload.py) whose session
+# shape drives the prefix-cache discount the compiled cores cannot price
+ENFORCED = ("Scenario", "Colocated", "FixedScale", "TenantSpec",
+            "SessionSpec")
 # the modules whose ENFORCED dataclass definitions are scanned
-ENFORCED_MODULES = ("serving/api.py", "serving/tenants.py")
+ENFORCED_MODULES = ("serving/api.py", "serving/tenants.py",
+                    "serving/workload.py")
 
 
 def _validator_reads(project: Project) -> Set[str]:

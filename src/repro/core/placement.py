@@ -135,8 +135,12 @@ class WorkerState:
         return p.k1 * total_new + p.c1   # scalar Eq. 2 (hot path: no numpy)
 
     def _constraint_c(self, reqs: Sequence[Request]) -> bool:
-        total_new = sum(r.l_in for r in self.new_batch) + \
-            sum(r.l_in for r in reqs)
+        # a prefix-cache hit (cached_len > 0, granted on THIS worker) only
+        # prefills the new tokens — the TTFT/preemption budgets price that
+        # shorter prefill. cached_len == 0 (every single-shot request)
+        # leaves the integer sum, and hence the float image, untouched.
+        total_new = sum(r.l_in - r.cached_len for r in self.new_batch) + \
+            sum(r.l_in - r.cached_len for r in reqs)
         if self._tagged(reqs):
             # the joint prefill delays every new-batch member, so it must
             # fit the tightest TTFT budget among them and the candidates
@@ -163,8 +167,8 @@ class WorkerState:
         else:
             slack = min(self.slo.atgt * max(r.l_out - 1, 0)
                         - r.t_decode_spent for r in self.ongoing)
-        total_new = sum(r.l_in for r in self.new_batch) + \
-            sum(r.l_in for r in reqs)
+        total_new = sum(r.l_in - r.cached_len for r in self.new_batch) + \
+            sum(r.l_in - r.cached_len for r in reqs)
         return self._prefill_time(total_new) <= \
             self.cfg.theta * max(slack, 0.0)
 
@@ -240,6 +244,7 @@ class WorkerState:
         self._wctx_now()
         self.new_batch.remove(r)
         r.worker = None
+        r.cached_len = 0    # a prefix-cache grant is void off this worker
         self._wctx -= r.l_in + self.cfg.gamma * r.l_pred
         self._wctx_key = (len(self.ongoing), len(self.new_batch))
 

@@ -85,6 +85,12 @@ def rebalance(workers: List[WorkerState], tracker: ErrorTracker,
                     continue
                 moved = False
                 for r in list(src.new_batch):
+                    if r.cached_len > 0:
+                        # a prefix-cache grant is only redeemable on the
+                        # worker holding the blocks: moving the request
+                        # would both void the discount and let dst's
+                        # feasibility check see a prefill dst cannot price
+                        continue
                     k2s, c2s = coef[src.id]
                     k2d, c2d = coef[dst.id]
                     new_src = errs[src.id] - (k2s * r.l_pred + c2s)

@@ -53,6 +53,19 @@ class Request:
     priority: int = 0
     slo_ttft: float = math.inf             # tenant TTFT budget, seconds
     slo_atgt: float = math.inf             # tenant ATGT budget, s/token
+    # multi-turn sessions: which conversation this request is a turn of
+    # (``-1`` = a single-shot request outside any session), its turn index,
+    # and the cacheable-prefix potential — the previous turn's full context
+    # (prompt + generated), which a worker holding that KV can skip
+    # re-prefilling. ``cached_len`` is the *granted* reuse: stamped at
+    # placement from the chosen worker's prefix cache, consumed by the
+    # first prefill, and zeroed on any requeue/move (the grant is only
+    # valid on the worker that holds the blocks). All four default to the
+    # neutral values, so single-shot traces are arithmetically untouched.
+    session_id: int = -1
+    turn: int = 0
+    prefix_len: int = 0                    # cacheable prefix, tokens
+    cached_len: int = 0                    # granted prefix reuse, tokens
 
     # ---- derived ------------------------------------------------------------
     @property

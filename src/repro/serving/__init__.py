@@ -29,7 +29,9 @@ from repro.serving.workload import (PreemptionEvent, WorkloadConfig,  # noqa: F4
                                     drifting_diurnal_rate_fn,
                                     drifting_diurnal_trace, generate_trace,
                                     mixture_trace, nonhomogeneous_trace,
-                                    preemption_trace, sample_lengths)
+                                    preemption_trace, sample_lengths,
+                                    session_trace)
+from repro.serving.workload import SessionSpec                       # noqa: F401
 
 # The documented public surface (README "Scenario API" + ROADMAP PR-4/5).
 __all__ = [
@@ -53,7 +55,7 @@ __all__ = [
     "burst_trace", "diurnal_trace", "diurnal_rate_fn",
     "drifting_diurnal_trace", "drifting_diurnal_rate_fn",
     "preemption_trace", "PreemptionEvent", "sample_lengths", "clone_trace",
-    "mixture_trace",
+    "mixture_trace", "SessionSpec", "session_trace",
     # engine + cluster + prediction
     "EngineConfig", "PagedEngine", "ClusterConfig", "ServingCluster",
     "LengthPredictor",

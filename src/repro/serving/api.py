@@ -98,7 +98,17 @@ class FleetSpec:
 class Colocated:
     """Single-tier topology: prefill and decode share every worker
     (the classic ``simulate`` world, including split_phase decode-only
-    fleets for Fig. 12)."""
+    fleets for Fig. 12).
+
+    Multi-turn sessions (``workload.session_trace``) add two decisions:
+    ``router`` — ``"sticky"`` prefers each session's previous worker while
+    it passes every placement constraint (falling through to ``policy``
+    otherwise), ``"blind"`` ignores affinity — and ``prefix_cache`` —
+    ``"lru"`` lets workers keep finished session contexts in spare KV so a
+    returning turn prefills only its new tokens, ``"off"`` disables reuse.
+    ``cache_tokens`` caps the per-worker cache footprint (None = spare-KV
+    pressure only). Single-shot traces are untouched by all three knobs;
+    the compiled cores reject session scenarios (reference engine only)."""
     heartbeat: float = 0.25
     policy: str = "aladdin"            # aladdin | jsq | po2
     split_phase: bool = False
@@ -106,6 +116,9 @@ class Colocated:
     gamma: float = 0.5
     theta: float = 0.9
     max_batch: int = 128
+    router: str = "blind"              # blind | sticky (session affinity)
+    prefix_cache: str = "lru"          # lru | off (session KV reuse)
+    cache_tokens: Optional[int] = None  # per-worker cache cap, tokens
 
 
 @dataclasses.dataclass
@@ -335,6 +348,12 @@ class RunReport:
     drained_ok: int = 0                # reclaims that drained in the notice
     requeued: int = 0
     lora_swaps: int = 0                # adapter fault-ins (LoRA tenants)
+    # multi-turn sessions: prefix-cache effectiveness. hit_rate is over
+    # cacheable lookups (turns with a prior context; turn-0 requests have
+    # nothing to reuse and are not counted); evictions count entries
+    # dropped to capacity pressure, drain retirement or spot vaporization.
+    cache_hit_rate: float = 0.0
+    prefix_evictions: int = 0
     epochs: Dict[str, List[EpochStat]] = dataclasses.field(
         default_factory=dict)
     # per-tenant breakdown (multi-tenant scenarios): attainment vs the
@@ -490,7 +509,9 @@ def _run_colocated(sc: Scenario, seed: int) -> RunReport:
                     split_phase=topo_cfg.split_phase,
                     rebalance=topo_cfg.rebalance, gamma=topo_cfg.gamma,
                     theta=topo_cfg.theta, max_batch=topo_cfg.max_batch,
-                    seed=seed)
+                    seed=seed, router=topo_cfg.router,
+                    prefix_cache=topo_cfg.prefix_cache,
+                    cache_tokens=topo_cfg.cache_tokens)
     rng = np.random.default_rng(seed)
     pools = sc.fleet.for_role("serve")
     if not pools:
@@ -567,7 +588,11 @@ def _run_colocated(sc: Scenario, seed: int) -> RunReport:
 
         def on_kill(w):
             sim = sims.pop(w.id)
+            if sim.cache is not None:
+                sim.cache.vaporize()    # cached prefixes die with the worker
             lost = w.ongoing + w.new_batch + sim.preempted
+            for r in lost:
+                r.cached_len = 0        # granted reuse is void off-worker
             w.ongoing.clear()
             w.new_batch.clear()
             w.mark_dirty()
@@ -612,6 +637,8 @@ def _run_colocated(sc: Scenario, seed: int) -> RunReport:
     rep.preempted_workers = pool.killed
     rep.drained_ok = pool.drained_ok
     rep.requeued = pool.requeued
+    rep.cache_hit_rate = topo.cache_stats.hit_rate()
+    rep.prefix_evictions = topo.cache_stats.evictions
     if tenants is not None:
         # the multi-tenant headline judges every request against its OWN
         # tenant SLO (identical to the scalar number for one tenant, whose

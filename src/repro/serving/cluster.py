@@ -49,6 +49,11 @@ class ClusterConfig:
     max_workers: int = 8
     gamma: float = 0.5
     theta: float = 0.9
+    # session-tagged requests: "sticky" prefers the worker that served the
+    # session's previous turn (its KV pages may still hold the shared
+    # prefix) whenever that worker passes every placement constraint;
+    # "blind" routes every turn like a fresh request
+    router: str = "blind"              # blind | sticky
 
 
 class ClusterWorker:
@@ -85,6 +90,7 @@ class ServingCluster:
         self.queued: List[Request] = []
         self.finished: List[Request] = []
         self.failed_events: List[int] = []
+        self.session_home: Dict[int, int] = {}   # session -> last worker
         kv_cap = (engine_cfg.n_pages - 1) * engine_cfg.page_size \
             * arch.kv_bytes_per_token(dtype_bytes=4) / 2
         self.pcfg = PlacementConfig(gamma=cfg.gamma, theta=cfg.theta,
@@ -116,10 +122,15 @@ class ServingCluster:
             r.worker = None
             r.l_out = 0
             r.t_decode_spent = 0.0
+            r.cached_len = 0    # the dead worker's KV (and any shared
+                                # session prefix on it) is gone
             if r.tokens is not None:
                 r.tokens = r.tokens[:r.l_in]
             self.queued.append(r)
             requeued += 1
+        # sessions homed on the dead worker re-route like fresh requests
+        self.session_home = {s: h for s, h in self.session_home.items()
+                             if h != wid}
         self.failed_events.append(wid)
         if len(self.workers) < self.cfg.min_workers:
             self._spawn_worker()
@@ -145,14 +156,30 @@ class ServingCluster:
         req.l_pred = self.predictor.predict(req.l_in)
         self.queued.append(req)
 
+    def _try_home(self, r: Request):
+        """Sticky session affinity: the home worker takes the turn only if
+        it passes every placement constraint; otherwise fall through to
+        the configured policy (never place on an infeasible home)."""
+        home = self.workers.get(self.session_home.get(r.session_id))
+        if home is None or not home.state.alive or home.state.draining:
+            return None
+        if home.state.feasible([r]):
+            home.state.place(r)
+            return home.state
+        return None
+
     def _place_all(self) -> None:
         still = []
         states = [w.state for w in self.workers.values()]
         for r in self.queued:
-            if self.cfg.policy == "aladdin":
-                st = best_fit_place(states, r, allow_new=False)
-            else:
-                st = jsq_place(states, r, allow_new=False)
+            st = self._try_home(r) \
+                if self.cfg.router == "sticky" and r.session_id >= 0 \
+                else None
+            if st is None:
+                if self.cfg.policy == "aladdin":
+                    st = best_fit_place(states, r, allow_new=False)
+                else:
+                    st = jsq_place(states, r, allow_new=False)
             if st is None and self.cfg.autoscale \
                     and len(self.workers) < self.cfg.max_workers:
                 w = self._spawn_worker()
@@ -162,6 +189,8 @@ class ServingCluster:
                 still.append(r)
             else:
                 r.state = ReqState.PLACED
+                if self.cfg.router == "sticky" and r.session_id >= 0:
+                    self.session_home[r.session_id] = st.id
         self.queued = still
 
     def heartbeat(self) -> List[Request]:

@@ -76,6 +76,15 @@ def check_colocated_envelope(scenario) -> List:
                          "(decode-pool-only) simulation")
     if topo.policy not in ("aladdin", "jsq", "po2"):
         raise ValueError(f"unknown placement policy {topo.policy!r}")
+    if topo.router != "blind":
+        raise ValueError("session-affinity routing is reference-engine "
+                         f"only (router={topo.router!r}; rerun with "
+                         "engine='reference')")
+    if topo.prefix_cache not in ("lru", "off"):
+        raise ValueError(f"unknown prefix_cache mode {topo.prefix_cache!r}")
+    if topo.cache_tokens is not None:
+        raise ValueError("per-worker prefix-cache budgets (cache_tokens="
+                         f"{topo.cache_tokens!r}) are reference-engine only")
     managed = not isinstance(scenario.scaling, api.FixedScale)
     if managed and not isinstance(
             scenario.scaling, (api.Reactive, api.Forecast, api.FeedbackScale,
@@ -164,6 +173,21 @@ def check_colocated_envelope(scenario) -> List:
     if scenario.engine not in ("reference", "vectorized", "jax"):
         raise ValueError(f"unknown engine {scenario.engine!r}")
     return specs
+
+
+def check_trace_session_free(trace) -> None:
+    """Reject session-tagged traces on the compiled engines.
+
+    The compiled cores price every prefill at full context: a multi-turn
+    trace from ``session_trace`` would silently lose its prefix-cache
+    discount (and its sticky-routing semantics), so fail loudly instead."""
+    for r in trace:
+        if r.session_id >= 0:
+            raise ValueError(
+                "session-tagged traces (multi-turn workloads from "
+                "session_trace) are reference-engine only — rerun with "
+                f"engine='reference' (request {r.id} carries "
+                f"session_id={r.session_id})")
 
 
 def _managed_scfg(scenario):
@@ -1018,6 +1042,7 @@ def run_colocated_vectorized(scenario, seed: Optional[int] = None,
     s = seed if seed is not None else scenario.seed
     edf = scenario.tenants is not None and len(scenario.tenants) > 1
     trace = scenario.materialize()
+    check_trace_session_free(trace)
     market = scenario.market
     notice = market.notice_s if market is not None else 0.0
     events = sorted(market.events, key=lambda e: e.t) \

@@ -79,7 +79,8 @@ from jax import lax
 from jax.experimental import enable_x64
 
 from repro.core.request import ReqState
-from repro.serving.fastsim import DEFAULT_TAIL, check_colocated_envelope
+from repro.serving.fastsim import (DEFAULT_TAIL, check_colocated_envelope,
+                                   check_trace_session_free)
 
 _BIG_I = 1 << 50
 
@@ -1093,6 +1094,7 @@ class _PooledSim:
         s = seed if seed is not None else scenario.seed
         self.rng = np.random.default_rng(s)
         trace = scenario.materialize()
+        check_trace_session_free(trace)
         self.trace, self.arrival, self.l_in, self.l_real = \
             _trace_arrays(trace)
         self.n = len(self.trace)
@@ -1622,6 +1624,7 @@ def run_colocated_jax(scenario, seed: Optional[int] = None):
     scenario = api.resolve_scenario(scenario)
     specs = check_jax_envelope(scenario)
     trace = scenario.materialize()
+    check_trace_session_free(trace)
     ordered, arrival, l_in, l_real = _trace_arrays(trace)
     multi = scenario.tenants is not None and len(scenario.tenants) > 1
     if len(ordered) == 0:
@@ -1706,6 +1709,7 @@ def run_candidate_batch(scenarios) -> List:
                              "candidates of one worker spec")
     W_max = max(len(sl) for sl in spec_lists)
     trace = base.materialize()
+    check_trace_session_free(trace)
     _ordered, arrival, l_in, l_real = _trace_arrays(trace)
     multi = base.tenants is not None and len(base.tenants) > 1
     rank_r, ttft_r, atgt_r, tagged = _tenant_arrays(_ordered)

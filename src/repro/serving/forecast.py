@@ -425,6 +425,14 @@ class ManagedPool:
     # ---- WorkerLifecycle adapters -------------------------------------------
     def _remove(self, w) -> None:
         (self.online if w in self.online else self.draining).remove(w)
+        # flush the worker's execution-model state: a voluntarily drained
+        # retirement never goes through on_kill (nothing to extract), so
+        # without this pop the sims entry — and any prefix cache it holds —
+        # would outlive the worker and leak stale session prefixes into
+        # ``drained()`` checks and the cache ledger
+        sim = self.sims.pop(w.id, None)
+        if sim is not None and getattr(sim, "cache", None) is not None:
+            sim.cache.vaporize()
 
     def _condemn(self, w) -> None:
         # the provider is taking it back: drain immediately (no admissions)

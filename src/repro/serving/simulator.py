@@ -89,6 +89,106 @@ class SimConfig:
     theta: float = 0.9
     max_batch: int = 128
     seed: int = 0
+    # multi-turn sessions: how session-tagged requests are routed (sticky =
+    # prefer the session's previous worker while feasible) and whether
+    # workers keep an LRU prefix cache over finished session contexts
+    # (cache_tokens caps its footprint; None = spare-KV pressure only).
+    # Single-shot traces are arithmetically untouched by either knob.
+    router: str = "blind"            # blind | sticky
+    prefix_cache: str = "lru"        # lru | off
+    cache_tokens: Optional[int] = None
+
+
+class CacheStats:
+    """Shared prefix-cache tally. One instance per topology: per-worker
+    caches die with their workers (reclaims, drain retirement), so the
+    hit/miss/eviction counts the run report surfaces must outlive them."""
+
+    __slots__ = ("hits", "misses", "hit_tokens", "evictions")
+
+    def __init__(self):
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0          # total prefill tokens skipped
+        self.evictions = 0           # entries dropped (pressure + vaporize)
+
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class PrefixCache:
+    """Per-worker LRU over finished session prefixes (insertion-ordered
+    dict; re-store moves an entry to the back, grant consumes it).
+
+    The cache is a best-effort *renter* of the worker's spare KV: resident
+    prefixes occupy ``kv.h`` bytes per token, but they never block
+    placement, admission or live decode — the placement constraints and the
+    KV-overflow preemption see live KV only, and live growth sheds cache
+    entries LRU-first instead (``shed`` runs at every beat boundary, so
+    ``h * resident <= capacity - live KV`` holds whenever an observer
+    looks). A cache hit prices the next turn's prefill at
+    ``context - cached_len``; a miss or eviction repays the full
+    re-prefill."""
+
+    def __init__(self, stats: CacheStats, cap_tokens: Optional[int] = None):
+        self.stats = stats
+        self.cap = cap_tokens
+        self.entries: Dict[int, int] = {}   # session_id -> cached tokens
+        self.resident = 0                   # Σ entries, tokens
+
+    def peek(self, sid: int, prefix_len: int) -> int:
+        """The reuse a grant would return, without consuming the entry
+        (sticky routing checks home-worker feasibility with the discount
+        the hit would buy, before committing the placement)."""
+        ent = self.entries.get(sid)
+        if ent is None or prefix_len <= 0:
+            return 0
+        return min(ent, prefix_len)
+
+    def grant(self, sid: int, prefix_len: int) -> int:
+        """Consume the session's entry at placement: the cached blocks
+        convert into the request's live KV (full context is charged to the
+        worker on admit, so the entry must leave the cache ledger)."""
+        if prefix_len <= 0:
+            return 0
+        ent = self.entries.pop(sid, None)
+        if ent is None:
+            self.stats.misses += 1
+            return 0
+        self.resident -= ent
+        got = min(ent, prefix_len)
+        self.stats.hits += 1
+        self.stats.hit_tokens += got
+        return got
+
+    def store(self, sid: int, tokens: int) -> None:
+        old = self.entries.pop(sid, None)
+        if old is not None:
+            self.resident -= old
+        self.entries[sid] = int(tokens)
+        self.resident += int(tokens)
+        if self.cap is not None:
+            self.shed(self.cap)
+
+    def shed(self, max_tokens: float) -> int:
+        """Evict LRU-first until ``resident <= max_tokens``."""
+        n = 0
+        while self.entries and self.resident > max_tokens:
+            sid = next(iter(self.entries))
+            self.resident -= self.entries.pop(sid)
+            n += 1
+        self.stats.evictions += n
+        return n
+
+    def vaporize(self) -> int:
+        """The worker died (spot reclaim) or retired (drain): every cached
+        prefix is gone; returning turns repay their full prefill."""
+        n = len(self.entries)
+        self.entries.clear()
+        self.resident = 0
+        self.stats.evictions += n
+        return n
 
 
 class SimWorker:
@@ -110,6 +210,8 @@ class SimWorker:
         self.preempted: List[Request] = []   # KV-overflow victims (vLLM
         self.preemptions = 0                 # recompute-preemption semantics)
         self._ctx = 0                        # Σ context over state.ongoing
+        self.cache: Optional[PrefixCache] = None   # session prefix cache
+                                             # (installed by the topology)
 
     def _kv_now(self) -> float:
         kv = self.perf.kv
@@ -141,7 +243,13 @@ class SimWorker:
             # not l_in — which is the recovery cost the spot mix planner must
             # out-save; for fresh requests context == l_in.
             if (w.new_batch or resume) and not self.split_phase:
-                total_in = sum(r.context for r in w.new_batch) \
+                # a prefix-cache hit (cached_len > 0, granted at placement)
+                # prices the prefill at the *new* tokens only; resumed
+                # KV-overflow victims recompute in full (their cached_len
+                # was consumed by their first prefill). Single-shot and
+                # cache-off traces carry cached_len == 0: the integer sums
+                # below are then bit-for-bit the undiscounted legacy image.
+                total_in = sum(r.context - r.cached_len for r in w.new_batch) \
                     + sum(r.context for r in resume)
                 dur = float(self.perf.prefill(total_in))
                 self.t += dur
@@ -164,6 +272,7 @@ class SimWorker:
                     r.t_preempted = None
                     r.state = ReqState.DECODING
                     self._admit(r)
+                    r.cached_len = 0     # grant consumed by this prefill
                 for r in resume:
                     r.state = ReqState.DECODING
                     self._admit(r)
@@ -235,9 +344,20 @@ class SimWorker:
                     w.ongoing.remove(r)
                     self._ctx -= r.context
                     finished.append(r)
+                    if self.cache is not None and r.session_id >= 0:
+                        # the finished turn's KV becomes the session's
+                        # cacheable prefix for its next turn
+                        self.cache.store(r.session_id, r.context)
             # preempted requests' ATGT clocks also advance (they are stalled)
             for r in self.preempted:
                 r.t_decode_spent += seg
+        if self.cache is not None:
+            # beat-boundary pressure: cached prefixes only rent KV the live
+            # batch is not using (h > 0 on any real spec; a degenerate h = 0
+            # KV model prices blocks at zero, so nothing needs shedding)
+            h = self.perf.kv.h
+            if h > 0:
+                self.cache.shed((M - self._kv_now()) / h)
         # this call mutated w.ongoing in ways the length-keyed aggregate
         # cache cannot see (a finish + a resume can swap membership at equal
         # length) — force one recompute before the next placement pass
@@ -302,6 +422,8 @@ class FixedPool:
     def _extract(self, w: WorkerState) -> List[Request]:
         sim = self.sims.get(w.id)
         lost = w.ongoing + w.new_batch + (sim.preempted if sim else [])
+        for r in lost:
+            r.cached_len = 0    # the granted blocks die with the worker
         w.ongoing.clear()
         w.new_batch.clear()
         w.mark_dirty()
@@ -315,7 +437,9 @@ class FixedPool:
     def _remove(self, w: WorkerState) -> None:
         self.workers.remove(w)
         self.retired_cost += w.spec.n_accelerators
-        self.sims.pop(w.id, None)
+        sim = self.sims.pop(w.id, None)
+        if sim is not None and sim.cache is not None:
+            sim.cache.vaporize()    # cached prefixes die with the worker
 
     @property
     def killed(self) -> int:
@@ -391,6 +515,21 @@ class ColocatedTopology:
         self.restricted = False
         self.lora_swaps = 0
         self._lora: Dict[int, List[str]] = {}   # wid -> resident adapters
+        # multi-turn sessions: the sticky session -> home-worker affinity
+        # map and the shared cache tally (per-worker PrefixCaches are
+        # installed lazily on each SimWorker; they die with their worker,
+        # the tally must not). split_phase fleets never prefill, so a
+        # prefill cache is meaningless there.
+        if cfg.router not in ("blind", "sticky"):
+            raise ValueError(f"unknown session router {cfg.router!r} "
+                             "(expected 'blind' or 'sticky')")
+        if cfg.prefix_cache not in ("lru", "off"):
+            raise ValueError(f"unknown prefix_cache {cfg.prefix_cache!r} "
+                             "(expected 'lru' or 'off')")
+        self.cache_stats = CacheStats()
+        self.session_home: Dict[int, int] = {}
+        self._sticky = cfg.router == "sticky"
+        self._caching = cfg.prefix_cache != "off" and not cfg.split_phase
 
     def admit(self, r: Request) -> None:
         r.l_pred = self.predictor.predict(r.l_in) if self.predictor \
@@ -399,6 +538,8 @@ class ColocatedTopology:
         self.pool.note_arrival()
 
     def requeue(self, reqs: List[Request], side: str = "serve") -> None:
+        for r in reqs:
+            r.cached_len = 0    # any granted prefix reuse is void off-worker
         self.queued.extend(reqs)
 
     def backlog_len(self, side: str = "serve") -> int:
@@ -456,6 +597,37 @@ class ColocatedTopology:
             for m in w.ongoing:
                 m.t_decode_spent += spec.lora_swap_s
 
+    def _cache(self, sim: SimWorker) -> Optional[PrefixCache]:
+        if not self._caching:
+            return None
+        if sim.cache is None:
+            sim.cache = PrefixCache(self.cache_stats,
+                                    cap_tokens=self.cfg.cache_tokens)
+        return sim.cache
+
+    def _try_home(self, r: Request) -> Optional[WorkerState]:
+        """Sticky routing: place the turn on its session's home worker —
+        but only if the home is alive, not draining, eligible and passes
+        every placement constraint *with the prefill discount its cache
+        hit would buy*. An infeasible (or dead) home falls through to the
+        configured placement policy like any other request."""
+        wid = self.session_home.get(r.session_id)
+        if wid is None:
+            return None
+        w = next((x for x in self.pool.serving() if x.id == wid), None)
+        if w is None or not w.alive or w.draining:
+            return None
+        if self.restricted and not self._eligible(w, r):
+            return None
+        sim = self.pool.sims.get(wid)
+        if sim is not None and sim.cache is not None:
+            r.cached_len = sim.cache.peek(r.session_id, r.prefix_len)
+        if w.feasible([r]):
+            w.place(r)
+            return w
+        r.cached_len = 0        # discount only applies on the home worker
+        return None
+
     def _place_one(self, r: Request) -> Optional[WorkerState]:
         workers = self.pool.serving()
         fac = self.pool.factory
@@ -494,7 +666,10 @@ class ColocatedTopology:
             self.queued.sort(key=lambda r: (-r.priority, r.deadline))
         still: List[Request] = []
         for r in self.queued:
-            w = self._place_one(r)
+            w = self._try_home(r) if self._sticky and r.session_id >= 0 \
+                else None
+            if w is None:
+                w = self._place_one(r)
             if w is None:
                 still.append(r)
             else:
@@ -502,6 +677,15 @@ class ColocatedTopology:
                 if w.id not in pool.sims:
                     pool.sims[w.id] = SimWorker(w, w.perf, t,
                                                 self.cfg.split_phase)
+                if r.session_id >= 0:
+                    cache = self._cache(pool.sims[w.id])
+                    # consume the session's entry on the chosen worker —
+                    # a blind-router placement that happens to land on the
+                    # cached worker gets the same discount sticky would
+                    r.cached_len = cache.grant(r.session_id, r.prefix_len) \
+                        if cache is not None else 0
+                    if self._sticky:
+                        self.session_home[r.session_id] = w.id
                 if self.restricted:
                     self._lora_admit(w, r, t)
         self.queued = still

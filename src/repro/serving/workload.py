@@ -59,7 +59,8 @@ def clone_trace(trace) -> List[Request]:
     return [Request(l_in=r.l_in, l_pred=0, l_real=r.l_real,
                     arrival=r.arrival, tenant=r.tenant,
                     priority=r.priority, slo_ttft=r.slo_ttft,
-                    slo_atgt=r.slo_atgt) for r in trace]
+                    slo_atgt=r.slo_atgt, session_id=r.session_id,
+                    turn=r.turn, prefix_len=r.prefix_len) for r in trace]
 
 
 def mixture_trace(tenant_traces) -> List[Request]:
@@ -208,6 +209,113 @@ def drifting_diurnal_trace(cfg: WorkloadConfig, amplitude: float = 0.5,
     a = min(max(amplitude, 0.0), 1.0)
     rate_fn = drifting_diurnal_rate_fn(cfg, amplitude, period, drift, phase)
     return nonhomogeneous_trace(cfg, rate_fn, cfg.mean_rate * (1.0 + a))
+
+
+# ---- multi-turn sessions -----------------------------------------------------
+
+@dataclasses.dataclass
+class SessionSpec:
+    """Multi-turn chat workload: sessions arrive Poisson at ``mean_rate``;
+    each runs a geometric number of turns (mean ``mean_turns``, capped at
+    ``max_turns``). Turn 0 draws a fresh lognormal prompt; every later turn
+    re-submits the previous turn's full context (prompt + reply — the
+    cacheable prefix, tagged on the request as ``prefix_len``) plus a
+    lognormal ``growth`` of new user tokens. Turn k+1 arrives at
+    ``arrival_k + service_proxy * (l_in_k + l_out_k) + think_k`` — a
+    finish-independent causal bound (the proxy stands in for service time,
+    so a turn can arrive while its predecessor is still queued on a slow
+    cluster, but never before the user could plausibly have read the
+    previous reply). Deterministic per ``seed``."""
+    mean_rate: float = 0.5              # session starts / second (Poisson)
+    duration: float = 60.0              # session-start horizon, seconds
+    mean_turns: float = 4.0             # geometric mean turn count (>= 1)
+    max_turns: int = 12
+    in_mu: float = 4.2                  # ln-space first-turn prompt
+    in_sigma: float = 1.0
+    growth_mu: float = 3.4              # ln-space per-turn new user tokens
+    growth_sigma: float = 0.8
+    out_mu: float = 5.1                 # ln-space per-turn reply length
+    out_sigma: float = 0.9
+    think_mu: float = 1.8               # ln-space think time, seconds
+    think_sigma: float = 0.8
+    service_proxy: float = 0.02         # causal-bound proxy, seconds/token
+    max_context: int = 4096
+    seed: int = 0
+
+
+def check_session_envelope(spec: SessionSpec) -> SessionSpec:
+    """Validate every ``SessionSpec`` knob (the generator's envelope fence;
+    simlint SIM006 requires each field to be validator-inspected)."""
+    if not spec.mean_rate > 0:
+        raise ValueError(f"mean_rate must be > 0 (got {spec.mean_rate})")
+    if not spec.duration > 0:
+        raise ValueError(f"duration must be > 0 (got {spec.duration})")
+    if not spec.mean_turns >= 1.0:
+        raise ValueError(f"mean_turns must be >= 1 (got {spec.mean_turns})")
+    if int(spec.max_turns) < 1:
+        raise ValueError(f"max_turns must be >= 1 (got {spec.max_turns})")
+    dists = {"in_mu": spec.in_mu, "in_sigma": spec.in_sigma,
+             "growth_mu": spec.growth_mu, "growth_sigma": spec.growth_sigma,
+             "out_mu": spec.out_mu, "out_sigma": spec.out_sigma,
+             "think_mu": spec.think_mu, "think_sigma": spec.think_sigma}
+    for name, v in dists.items():
+        if not np.isfinite(v):
+            raise ValueError(f"{name} must be finite (got {v})")
+        if name.endswith("sigma") and v < 0:
+            raise ValueError(f"{name} must be >= 0 (got {v})")
+    if not spec.service_proxy >= 0:
+        raise ValueError("service_proxy must be >= 0 "
+                         f"(got {spec.service_proxy})")
+    if int(spec.max_context) < 8:
+        raise ValueError(f"max_context must be >= 8 (got {spec.max_context})")
+    if int(spec.seed) < 0:
+        raise ValueError(f"seed must be >= 0 (got {spec.seed})")
+    return spec
+
+
+def session_trace(spec: SessionSpec) -> List[Request]:
+    """Materialize a :class:`SessionSpec` into an arrival-ordered request
+    list. Per-turn invariants (property-tested): ``prefix_len`` is monotone
+    non-decreasing within a session and equals the previous turn's full
+    context (clipped at the context budget); arrivals within a session are
+    strictly causal under the think-time bound; ``l_in >= prefix_len`` and
+    ``l_in + l_real <= max_context``."""
+    check_session_envelope(spec)
+    rng = np.random.default_rng(spec.seed)
+    cap_in = spec.max_context // 2      # same per-side budget sample_lengths
+    cap_out = spec.max_context // 2     # enforces for single-shot traces
+    reqs: List[Request] = []
+    sid = 0
+    t0 = float(rng.exponential(1.0 / spec.mean_rate))
+    while t0 < spec.duration:
+        n_turns = min(int(rng.geometric(1.0 / spec.mean_turns)),
+                      int(spec.max_turns))
+        t = t0
+        prefix = 0
+        l_in = int(np.clip(int(np.exp(spec.in_mu + spec.in_sigma
+                                      * rng.standard_normal())), 4, cap_in))
+        for k in range(n_turns):
+            l_out = int(np.clip(int(np.exp(spec.out_mu + spec.out_sigma
+                                           * rng.standard_normal())),
+                                4, cap_out))
+            reqs.append(Request(l_in=l_in, l_pred=0, l_real=l_out,
+                                arrival=float(t), session_id=sid, turn=k,
+                                prefix_len=prefix))
+            think = float(np.exp(spec.think_mu + spec.think_sigma
+                                 * rng.standard_normal()))
+            t = t + spec.service_proxy * (l_in + l_out) + think
+            # next turn re-submits the whole conversation so far plus new
+            # user tokens; the clip keeps l_in within the context budget
+            # (prefix stays monotone: min is over a non-decreasing pair)
+            prefix = min(l_in + l_out, cap_in)
+            growth = int(np.clip(int(np.exp(
+                spec.growth_mu + spec.growth_sigma
+                * rng.standard_normal())), 1, cap_in))
+            l_in = min(prefix + growth, cap_in)
+        sid += 1
+        t0 += float(rng.exponential(1.0 / spec.mean_rate))
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs
 
 
 # ---- spot-market preemption events -------------------------------------------

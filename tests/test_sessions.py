@@ -1,0 +1,278 @@
+"""Multi-turn sessions with prefix-cache-aware routing (ISSUE 10).
+
+The session subsystem must be a strict *extension* of the single-shot
+simulator: a degenerate session workload (one turn, no prefix) and a
+cache-disabled run must reproduce the independent-request path
+**bit-for-bit** — same per-request clocks, same token counts — which is
+what keeps every earlier pinned result meaningful. On top of that oracle
+pin, the sticky router must never place a turn on an infeasible home
+worker (constraint (c) pressure falls through to the placement policy),
+attainment must be monotone in prefix-cache capacity, the ManagedPool
+drain path must flush per-worker cache state, and the compiled cores must
+reject what they cannot price."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import A100_80G, PAPER_SLOS, make_worker_spec
+from repro.core.request import Request
+from repro.core.worker_config import spot_variant
+from repro.serving import (Colocated, FixedScale, FleetSpec, PoolSpec,
+                           PreemptionEvent, Reactive, Scenario, SessionSpec,
+                           SpotMarket, clone_trace, run, session_trace)
+
+ARCH = get_arch("llama2-70b")
+SLO = PAPER_SLOS["llama2-70b"]
+SESS = SessionSpec(mean_rate=0.8, duration=120.0, seed=3)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return make_worker_spec(ARCH, A100_80G, SLO, mean_context=450.0)
+
+
+def _strip(trace):
+    """The same arrivals/lengths with the session tags removed: the
+    single-shot comparator every session run is pinned against."""
+    out = clone_trace(trace)
+    for r in out:
+        r.session_id, r.turn, r.prefix_len = -1, 0, 0
+    return out
+
+
+def _clocks(trace):
+    return [(r.t_first_token, r.t_finish, r.l_out, r.t_decode_spent)
+            for r in trace]
+
+
+def _scenario(trace, spec, n=4, **topo):
+    return Scenario(workload=trace, fleet=FleetSpec([PoolSpec(spec, n)]),
+                    slo=SLO, topology=Colocated(**topo),
+                    scaling=FixedScale())
+
+
+# ---- oracle pins: sessions degenerate to the single-shot path --------------
+
+def test_single_turn_sessions_match_single_shot_bit_for_bit(spec):
+    """max_turns=1 sessions carry no reusable prefix: the full session
+    machinery (sticky router, LRU cache, store/shed) must be arithmetically
+    invisible — per-request clocks identical to the untagged trace."""
+    sess = dataclasses.replace(SESS, max_turns=1)
+    trace = session_trace(sess)
+    assert trace and all(r.turn == 0 and r.prefix_len == 0 for r in trace)
+    tagged, plain = clone_trace(trace), _strip(trace)
+    rep_s = run(_scenario(tagged, spec, router="sticky"))
+    rep_p = run(_scenario(plain, spec))
+    assert _clocks(tagged) == _clocks(plain)
+    assert rep_s.attainment == rep_p.attainment
+    assert rep_s.p99_ttft == rep_p.p99_ttft
+    # no prefix ever granted: zero-length turns count neither hit nor miss
+    assert rep_s.cache_hit_rate == 0.0
+
+
+def test_cache_off_blind_equals_single_shot_bit_for_bit(spec):
+    """prefix_cache='off' + the blind router IS single-shot semantics,
+    even on a real multi-turn trace: tags ride along, clocks do not move."""
+    trace = session_trace(SESS)
+    assert any(r.prefix_len > 0 for r in trace)
+    tagged, plain = clone_trace(trace), _strip(trace)
+    rep_t = run(_scenario(tagged, spec, prefix_cache="off"))
+    rep_p = run(_scenario(plain, spec))
+    assert _clocks(tagged) == _clocks(plain)
+    assert rep_t.cache_hit_rate == 0.0
+    assert rep_t.prefix_evictions == 0
+
+
+def test_cache_discount_moves_the_clocks(spec):
+    """The inverse control for the pins above: with the cache ON, a
+    multi-turn trace must NOT match the stripped run (hits discount
+    prefill), and sticky must out-hit blind on this trace."""
+    trace = session_trace(SESS)
+    tagged, plain = clone_trace(trace), _strip(trace)
+    rep_b = run(_scenario(tagged, spec))                     # blind + lru
+    run(_scenario(plain, spec))
+    assert _clocks(tagged) != _clocks(plain)
+    sticky = clone_trace(trace)
+    rep_s = run(_scenario(sticky, spec, router="sticky"))
+    assert rep_s.cache_hit_rate > rep_b.cache_hit_rate > 0.0
+
+
+# ---- sticky fall-through under constraint-(c) pressure ---------------------
+
+def _topology(spec, cfg):
+    from repro.serving.simulator import (ColocatedTopology, FixedPool,
+                                         make_worker_state)
+    workers = [make_worker_state(i + 1, spec, cfg, SLO) for i in range(2)]
+    pool = FixedPool(workers, {}, np.random.default_rng(0))
+    return ColocatedTopology(SLO, cfg, pool, np.random.default_rng(0))
+
+
+def test_sticky_falls_through_when_home_infeasible(spec):
+    from repro.serving.simulator import SimConfig
+    topo = _topology(spec, SimConfig(router="sticky"))
+    home, other = topo.pool.serving()
+    r = Request(l_in=400, l_pred=64, l_real=64, arrival=0.0,
+                session_id=7, turn=1, prefix_len=200)
+    topo.session_home[7] = home.id
+    # feasible home takes its session's turn
+    assert topo._try_home(r) is home
+    home.unplace(r)
+    # pile prompt tokens onto the home until constraint (c) rejects r
+    for _ in range(512):
+        if not home.feasible([r]):
+            break
+        home.place(Request(l_in=1800, l_pred=64, l_real=64, arrival=0.0))
+    assert not home.feasible([r])
+    assert topo._try_home(r) is None
+    assert r.cached_len == 0            # no stale discount off-home
+    # the full placement pass routes the turn to the feasible worker
+    # (manual home.place() calls above bypassed sim creation — install
+    # execution models for both workers so the beat can advance)
+    from repro.serving.simulator import SimWorker
+    for w in topo.pool.serving():
+        topo.pool.sims[w.id] = SimWorker(w, w.perf, 0.0, False)
+    topo.admit(r)
+    topo.step(0.0, 0.02, 1)
+    assert r.worker == other.id
+    # ... and sticky re-homes the session where the turn actually landed
+    assert topo.session_home[7] == other.id
+
+
+def test_sticky_skips_dead_and_draining_homes(spec):
+    from repro.serving.simulator import SimConfig
+    topo = _topology(spec, SimConfig(router="sticky"))
+    home, _ = topo.pool.serving()
+    r = Request(l_in=200, l_pred=32, l_real=32, arrival=0.0,
+                session_id=1, turn=1, prefix_len=100)
+    topo.session_home[1] = home.id
+    home.draining = True
+    assert topo._try_home(r) is None
+    home.draining, home.alive = False, False
+    assert topo._try_home(r) is None
+    topo.session_home[1] = 999          # vanished worker id
+    assert topo._try_home(r) is None
+
+
+# ---- attainment monotone in cache capacity ---------------------------------
+
+def test_attainment_monotone_in_cache_capacity(spec):
+    """Fixed seed, fixed fleet: a bigger prefix cache can only help. The
+    cache_tokens=0 endpoint sheds every entry at store time — semantically
+    cache-off — and the unlimited cache dominates both."""
+    sess = dataclasses.replace(SESS, mean_rate=2.2, duration=90.0, seed=5)
+    trace = session_trace(sess)
+    attain, hits = {}, {}
+    for cap in (0, 2048, None):
+        t = clone_trace(trace)
+        rep = run(_scenario(t, spec, n=3, router="sticky",
+                            cache_tokens=cap))
+        attain[cap], hits[cap] = rep.attainment, rep.cache_hit_rate
+    assert hits[0] == 0.0
+    assert hits[0] < hits[2048] <= hits[None]
+    assert attain[0] <= attain[2048] <= attain[None]
+    assert attain[None] > attain[0]     # the cache buys real attainment
+
+
+# ---- ManagedPool drain/boot interaction with cache state -------------------
+
+def test_managed_pool_remove_flushes_prefix_cache(spec):
+    """A voluntarily drained retirement never passes through on_kill:
+    ManagedPool._remove itself must pop the worker's execution model and
+    vaporize its cached prefixes, or the ledger leaks."""
+    from repro.serving.forecast import ManagedPool, ScaleSimConfig
+    from repro.serving.simulator import (CacheStats, PrefixCache, SimConfig,
+                                         SimWorker, make_worker_state)
+    sims, made = {}, []
+
+    def new_worker(wspec):
+        w = make_worker_state(len(made) + 1, wspec, SimConfig(), SLO)
+        made.append(w)
+        return w
+
+    pool = ManagedPool(spec, ScaleSimConfig(initial_workers=2,
+                                            min_workers=1),
+                       policy=None, heartbeat=0.02,
+                       rng=np.random.default_rng(0), new_worker=new_worker,
+                       on_spawn=lambda w, t: sims.setdefault(
+                           w.id, SimWorker(w, w.perf, t, False)),
+                       on_kill=lambda w: [], load=lambda w: 0.0,
+                       idle=lambda w: True, sims=sims)
+    stats = CacheStats()
+    victim = pool.online[-1]
+    cache = sims[victim.id].cache = PrefixCache(stats)
+    cache.store(42, 500)
+    assert cache.resident == 500
+    pool._remove(victim)
+    assert victim.id not in sims        # execution model flushed
+    assert stats.evictions == 1         # vaporized prefixes are counted
+    assert cache.resident == 0 and not cache.entries
+
+
+def test_reactive_scaling_conserves_sessions_and_counts_evictions(spec):
+    """End to end through api.run: a policy-scaled fleet booting and
+    draining workers under a session workload loses no request, conserves
+    tokens, and surfaces drain-vaporized prefixes in the report."""
+    sess = dataclasses.replace(SESS, mean_rate=2.5, duration=90.0, seed=9)
+    trace = session_trace(sess)
+    sc = Scenario(workload=clone_trace(trace),
+                  fleet=FleetSpec([PoolSpec(spec, 2)]), slo=SLO,
+                  topology=Colocated(router="sticky"),
+                  scaling=Reactive(min_workers=1))
+    rep = run(sc)
+    assert rep.finished == rep.total == len(trace)
+    for r in sc.workload:
+        assert r.t_finish is not None and r.l_out == r.l_real
+    assert rep.cache_hit_rate > 0.0
+    assert rep.prefix_evictions > 0     # scale-downs vaporized live caches
+
+
+# ---- spot reclaims vaporize cached prefixes --------------------------------
+
+def test_reclaim_vaporizes_cache_and_conserves(spec):
+    sess = dataclasses.replace(SESS, mean_rate=1.5, duration=90.0, seed=4)
+    trace = session_trace(sess)
+    sspot = spot_variant(spec, price=0.35, preempt_hazard=1.0 / 300.0)
+    events = [PreemptionEvent(t=30.0, frac=0.5),
+              PreemptionEvent(t=60.0, frac=0.5)]
+    sc = Scenario(workload=clone_trace(trace),
+                  fleet=FleetSpec([PoolSpec(sspot, 4)]), slo=SLO,
+                  topology=Colocated(router="sticky"),
+                  scaling=FixedScale(),
+                  market=SpotMarket(sspot, events))
+    rep = run(sc)
+    assert rep.finished == rep.total == len(trace)
+    for r in sc.workload:
+        assert r.t_finish is not None and r.l_out == r.l_real
+        assert r.t_preempted is None
+    assert rep.preempted_workers > 0
+    assert rep.prefix_evictions > 0     # dead workers' prefixes vaporized
+
+
+# ---- compiled cores reject what they cannot price --------------------------
+
+@pytest.mark.parametrize("topo", [dict(router="sticky"),
+                                  dict(cache_tokens=4096)])
+def test_vectorized_engine_rejects_session_knobs(spec, topo):
+    sc = _scenario([], spec, **topo)
+    sc = dataclasses.replace(sc, engine="vectorized")
+    with pytest.raises(ValueError, match="reference-engine only"):
+        run(sc)
+
+
+@pytest.mark.parametrize("engine", ["vectorized", "jax"])
+def test_compiled_engines_reject_session_traces(spec, engine):
+    if engine == "jax":
+        pytest.importorskip("jax")
+    trace = session_trace(dataclasses.replace(SESS, duration=10.0))
+    sc = dataclasses.replace(_scenario(trace, spec), engine=engine)
+    with pytest.raises(ValueError, match="reference-engine only"):
+        run(sc)
+
+
+def test_unknown_router_and_cache_mode_rejected(spec):
+    with pytest.raises(ValueError, match="router"):
+        run(_scenario([], spec, router="warm"))
+    with pytest.raises(ValueError, match="prefix_cache"):
+        run(_scenario([], spec, prefix_cache="lfu"))

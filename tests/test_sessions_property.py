@@ -1,0 +1,164 @@
+"""Property battery for the multi-turn session subsystem (ISSUE 10).
+
+Hypothesis-fuzzes session shapes (turn counts, growth, think times) and
+cache/market conditions, asserting the generator's documented invariants
+and the simulator's conservation laws:
+
+  * trace shape — within every session, ``prefix_len`` is monotone
+    non-decreasing and bounded by the context budget, arrivals are
+    strictly causal under the think-time bound, and ``l_in``/``l_real``
+    respect their caps;
+  * cache-block conservation — on every heartbeat, every worker's
+    resident cached prefixes rent only the KV its live batch is not
+    using (``h * resident <= capacity - live KV``), whatever the load,
+    the cache cap, or the router;
+  * conservation under cache-vaporizing reclaims — spot events that kill
+    sticky homes mid-session lose no request and no token (the
+    test_chaos_spot invariants, extended to session traces).
+
+Marked ``slow``; hypothesis is a CI-only dependency (requirements-ci.txt)
+and the battery skips where it is not installed."""
+import dataclasses
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.core import A100_80G, PAPER_SLOS, make_worker_spec  # noqa: E402
+from repro.core.worker_config import spot_variant  # noqa: E402
+from repro.serving import (Colocated, FixedScale, FleetSpec,  # noqa: E402
+                           PoolSpec, PreemptionEvent, Scenario, SessionSpec,
+                           SpotMarket, clone_trace, run, session_trace)
+
+ARCH = get_arch("llama2-70b")
+SLO = PAPER_SLOS["llama2-70b"]
+SPEC = make_worker_spec(ARCH, A100_80G, SLO, mean_context=450.0)
+SPOT = spot_variant(SPEC, price=0.35, preempt_hazard=1.0 / 200.0)
+
+spec_st = st.builds(
+    SessionSpec,
+    mean_rate=st.floats(0.5, 2.0, allow_nan=False),
+    duration=st.floats(20.0, 60.0, allow_nan=False),
+    mean_turns=st.floats(1.0, 6.0, allow_nan=False),
+    max_turns=st.integers(1, 10),
+    growth_mu=st.floats(2.0, 4.0, allow_nan=False),
+    think_mu=st.floats(0.5, 2.0, allow_nan=False),
+    service_proxy=st.floats(0.0, 0.05, allow_nan=False),
+    max_context=st.sampled_from([512, 2048, 4096]),
+    seed=st.integers(0, 1000))
+
+events_st = st.lists(
+    st.builds(PreemptionEvent,
+              t=st.floats(5.0, 50.0, allow_nan=False),
+              frac=st.floats(0.2, 1.0, allow_nan=False)),
+    min_size=1, max_size=3).map(lambda evs: sorted(evs, key=lambda e: e.t))
+
+
+def _by_session(trace):
+    sessions = {}
+    for r in trace:
+        sessions.setdefault(r.session_id, []).append(r)
+    for turns in sessions.values():
+        turns.sort(key=lambda r: r.turn)
+    return sessions
+
+
+@pytest.mark.slow
+@given(spec=spec_st)
+@settings(max_examples=30, deadline=None)
+def test_session_trace_shape_invariants(spec):
+    trace = session_trace(spec)
+    cap_in = spec.max_context // 2
+    for turns in _by_session(trace).values():
+        assert [r.turn for r in turns] == list(range(len(turns)))
+        assert len(turns) <= spec.max_turns
+        assert turns[0].prefix_len == 0
+        for prev, cur in zip(turns, turns[1:]):
+            # monotone non-decreasing cacheable prefix, capped
+            assert cur.prefix_len >= prev.prefix_len
+            assert cur.prefix_len == min(prev.l_in + prev.l_real, cap_in)
+            # causal think-times: the next turn cannot arrive before the
+            # service proxy plus a strictly positive think time elapsed
+            assert cur.arrival > prev.arrival + spec.service_proxy \
+                * (prev.l_in + prev.l_real)
+        for r in turns:
+            assert 4 <= r.l_in <= cap_in and r.l_in >= r.prefix_len
+            assert r.l_in + r.l_real <= spec.max_context
+            assert r.cached_len == 0        # granted at placement, never
+    # deterministic per seed                # stamped by the generator
+    again = session_trace(spec)
+    assert [(r.arrival, r.l_in, r.l_real, r.session_id, r.turn,
+             r.prefix_len) for r in trace] == \
+           [(r.arrival, r.l_in, r.l_real, r.session_id, r.turn,
+             r.prefix_len) for r in again]
+
+
+class _CacheLedger:
+    """Per-beat observer: cached prefixes only rent KV the live batch is
+    not using, on every worker, at every heartbeat boundary."""
+
+    def __init__(self):
+        self.beats = 0
+
+    def __call__(self, t, workers, sims, queued, finished, arrived):
+        self.beats += 1
+        for w in workers:
+            sim = sims.get(w.id)
+            if sim is None or sim.cache is None:
+                continue
+            h = sim.perf.kv.h
+            assert sim.cache.resident >= 0
+            assert sim.cache.resident == sum(sim.cache.entries.values())
+            if h > 0:
+                rent = h * sim.cache.resident
+                spare = w.cfg.kv_capacity - sim._kv_now()
+                assert rent <= spare + 1e-9, \
+                    f"t={t}: cache rents {rent} of {spare} spare KV"
+            if sim.cache.cap is not None:
+                assert sim.cache.resident <= sim.cache.cap
+
+
+@pytest.mark.slow
+@given(rate=st.floats(1.0, 3.0, allow_nan=False),
+       cap=st.sampled_from([None, 1024, 8192]),
+       router=st.sampled_from(["sticky", "blind"]),
+       seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_cache_blocks_conserved_every_beat(rate, cap, router, seed):
+    sess = SessionSpec(mean_rate=rate, duration=40.0, seed=seed)
+    ledger = _CacheLedger()
+    sc = Scenario(workload=lambda: session_trace(sess),
+                  fleet=FleetSpec([PoolSpec(SPEC, 2)]), slo=SLO,
+                  topology=Colocated(router=router, cache_tokens=cap),
+                  scaling=FixedScale(), observer=ledger)
+    rep = run(sc)
+    assert ledger.beats > 0
+    assert rep.finished == rep.total
+
+
+@pytest.mark.slow
+@given(events=events_st, router=st.sampled_from(["sticky", "blind"]),
+       seed=st.integers(0, 20))
+@settings(max_examples=12, deadline=None)
+def test_reclaims_conserve_tokens_on_session_traces(events, router, seed):
+    """Whatever the market vaporizes, the session machinery must not leak:
+    every turn finishes with exactly l_real tokens, none dangling."""
+    sess = SessionSpec(mean_rate=1.2, duration=50.0, seed=seed)
+    trace = session_trace(sess)
+    sc = Scenario(workload=clone_trace(trace),
+                  fleet=FleetSpec([PoolSpec(SPEC, 2), PoolSpec(SPOT, 2)]),
+                  slo=SLO, topology=Colocated(router=router),
+                  scaling=FixedScale(), market=SpotMarket(SPOT, events),
+                  seed=seed)
+    rep = run(sc)
+    assert rep.finished == rep.total == len(trace)
+    for r in sc.workload:
+        assert r.t_finish is not None          # no request lost
+        assert r.l_out == r.l_real             # tokens conserved exactly
+        assert r.t_preempted is None           # every stall settled
+    assert sum(r.preempt_count for r in sc.workload) == rep.requeued
+    # the cache tally never goes negative or double-counts
+    assert rep.cache_hit_rate >= 0.0
+    assert rep.prefix_evictions >= 0
